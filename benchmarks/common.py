@@ -1,0 +1,73 @@
+"""Shared benchmark harness: trials, timing, CSV output, claim checks."""
+from __future__ import annotations
+
+import csv
+import math
+import pathlib
+import statistics
+import time
+from typing import Callable, Iterable
+
+import jax
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "repro"
+
+
+def trials(fn: Callable[[jax.Array], dict], n: int = 5, seed: int = 0) -> list[dict]:
+    """Run fn over n seeded trials; fn(key) -> row dict of scalars."""
+    rows = []
+    for t in range(n):
+        rows.append(fn(jax.random.PRNGKey(seed + 1000 * t)))
+    return rows
+
+
+def aggregate(rows: list[dict]) -> dict:
+    """Mean +/- std over numeric fields."""
+    out: dict = {}
+    for k in rows[0]:
+        vals = [r[k] for r in rows]
+        if isinstance(vals[0], (int, float)):
+            finite = [float(v) for v in vals if math.isfinite(v)]
+            out[k] = statistics.fmean(finite) if finite else float("inf")
+            if len(finite) > 1:
+                out[k + "_std"] = statistics.stdev(finite)
+        else:
+            out[k] = vals[0]
+    return out
+
+
+def write_csv(name: str, rows: Iterable[dict]) -> pathlib.Path:
+    rows = list(rows)
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"{name}.csv"
+    fields: list[str] = []
+    for r in rows:
+        fields += [k for k in r if k not in fields]
+    with path.open("w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=fields, restval="")
+        w.writeheader()
+        w.writerows(rows)
+    return path
+
+
+class Claims:
+    """Collects paper-claim validations; printed and persisted at the end."""
+
+    def __init__(self, table: str):
+        self.table = table
+        self.results: list[tuple[str, bool, str]] = []
+
+    def check(self, name: str, ok: bool, detail: str = "") -> None:
+        self.results.append((name, bool(ok), detail))
+        print(f"  claim[{self.table}] {'PASS' if ok else 'FAIL'}: {name} {detail}")
+
+    def rows(self) -> list[dict]:
+        return [{"table": self.table, "claim": n, "pass": p, "detail": d}
+                for n, p, d in self.results]
+
+
+def timed(fn, *args):
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0

@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks: us_per_call of the Pallas paths vs XLA refs.
+
+On this CPU container the Pallas numbers are interpret-mode (Python) and NOT
+performance-representative — the roofline for the TPU target lives in
+EXPERIMENTS.md §Roofline. This bench exists to (a) exercise the kernels
+end-to-end, (b) time the XLA reference paths that the dry-run actually lowers.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[dict]:
+    rows = []
+    k = jax.random.PRNGKey(0)
+    for n, d in ((2048, 128), (4096, 256)):
+        A = jax.random.normal(k, (n, d), jnp.float32)
+        b = jax.random.normal(k, (n,), jnp.float32)
+        ref_jit = jax.jit(ref.gram_moment_ref)
+        us_ref = _time(ref_jit, A, b)
+        rows.append({"name": f"gram_xla_n{n}_d{d}", "us_per_call": us_ref,
+                     "derived": f"{(n*d*d*2 + n*d*2) / us_ref / 1e6:.1f}GFLOPs"})
+    B, S, H, hd = 1, 512, 4, 64
+    q = jax.random.normal(k, (B, S, H, hd), jnp.float32)
+    swa_ref = jax.jit(lambda q: ref.swa_attention_ref(q, q, q, window=128))
+    us = _time(swa_ref, q)
+    rows.append({"name": f"swa_xla_S{S}", "us_per_call": us, "derived": ""})
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    common.write_csv("kernels_bench", rows)
+    return []
+
+
+if __name__ == "__main__":
+    run()

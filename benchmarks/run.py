@@ -1,0 +1,39 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Runs Tables II-VII, Fig 3, the satellite-result extensions, and the kernel
+micro-bench; persists CSVs under experiments/repro/ and prints a final
+claim-validation summary. Exits nonzero if any paper claim fails.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (extensions, fig_3, kernels_bench, table_ii,
+                            table_iii, table_iv, table_v, table_vi, table_vii)
+
+    modules = [
+        ("table_ii", table_ii), ("table_iii", table_iii),
+        ("table_iv", table_iv), ("fig_3", fig_3), ("table_v", table_v),
+        ("table_vi", table_vi), ("table_vii", table_vii),
+        ("extensions", extensions), ("kernels", kernels_bench),
+    ]
+    all_claims = []
+    for name, mod in modules:
+        print(f"=== {name} ===", flush=True)
+        t0 = time.time()
+        all_claims += mod.run()
+        print(f"=== {name} done in {time.time() - t0:.1f}s ===\n", flush=True)
+
+    failed = [c for c in all_claims if not c["pass"]]
+    print(f"CLAIMS: {len(all_claims) - len(failed)}/{len(all_claims)} passed")
+    for c in failed:
+        print(f"  FAILED [{c['table']}] {c['claim']}: {c['detail']}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Paper Table II — main comparison (d=100, K=20, gamma=0.5).
+
+One-Shot vs FedAvg-{100,200,500}, FedProx-200, centralized oracle:
+test MSE, rounds, communication, wall time. Validates:
+  * exact recovery: one-shot MSE == centralized MSE (Thm 2)
+  * one-shot communication < FedAvg-200 (Thm 4 at d=100 < 4R)
+  * one-shot never worse than the iterative baselines
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks import common
+from repro import configs, core, data, fed
+
+RC = configs.RIDGE
+
+
+def _trial(key) -> dict:
+    ds = data.generate(key, num_clients=RC.num_clients,
+                       samples_per_client=RC.samples_per_client,
+                       dim=RC.dim, gamma=RC.gamma)
+    rows = {}
+    one = fed.run_one_shot(ds, RC.sigma)
+    cen = fed.run_centralized(ds, RC.sigma)
+    rows["oneshot_mse"] = float(core.mse(ds.test_A, ds.test_b, one.weights))
+    rows["oneshot_comm_mb"] = one.comm.total_mb
+    rows["oneshot_time_s"] = one.wall_time_s
+    rows["central_mse"] = float(core.mse(ds.test_A, ds.test_b, cen.weights))
+    rows["central_time_s"] = cen.wall_time_s
+    rows["recovery_err"] = float(np.linalg.norm(
+        np.asarray(one.weights) - np.asarray(cen.weights)) /
+        max(np.linalg.norm(np.asarray(cen.weights)), 1e-12))
+    for R in (100, 200, 500):
+        fa = fed.run_iterative(ds, fed.IterativeConfig(
+            rounds=R, lr=RC.fedavg_lr, local_epochs=RC.fedavg_epochs,
+            sigma=RC.sigma))
+        rows[f"fedavg{R}_mse"] = float(core.mse(ds.test_A, ds.test_b, fa.weights))
+        rows[f"fedavg{R}_comm_mb"] = fa.comm.total_mb
+        rows[f"fedavg{R}_time_s"] = fa.wall_time_s
+    fp = fed.run_iterative(ds, fed.IterativeConfig(
+        rounds=200, lr=RC.fedavg_lr, local_epochs=RC.fedavg_epochs,
+        sigma=RC.sigma, prox_mu=RC.fedprox_mu))
+    rows["fedprox200_mse"] = float(core.mse(ds.test_A, ds.test_b, fp.weights))
+    rows["fedprox200_comm_mb"] = fp.comm.total_mb
+    return rows
+
+
+def run() -> list[dict]:
+    rows = common.trials(_trial, n=RC.trials)
+    agg = common.aggregate(rows)
+    common.write_csv("table_ii", rows + [dict(agg, trial="mean")])
+
+    claims = common.Claims("II")
+    claims.check("exact recovery (w_fed == w_central, rel err < 1e-5)",
+                 agg["recovery_err"] < 1e-5, f"rel_err={agg['recovery_err']:.2e}")
+    claims.check("one-shot MSE == oracle MSE",
+                 abs(agg["oneshot_mse"] - agg["central_mse"]) < 1e-6,
+                 f"{agg['oneshot_mse']:.6f} vs {agg['central_mse']:.6f}")
+    claims.check("one-shot comm < FedAvg-200 comm (d=100)",
+                 agg["oneshot_comm_mb"] < agg["fedavg200_comm_mb"],
+                 f"{agg['oneshot_comm_mb']:.2f}MB vs {agg['fedavg200_comm_mb']:.2f}MB")
+    claims.check("one-shot MSE <= FedAvg-500 MSE (+1e-6)",
+                 agg["oneshot_mse"] <= agg["fedavg500_mse"] + 1e-6,
+                 f"{agg['oneshot_mse']:.6f} vs {agg['fedavg500_mse']:.6f}")
+    claims.check("one-shot faster than FedAvg-500",
+                 agg["oneshot_time_s"] < agg["fedavg500_time_s"],
+                 f"{agg['oneshot_time_s']:.3f}s vs {agg['fedavg500_time_s']:.3f}s")
+    common.write_csv("table_ii_claims", claims.rows())
+    print(f"table_ii: one-shot {agg['oneshot_mse']:.4f} | oracle "
+          f"{agg['central_mse']:.4f} | fedavg200 {agg['fedavg200_mse']:.4f}")
+    return claims.rows()
+
+
+if __name__ == "__main__":
+    run()

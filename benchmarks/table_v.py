@@ -1,0 +1,112 @@
+"""Paper Table V / Fig 4 — privacy-utility tradeoff.
+
+Private One-Shot (Algorithm 2) vs DP-FedAvg (per-round budget eps/sqrt(R),
+R=100) across an extended eps grid.
+
+REPRODUCTION DISCREPANCY (documented, EXPERIMENTS.md §Repro note 5): with
+Def-3-calibrated sensitivities the paper's absolute numbers (e.g. MSE 0.070
+at eps = 0.1) are unreachable at K=20, n_k=500, d=100 — the Gram noise
+spectral norm ~ 2 tau sqrt(K d) exceeds lambda_min(G) until eps ~ 5, for the
+paper's own unit-norm convention as well (the SNR is scale-invariant).
+DP-FedAvg under the same accounting is similarly destroyed at eps <= 10.
+What DOES reproduce, and what this bench asserts, are the mechanism-level
+facts: monotone utility in eps, recovery of the non-private solution at
+large eps, the sqrt(K) advantage of secure aggregation (§VI-D.1), one-shot
+beating DP-FedAvg wherever either is usable, and the Thm-7 composition law.
+
+Beyond-paper variants:
+  * oneshot_psd    — PSD-repaired Gram (free post-processing; targets the
+                     paper's Remark-4 instability)
+  * oneshot_secagg — simulated secure aggregation (noise once on the sum)
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro import configs, core, data, fed
+from repro.core import privacy
+from repro.core.sufficient_stats import compute_stats, fuse_stats
+from repro.core import fusion
+
+RC = configs.RIDGE
+MSE_CAP = 1e3  # a diverged (non-finite) private solve counts as this —
+               # the Remark-4 failure mode at very small eps, reported honestly
+
+EPSILONS = (0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0)
+DELTA = 1e-5
+R_DP = 100
+
+
+def _capped(x: float) -> float:
+    import math
+    return float(x) if math.isfinite(x) and x < MSE_CAP else MSE_CAP
+
+
+def run() -> list[dict]:
+    out = []
+    for eps in EPSILONS:
+        def _trial(key, eps=eps):
+            kd, kp, ks = jax.random.split(key, 3)
+            ds = data.generate(kd, num_clients=RC.num_clients,
+                               samples_per_client=RC.samples_per_client,
+                               dim=RC.dim, gamma=RC.gamma)
+            row = {"eps": eps}
+            one = fed.run_one_shot(ds, RC.sigma, dp=(eps, DELTA), dp_key=kp)
+            row["oneshot_dp"] = _capped(core.mse(ds.test_A, ds.test_b, one.weights))
+            rep = fed.run_one_shot(ds, RC.sigma, dp=(eps, DELTA), dp_key=kp,
+                                   psd_repair=True)
+            row["oneshot_psd"] = _capped(core.mse(ds.test_A, ds.test_b, rep.weights))
+            # secure aggregation: clip rows, fuse exactly, one noise draw on sum
+            clip = (1.2 * ds.dim ** 0.5, 4.0)
+            sg, sh = privacy.sensitivities(*clip)
+            stats = [compute_stats(*privacy.clip_rows(A, b, clip_a=clip[0],
+                                                      clip_b=clip[1]))
+                     for A, b in ds.clients]
+            fused = privacy.central_dp_stats(ks, fuse_stats(stats), eps, DELTA,
+                                             ds.num_clients, sensitivity_g=sg,
+                                             sensitivity_h=sh)
+            w_sec = fusion.solve_ridge(fused, RC.sigma)
+            row["oneshot_secagg"] = _capped(core.mse(ds.test_A, ds.test_b, w_sec))
+            fa = fed.run_iterative(ds, fed.IterativeConfig(
+                rounds=R_DP, lr=RC.fedavg_lr, local_epochs=RC.fedavg_epochs,
+                sigma=RC.sigma, dp_eps=eps, dp_delta=DELTA))
+            row["dp_fedavg"] = _capped(core.mse(ds.test_A, ds.test_b, fa.weights))
+            # non-private references
+            row["nonprivate"] = float(core.mse(
+                ds.test_A, ds.test_b, fed.run_one_shot(ds, RC.sigma).weights))
+            return row
+
+        agg = common.aggregate(common.trials(_trial, n=RC.trials))
+        out.append(agg)
+        print(f"table_v eps={eps}: oneshot={agg['oneshot_dp']:.4f} "
+              f"psd={agg['oneshot_psd']:.4f} secagg={agg['oneshot_secagg']:.4f} "
+              f"dp-fedavg={agg['dp_fedavg']:.4f}")
+
+    common.write_csv("table_v", out)
+    by_eps = {r["eps"]: r for r in out}
+    claims = common.Claims("V")
+    claims.check("one-shot never worse than DP-FedAvg at any eps "
+                 "(no composition penalty, Thm 7)",
+                 all(r["oneshot_dp"] <= r["dp_fedavg"] + 1e-6 for r in out))
+    claims.check("utility monotone non-increasing in eps (one-shot)",
+                 all(a["oneshot_dp"] >= b["oneshot_dp"] - 1e-3
+                     for a, b in zip(out, out[1:])))
+    claims.check("one-shot approaches the non-private solution by eps = 100",
+                 by_eps[100.0]["oneshot_dp"] < 3 * by_eps[100.0]["nonprivate"],
+                 f"{by_eps[100.0]['oneshot_dp']:.4f} vs "
+                 f"{by_eps[100.0]['nonprivate']:.4f}")
+    claims.check("secure aggregation dominates per-client noise at every eps "
+                 "(sqrt(K) reduction, §VI-D.1)",
+                 all(r["oneshot_secagg"] <= r["oneshot_dp"] + 1e-6 for r in out))
+    claims.check("psd repair never hurts (free post-processing)",
+                 all(r["oneshot_psd"] <= r["oneshot_dp"] + 1e-6 for r in out))
+    claims.check("advanced composition penalty formula sane (Thm 7)",
+                 privacy.advanced_composition(0.1, DELTA, 100) > 3.0,
+                 f"eps_total={privacy.advanced_composition(0.1, DELTA, 100):.2f}")
+    common.write_csv("table_v_claims", claims.rows())
+    return claims.rows()
+
+
+if __name__ == "__main__":
+    run()

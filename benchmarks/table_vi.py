@@ -1,0 +1,73 @@
+"""Paper Table VI / Fig 5 — scalability with client count K.
+
+K in {10,...,500} with n_k = 200. FedAvg samples 20 clients per round once
+K > 20. REPRODUCTION NOTE (EXPERIMENTS.md §Repro note 7): the paper's
+FedAvg degradation at K >= 200 (MSE 0.0130) does NOT reproduce under
+full-batch local GD — sampled averaging stays unbiased and converges. Their
+degradation is an artifact of local-SGD variance, not of sampling per se.
+What holds, and is asserted here: one-shot is exact for every K in ONE
+round, stable MSE as K grows, and 5-40x faster wall time than 100-round
+FedAvg at every scale.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro import configs, core, data, fed
+
+RC = configs.RIDGE
+KS = (10, 20, 50, 100, 200, 500)
+N_K = 200
+R = 100
+
+
+def run() -> list[dict]:
+    out = []
+    for K in KS:
+        def _trial(key, K=K):
+            ds = data.generate(key, num_clients=K, samples_per_client=N_K,
+                               dim=RC.dim, gamma=RC.gamma)
+            one = fed.run_one_shot(ds, RC.sigma)
+            frac = min(1.0, 20 / K)
+            fa = fed.run_iterative(ds, fed.IterativeConfig(
+                rounds=R, lr=RC.fedavg_lr, local_epochs=RC.fedavg_epochs,
+                sigma=RC.sigma, sample_fraction=frac))
+            return {
+                "K": K,
+                "oneshot_mse": float(core.mse(ds.test_A, ds.test_b, one.weights)),
+                "fedavg_mse": float(core.mse(ds.test_A, ds.test_b, fa.weights)),
+                "oneshot_time_s": one.wall_time_s,
+                "fedavg_time_s": fa.wall_time_s,
+            }
+
+        agg = common.aggregate(common.trials(_trial, n=3))
+        out.append(agg)
+        print(f"table_vi K={K}: oneshot={agg['oneshot_mse']:.4f} "
+              f"fedavg={agg['fedavg_mse']:.4f} "
+              f"t={agg['oneshot_time_s']:.3f}/{agg['fedavg_time_s']:.3f}s")
+
+    common.write_csv("table_vi", out)
+    claims = common.Claims("VI")
+    mse_small = out[0]["oneshot_mse"]
+    claims.check("one-shot MSE stable as K grows (within 25% of K=10)",
+                 all(abs(r["oneshot_mse"] - mse_small) < 0.25 * mse_small
+                     for r in out))
+    claims.check("one-shot within 2% of sampled FedAvg-100 at every K "
+                 "(with 1 round instead of 100)",
+                 all(r["oneshot_mse"] <= 1.02 * r["fedavg_mse"] for r in out))
+    claims.check("one-shot >= 4x faster than FedAvg-100 at every K",
+                 all(r["fedavg_time_s"] > 4 * r["oneshot_time_s"]
+                     for r in out),
+                 "; ".join(f"K={r['K']}:{r['fedavg_time_s']/r['oneshot_time_s']:.0f}x"
+                           for r in out))
+    claims.check("paper's FedAvg degradation at K>=200 does NOT reproduce "
+                 "under full-batch local GD (documented discrepancy)",
+                 all(r["fedavg_mse"] < 1.05 * r["oneshot_mse"]
+                     for r in out if r["K"] >= 200))
+    common.write_csv("table_vi_claims", claims.rows())
+    return claims.rows()
+
+
+if __name__ == "__main__":
+    run()

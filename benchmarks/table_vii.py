@@ -1,0 +1,114 @@
+"""Paper Table VII — random-projection trade-off (d=1000, K=20).
+
+m in {50,...,1000}; m = d is exact One-Shot. Validates Prop 2/3 and probes
+a reproduction discrepancy: under the paper's own isotropic generator a
+Gaussian sketch necessarily loses a (1 - m/d) fraction of the signal
+(E[MSE] ~ noise + (1 - m/d)||w*||^2), so the paper's "+5% at m = 0.4d" is
+impossible there — we validate our measured MSE against that closed form.
+The paper's numbers ARE achievable when the data has low effective rank
+(r <= m): the second sweep (effective_rank=100) reproduces the paper's
+qualitative table. See EXPERIMENTS.md §Repro note 6.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro import configs, core, data, fed
+
+RC = configs.RIDGE
+D = 1000
+MS = (50, 100, 200, 400, 600, 800, 1000)
+R = 200
+
+
+def run() -> list[dict]:
+    rows_all = []
+    for rank in (None, 100):
+        rows_all.append(_sweep(rank))
+    out, out_lr = rows_all
+    return _claims(out, out_lr)
+
+
+def _sweep(rank):
+    out = []
+    for m in MS:
+        def _trial(key, m=m, rank=rank):
+            kd, kp = jax.random.split(key)
+            ds = data.generate(kd, num_clients=RC.num_clients,
+                               samples_per_client=RC.samples_per_client,
+                               dim=D, gamma=RC.gamma, effective_rank=rank)
+            exact = fed.run_one_shot(ds, RC.sigma)
+            if m == D:
+                res, w = exact, exact.weights
+            else:
+                res = fed.run_one_shot_projected(ds, RC.sigma, m, key=kp)
+                w = res.weights
+            w_err = float(np.linalg.norm(np.asarray(w) - np.asarray(exact.weights)) /
+                          max(np.linalg.norm(np.asarray(exact.weights)), 1e-12))
+            fa_comm = fed.fedavg_comm(D, RC.num_clients, R)
+            return {
+                "m": m,
+                "mse": float(core.mse(ds.test_A, ds.test_b, w)),
+                "exact_mse": float(core.mse(ds.test_A, ds.test_b, exact.weights)),
+                "w_rel_err": w_err,
+                "comm_mb": res.comm.total_mb,
+                "vs_fedavg": fa_comm.total_mb / res.comm.total_mb,
+                "vs_exact": exact.comm.total_mb / res.comm.total_mb,
+                "jl_bound": math.sqrt(D / m),
+            }
+
+        agg = common.aggregate(common.trials(_trial, n=3))
+        agg["rank"] = rank or D
+        agg["delta_mse_pct"] = 100 * (agg["mse"] - agg["exact_mse"]) / agg["exact_mse"]
+        # isotropic closed form: MSE ~ exact + (1 - m/d) * ||w*||^2 (unit)
+        agg["isotropic_prediction"] = agg["exact_mse"] + (1 - agg["m"] / D)
+        out.append(agg)
+        print(f"table_vii rank={rank} m={m}: mse={agg['mse']:.4f} "
+              f"(+{agg['delta_mse_pct']:.0f}%) comm={agg['comm_mb']:.2f}MB "
+              f"vsFedAvg={agg['vs_fedavg']:.1f}x w_err={agg['w_rel_err']:.3f}")
+    common.write_csv(f"table_vii_rank{rank or D}", out)
+    return out
+
+
+def _claims(out, out_lr):
+    by_m = {r["m"]: r for r in out}
+    by_m_lr = {r["m"]: r for r in out_lr}
+    claims = common.Claims("VII")
+    claims.check("m = d recovers exact solution",
+                 by_m[1000]["w_rel_err"] < 1e-6)
+    claims.check("MSE monotone non-increasing in m (both regimes)",
+                 all(a["mse"] >= b["mse"] - 1e-2 for a, b in zip(out, out[1:]))
+                 and all(a["mse"] >= b["mse"] - 1e-2
+                         for a, b in zip(out_lr, out_lr[1:])))
+    claims.check("isotropic regime matches (1 - m/d) signal-loss closed form "
+                 "(paper's +5% at m=0.4d impossible here)",
+                 all(abs(r["mse"] - r["isotropic_prediction"]) <
+                     0.25 * r["isotropic_prediction"] for r in out[:-2]),
+                 "measured vs predicted: " + ",".join(
+                     f"m={r['m']}:{r['mse']:.2f}/{r['isotropic_prediction']:.2f}"
+                     for r in out[:-2]))
+    claims.check("paper's sweet spot reproduces under low effective rank "
+                 "(r=100): m=400 within 25% of optimal, >= 3x comm saving",
+                 by_m_lr[400]["delta_mse_pct"] < 25 and by_m_lr[400]["vs_exact"] > 3,
+                 f"+{by_m_lr[400]['delta_mse_pct']:.1f}% at "
+                 f"{by_m_lr[400]['vs_exact']:.0f}x")
+    claims.check("w-error follows O(sqrt(d/m)) trend (ratio within 4x across m)",
+                 _trend_ok([r["w_rel_err"] / r["jl_bound"] for r in out[:-1]]),
+                 "normalized errs: " + ",".join(
+                     f"{r['w_rel_err'] / r['jl_bound']:.3f}" for r in out[:-1]))
+    claims.check("projection beats FedAvg-200 comm for m <= 600",
+                 all(by_m[m]["vs_fedavg"] > 1 for m in (50, 100, 200, 400, 600)))
+    common.write_csv("table_vii_claims", claims.rows())
+    return claims.rows()
+
+
+def _trend_ok(normalized: list[float]) -> bool:
+    return max(normalized) / max(min(normalized), 1e-12) < 4.0
+
+
+if __name__ == "__main__":
+    run()

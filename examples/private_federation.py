@@ -1,0 +1,57 @@
+"""Private one-shot federation (paper Algorithm 2) + the paper's own fixes.
+
+Sweeps the privacy budget and shows the three variants:
+  * per-client Gaussian noise (Alg 2 verbatim) — no composition penalty
+  * + PSD repair (beyond-paper, free post-processing)
+  * simulated secure aggregation (noise once on the sum; §VI-D.1)
+and the LOCO-CV sigma selection (Prop 5) on the private statistics.
+
+  PYTHONPATH=src python examples/private_federation.py
+"""
+import jax
+
+from repro import core, data, fed
+from repro.core import fusion, privacy
+from repro.core.sufficient_stats import compute_stats, fuse_stats
+
+SIGMA, DELTA = 0.01, 1e-5
+ds = data.generate(jax.random.PRNGKey(0), num_clients=20,
+                   samples_per_client=500, dim=100, gamma=0.5)
+clean = fed.run_one_shot(ds, SIGMA)
+print(f"non-private MSE: {float(core.mse(ds.test_A, ds.test_b, clean.weights)):.4f}")
+print(f"{'eps':>6} {'alg2':>8} {'alg2+psd':>9} {'secagg':>8}")
+
+clip = (1.2 * ds.dim ** 0.5, 4.0)
+sg, sh = privacy.sensitivities(*clip)
+for eps in (0.5, 1.0, 2.0, 5.0, 10.0):
+    key = jax.random.PRNGKey(int(eps * 100))
+    alg2 = fed.run_one_shot(ds, SIGMA, dp=(eps, DELTA), dp_key=key)
+    psd = fed.run_one_shot(ds, SIGMA, dp=(eps, DELTA), dp_key=key,
+                           psd_repair=True)
+    stats = [compute_stats(*privacy.clip_rows(A, b, clip_a=clip[0],
+                                              clip_b=clip[1]))
+             for A, b in ds.clients]
+    sec = privacy.central_dp_stats(jax.random.fold_in(key, 1),
+                                   fuse_stats(stats), eps, DELTA, 20,
+                                   sensitivity_g=sg, sensitivity_h=sh)
+    w_sec = fusion.solve_ridge(sec, SIGMA)
+
+    def fmt(w):
+        m = float(core.mse(ds.test_A, ds.test_b, w))
+        # a diverged solve is the paper's Remark-4 failure mode; say so
+        return f"{m:8.4f}" if m == m and m < 1e3 else "  failed"
+
+    print(f"{eps:6.1f} {fmt(alg2.weights)} {fmt(psd.weights):>9s} "
+          f"{fmt(w_sec)}")
+
+# Theorem 7: what iterative methods would pay for the same per-round budget
+eps0 = 0.1
+print(f"\nThm 7: {eps0=} over 100 rounds composes to "
+      f"eps_total = {privacy.advanced_composition(eps0, DELTA, 100):.2f} "
+      f"(one-shot: a single {eps0}-budget release)")
+
+# Prop 5: federated sigma selection without extra rounds
+best, res = fed.run_loco_cv(ds, sigmas=[1e-4, 1e-3, 1e-2, 1e-1, 1.0])
+print(f"Prop 5 LOCO-CV selected sigma={best} "
+      f"(MSE {float(core.mse(ds.test_A, ds.test_b, res.weights)):.4f}, "
+      f"overhead {20 * 5} scalars)")

@@ -1,0 +1,59 @@
+"""Sharding-agnostic pytree checkpointing (npz + JSON treedef).
+
+Leaves are gathered to host, flattened with stable key-paths, and written as
+one .npz per step plus a manifest. Restore rebuilds the pytree and (optionally)
+re-shards by casting each leaf onto the sharding of a like-structured
+template — enough for single-host training and the fed/ runtime; a real
+multi-host deployment would swap in array-serialization with the same API.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(tree, directory: str | pathlib.Path, step: int) -> pathlib.Path:
+    d = pathlib.Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    arrays = _flatten(tree)
+    path = d / f"step_{step:08d}.npz"
+    np.savez(path, **arrays)
+    manifest = {"step": step, "num_leaves": len(arrays),
+                "keys": sorted(arrays)}
+    (d / f"step_{step:08d}.json").write_text(json.dumps(manifest))
+    return path
+
+
+def latest_step(directory: str | pathlib.Path) -> int | None:
+    d = pathlib.Path(directory)
+    steps = [int(m.group(1)) for p in d.glob("step_*.npz")
+             if (m := re.match(r"step_(\d+)\.npz", p.name))]
+    return max(steps) if steps else None
+
+
+def load_pytree(template, directory: str | pathlib.Path, step: int):
+    """Restore into the structure (and shardings) of ``template``."""
+    d = pathlib.Path(directory)
+    data = np.load(d / f"step_{step:08d}.npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        arr = data[jax.tree_util.keystr(path)]
+        dev = jax.device_put(arr.astype(leaf.dtype) if hasattr(leaf, "dtype")
+                             else arr,
+                             getattr(leaf, "sharding", None))
+        leaves.append(dev)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

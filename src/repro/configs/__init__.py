@@ -1,0 +1,47 @@
+"""Architecture registry: ``--arch <id>`` resolution for launch/dryrun/train."""
+from repro.configs import (
+    gemma3_27b,
+    hubert_xlarge,
+    jamba_15_large,
+    minitron_8b,
+    mixtral_8x22b,
+    phi35_moe,
+    pixtral_12b,
+    qwen2_72b,
+    ridge,
+    rwkv6_16b,
+    yi_9b,
+)
+from repro.models.config import ArchConfig
+
+_MODULES = {
+    "gemma3-27b": gemma3_27b,
+    "qwen2-72b": qwen2_72b,
+    "yi-9b": yi_9b,
+    "phi3.5-moe-42b-a6.6b": phi35_moe,
+    "jamba-1.5-large-398b": jamba_15_large,
+    "mixtral-8x22b": mixtral_8x22b,
+    "hubert-xlarge": hubert_xlarge,
+    "rwkv6-1.6b": rwkv6_16b,
+    "minitron-8b": minitron_8b,
+    "pixtral-12b": pixtral_12b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+RIDGE = ridge.CONFIG
+
+
+def get(arch_id: str) -> ArchConfig:
+    """Full-size assigned config for ``--arch <id>``."""
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    cfg = _MODULES[arch_id].CONFIG
+    cfg.validate()
+    return cfg
+
+
+def get_reduced(arch_id: str) -> ArchConfig:
+    """Reduced same-family variant for CPU smoke tests."""
+    cfg = _MODULES[arch_id].REDUCED
+    cfg.validate()
+    return cfg

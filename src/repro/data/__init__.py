@@ -1,0 +1,7 @@
+from repro.data.synthetic import FederatedDataset, generate, as_sharded_rows, NOISE_STD
+from repro.data.pipeline import BatchSpec, TokenPipeline, EmbeddingPipeline
+
+__all__ = [
+    "FederatedDataset", "generate", "as_sharded_rows", "NOISE_STD",
+    "BatchSpec", "TokenPipeline", "EmbeddingPipeline",
+]

@@ -1,0 +1,88 @@
+"""Deterministic synthetic token/embedding pipeline for the backbone side.
+
+Real deployments plug a tokenized corpus in here; for the reproduction the
+pipeline synthesizes deterministic batches (seeded, step-indexed) so training
+runs are exactly replayable and tests are hermetic. The pipeline is
+host-shardable: each data shard draws only its slice of the global batch,
+matching how a multi-pod input pipeline feeds per-host arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSpec:
+    global_batch: int
+    seq_len: int
+    vocab_size: int
+
+
+class TokenPipeline:
+    """Step-indexed synthetic LM batches: tokens + next-token labels.
+
+    Draws from a Zipfian marginal (realistic vocab skew, exercises the
+    sharded embedding gather unevenly like real text does).
+    """
+
+    def __init__(self, spec: BatchSpec, *, seed: int = 0,
+                 shard_index: int = 0, num_shards: int = 1):
+        if spec.global_batch % num_shards:
+            raise ValueError(f"{spec.global_batch=} not divisible by {num_shards=}")
+        self.spec = spec
+        self.seed = seed
+        self.shard_index = shard_index
+        self.num_shards = num_shards
+        self._local_batch = spec.global_batch // num_shards
+        ranks = np.arange(1, spec.vocab_size + 1, dtype=np.float64)
+        p = 1.0 / ranks  # Zipf(1)
+        self._probs = p / p.sum()
+
+    def batch(self, step: int) -> dict[str, jax.Array]:
+        rng = np.random.default_rng(
+            (self.seed, step, self.shard_index)  # deterministic, shard-disjoint
+        )
+        toks = rng.choice(
+            self.spec.vocab_size,
+            size=(self._local_batch, self.spec.seq_len + 1),
+            p=self._probs,
+        ).astype(np.int32)
+        return {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+
+    def __iter__(self) -> Iterator[dict[str, jax.Array]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class EmbeddingPipeline:
+    """Frontend-stub pipeline for [audio]/[vlm] backbones.
+
+    Emits precomputed frame/patch embeddings of shape (batch, seq, d_model) —
+    the carve-out documented in DESIGN.md §5 — plus regression/classification
+    targets for probe experiments.
+    """
+
+    def __init__(self, *, global_batch: int, seq_len: int, d_model: int,
+                 seed: int = 0, shard_index: int = 0, num_shards: int = 1):
+        if global_batch % num_shards:
+            raise ValueError("global_batch must divide num_shards")
+        self.global_batch, self.seq_len, self.d_model = global_batch, seq_len, d_model
+        self.seed, self.shard_index, self.num_shards = seed, shard_index, num_shards
+        self._local_batch = global_batch // num_shards
+
+    def batch(self, step: int) -> dict[str, jax.Array]:
+        rng = np.random.default_rng((self.seed, step, self.shard_index, 7))
+        emb = rng.standard_normal(
+            (self._local_batch, self.seq_len, self.d_model), dtype=np.float32)
+        tgt = rng.standard_normal((self._local_batch,), dtype=np.float32)
+        return {"embeddings": jnp.asarray(emb), "targets": jnp.asarray(tgt)}

@@ -1,0 +1,130 @@
+"""Synthetic heterogeneous regression data — paper §V-A2, verbatim.
+
+Generation recipe (K clients, n_k samples each, d features):
+  1. w* ~ N(0, I_d), normalized to unit norm.
+  2. Client mean mu_k = gamma * u_k, u_k a random unit vector
+     (gamma = 0 -> IID, gamma = 1 -> maximum heterogeneity).
+  3. Features a_ki ~ N(mu_k, Sigma_k), Sigma_k with mild variance
+     heterogeneity (diagonal scales in [0.8, 1.2], per client).
+  4. Targets b_ki = a_ki^T w* + eps, eps ~ N(0, 0.1)  — i.e. noise std
+     sqrt(0.1), giving the paper's irreducible test MSE of ~0.01 after
+     the paper's implicit 1/10 scale (we keep variance 0.1 -> MSE floor 0.1;
+     see note below).
+
+NOTE on the MSE floor: the paper reports optimal MSE ~= 0.0100 with
+"eps ~ N(0, 0.1)". With noise *variance* 0.1 the Bayes MSE would be 0.1, so
+the paper's notation must mean variance 0.01 (std 0.1). We use std 0.1 so the
+reproduced tables land on the paper's 0.0100 floor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+NOISE_STD = 0.1  # paper: eps ~ N(0, 0.1) interpreted as std (see module note)
+
+
+@dataclasses.dataclass(frozen=True)
+class FederatedDataset:
+    """K clients' local data plus a held-out global test set."""
+
+    clients: tuple[tuple[jax.Array, jax.Array], ...]  # [(A_k, b_k)] * K
+    test_A: jax.Array
+    test_b: jax.Array
+    w_star: jax.Array
+    gamma: float
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.clients)
+
+    @property
+    def dim(self) -> int:
+        return self.test_A.shape[1]
+
+    def stacked(self) -> tuple[jax.Array, jax.Array]:
+        """The centralized view [A_1; ...; A_K], [b_1; ...; b_K] (eq. 7)."""
+        A = jnp.concatenate([a for a, _ in self.clients], axis=0)
+        b = jnp.concatenate([b for _, b in self.clients], axis=0)
+        return A, b
+
+
+def generate(
+    key: jax.Array,
+    *,
+    num_clients: int = 20,
+    samples_per_client: int = 500,
+    dim: int = 100,
+    gamma: float = 0.5,
+    noise_std: float = NOISE_STD,
+    test_fraction: float = 0.2,
+    effective_rank: int | None = None,
+) -> FederatedDataset:
+    """Paper §V-A2 generator with its default settings baked in.
+
+    The test set holds ``test_fraction`` of the *total* samples, drawn from the
+    mixture of client distributions (matching "20% of total samples").
+
+    ``effective_rank`` r < dim embeds the features in an r-dimensional
+    subspace (plus 5% isotropic residue). The paper's Table VII random-
+    projection numbers (+5% MSE at m = 0.4 d) are achievable only in this
+    low-rank regime — for isotropic features a Gaussian sketch necessarily
+    loses a (1 - m/d) signal fraction (see benchmarks/table_vii.py).
+    """
+    k_w, k_mu, k_cov, k_feat, k_noise, k_test, k_rank = jax.random.split(key, 7)
+
+    basis = None
+    if effective_rank is not None and effective_rank < dim:
+        basis = jax.random.orthogonal(k_rank, dim)[:effective_rank]  # (r, d)
+
+    def _embed(feats):
+        if basis is None:
+            return feats
+        z = feats[..., : basis.shape[0]]
+        return z @ basis + 0.05 * feats
+
+    w_star = jax.random.normal(k_w, (dim,))
+    w_star = w_star / jnp.linalg.norm(w_star)
+
+    u = jax.random.normal(k_mu, (num_clients, dim))
+    u = u / jnp.linalg.norm(u, axis=1, keepdims=True)
+    mus = gamma * u                                             # (K, d)
+    # Mild variance heterogeneity: per-client diagonal scales in [0.8, 1.2].
+    scales = jax.random.uniform(k_cov, (num_clients, dim), minval=0.8, maxval=1.2)
+
+    feat_keys = jax.random.split(k_feat, num_clients)
+    noise_keys = jax.random.split(k_noise, num_clients)
+    clients = []
+    for k in range(num_clients):
+        A_k = _embed(mus[k] + jax.random.normal(
+            feat_keys[k], (samples_per_client, dim)) * scales[k])
+        eps = jax.random.normal(noise_keys[k], (samples_per_client,)) * noise_std
+        b_k = A_k @ w_star + eps
+        clients.append((A_k, b_k))
+
+    n_test = int(test_fraction * num_clients * samples_per_client)
+    kt_assign, kt_feat, kt_noise = jax.random.split(k_test, 3)
+    assign = jax.random.randint(kt_assign, (n_test,), 0, num_clients)
+    test_A = _embed(mus[assign] + jax.random.normal(
+        kt_feat, (n_test, dim)) * scales[assign])
+    test_b = test_A @ w_star + jax.random.normal(kt_noise, (n_test,)) * noise_std
+
+    return FederatedDataset(
+        clients=tuple(clients), test_A=test_A, test_b=test_b,
+        w_star=w_star, gamma=gamma,
+    )
+
+
+def as_sharded_rows(ds: FederatedDataset, num_shards: int) -> tuple[jax.Array, jax.Array]:
+    """Re-partition the same global rows into ``num_shards`` equal clients.
+
+    Theorem 1 makes the solution partition-invariant, so mapping K process
+    clients onto a different number of mesh shards is exact — this helper is
+    how the fed/ runtime hands data to the on-mesh protocol.
+    """
+    A, b = ds.stacked()
+    n = (A.shape[0] // num_shards) * num_shards
+    return A[:n], b[:n]

@@ -1,0 +1,16 @@
+from repro.fed.comm import CommRecord, crossover_rounds, fedavg_comm, one_shot_comm
+from repro.fed.protocol import (
+    RunResult,
+    run_centralized,
+    run_loco_cv,
+    run_one_shot,
+    run_one_shot_projected,
+)
+from repro.fed.fedavg import IterativeConfig, one_gradient_step, run_iterative
+
+__all__ = [
+    "CommRecord", "crossover_rounds", "fedavg_comm", "one_shot_comm",
+    "RunResult", "run_centralized", "run_loco_cv", "run_one_shot",
+    "run_one_shot_projected",
+    "IterativeConfig", "one_gradient_step", "run_iterative",
+]

@@ -1,0 +1,59 @@
+"""Communication accounting (paper Theorem 4 / Corollary 2).
+
+Counts are in *floats per client*; ``bytes`` helpers assume fp32 (4 bytes) as
+the paper's MB figures do. Upload for One-Shot exploits Gram symmetry:
+d(d+1)/2 + d floats up, d down. FedAvg: R*d up and R*d down.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+FLOAT_BYTES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class CommRecord:
+    """Byte ledger for one protocol execution (per-client and total)."""
+
+    upload_floats_per_client: int
+    download_floats_per_client: int
+    num_clients: int
+    rounds: int
+
+    @property
+    def per_client_bytes(self) -> int:
+        return (self.upload_floats_per_client + self.download_floats_per_client) * FLOAT_BYTES
+
+    @property
+    def total_bytes(self) -> int:
+        return self.per_client_bytes * self.num_clients
+
+    @property
+    def total_mb(self) -> float:
+        return self.total_bytes / 2**20
+
+
+def one_shot_comm(d: int, num_clients: int, *, projected_m: int | None = None) -> CommRecord:
+    """Thm 4 row 1 (+ §IV-F when projected): up d(d+1)/2 + d, down d."""
+    k = d if projected_m is None else projected_m
+    return CommRecord(
+        upload_floats_per_client=k * (k + 1) // 2 + k,
+        download_floats_per_client=k,
+        num_clients=num_clients,
+        rounds=1,
+    )
+
+
+def fedavg_comm(d: int, num_clients: int, rounds: int) -> CommRecord:
+    """Thm 4 row 2: R*d up, R*d down per client."""
+    return CommRecord(
+        upload_floats_per_client=rounds * d,
+        download_floats_per_client=rounds * d,
+        num_clients=num_clients,
+        rounds=rounds,
+    )
+
+
+def crossover_rounds(d: int) -> float:
+    """Corollary 2: One-Shot wins total communication iff R > (d + 5) / 4."""
+    return (d + 5) / 4

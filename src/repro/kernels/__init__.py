@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+gram      — fused streaming (A^T A, A^T b): the one-shot protocol's Phase 1
+swa_flash — sliding-window flash attention: SWA backbones' prefill hot path
+ops       — jit'd public wrappers (padding, layout, interpret dispatch)
+ref       — pure-jnp oracles used by the allclose test sweeps
+"""

@@ -1,0 +1,77 @@
+"""Jit'd public wrappers for the Pallas kernels (padding, layout, dispatch).
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python for correctness validation; on a real TPU backend
+``interpret=False`` compiles to Mosaic. ``use_pallas`` config flags route the
+model/core code here; the default XLA paths in core/ and models/ are the
+numerical references.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gram as gram_kernel
+from repro.kernels import swa_flash as swa_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    pad = (-x.shape[axis]) % multiple
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def gram_moment(A: jax.Array, b: jax.Array, *, block_d: int = 128,
+                block_n: int = 512, interpret: bool | None = None):
+    """Fused (G, h) = (A^T A, A^T b); pads ragged shapes with zero rows/cols.
+
+    Zero padding is exact: padded rows contribute nothing to G or h; padded
+    feature columns land in G rows/cols that are sliced away.
+    """
+    n, d = A.shape
+    block_d = min(block_d, max(128, 1 << (d - 1).bit_length()))
+    block_n = min(block_n, max(8, 1 << (n - 1).bit_length()))
+    Ap = _pad_to(_pad_to(A, 0, block_n), 1, block_d)
+    bp = _pad_to(b, 0, block_n)
+    interpret = _interpret_default() if interpret is None else interpret
+    G, h = gram_kernel.gram_moment_pallas(
+        Ap, bp, block_d=block_d, block_n=block_n, interpret=interpret)
+    return G[:d, :d], h[:d]
+
+
+def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  window: int | None, causal: bool = True,
+                  block_q: int = 128, block_k: int = 128,
+                  interpret: bool | None = None) -> jax.Array:
+    """Sliding-window flash attention. q, k, v: (B, S, H, head_dim).
+
+    Heads must already be GQA-grouped (equal q/kv head counts) — the model's
+    serving path groups before calling. S is padded to the block size with
+    masked (never-attended, never-attending) positions and sliced back.
+    """
+    B, S, H, hd = q.shape
+    interpret = _interpret_default() if interpret is None else interpret
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    pad = (-S) % max(block_q, block_k)
+    if pad:
+        q = _pad_to(q, 1, S + pad)
+        k = _pad_to(k, 1, S + pad)
+        v = _pad_to(v, 1, S + pad)
+    Sp = q.shape[1]
+
+    def to_bh(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+
+    out = swa_kernel.swa_flash_pallas(
+        to_bh(q), to_bh(k), to_bh(v), window=window, causal=causal,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    out = out.reshape(B, H, Sp, hd).transpose(0, 2, 1, 3)
+    return out[:, :S]

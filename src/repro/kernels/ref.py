@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_moment_ref(A: jnp.ndarray, b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """G = A^T A, h = A^T b with fp32 accumulation (paper Phase 1)."""
+    G = jnp.einsum("ni,nj->ij", A, A, preferred_element_type=jnp.float32)
+    h = jnp.einsum("ni,n->i", A, b, preferred_element_type=jnp.float32)
+    return G, h
+
+
+def swa_attention_ref(q, k, v, *, window: int, causal: bool = True):
+    """Sliding-window masked-softmax attention.
+
+    q, k, v: (B, S, H, head_dim) with equal q/kv heads (the kernel operates
+    post-GQA-grouping). Returns (B, S, H, head_dim).
+    """
+    S = q.shape[1]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    rel = jnp.arange(S)[:, None] - jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= rel >= 0
+    if window is not None:
+        ok &= rel < window
+    s = jnp.where(ok, s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

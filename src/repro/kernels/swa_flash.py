@@ -1,0 +1,117 @@
+"""Sliding-window flash attention Pallas kernel (prefill hot path).
+
+Online-softmax flash attention with causal + sliding-window masking applied
+in-kernel. Used by the SWA architectures (gemma3 local layers, mixtral).
+The TPU adaptation of the GPU flash algorithm:
+
+  * the (bq, bk) score tile is the only quadratic object and lives in VMEM;
+  * running max / denominator / output accumulator are fp32 VMEM scratch,
+    persisted across the innermost (kv) grid dimension;
+  * out-of-window and future kv blocks are skipped entirely via pl.when on
+    the block indices — for window W and block sizes bq = bk = B the work per
+    q row is O(W + B) instead of O(S): this is what makes 500k-token SWA
+    prefill linear.
+
+Layout: inputs are reshaped to (B*H, S, head_dim) by ops.swa_attention; the
+grid is (B*H, S/bq, S/bk) with kv innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, window: int | None,
+                  causal: bool, scale: float):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = jk * block_k
+    # Block-level relevance: any (q, k) pair with 0 <= q - k < window?
+    relevant = True
+    if causal:
+        relevant = jnp.asarray(k_start <= q_start + block_q - 1)
+    if window is not None:
+        relevant = jnp.logical_and(
+            relevant, (q_start) - (k_start + block_k - 1) < window)
+
+    @pl.when(relevant)
+    def _process():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        rel = q_pos - k_pos
+        ok = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            ok = jnp.logical_and(ok, rel >= 0)
+        if window is not None:
+            ok = jnp.logical_and(ok, rel < window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "causal", "block_q", "block_k", "interpret"))
+def swa_flash_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     window: int | None, causal: bool = True,
+                     block_q: int = 128, block_k: int = 128,
+                     interpret: bool = False) -> jax.Array:
+    """q, k, v: (BH, S, head_dim), block sizes dividing S."""
+    BH, S, hd = q.shape
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    grid = (BH, S // block_q, S // block_k)
+    scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k,
+        window=window, causal=causal, scale=scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),   # output accumulator
+            pltpu.VMEM((block_q,), jnp.float32),      # running max
+            pltpu.VMEM((block_q,), jnp.float32),      # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)

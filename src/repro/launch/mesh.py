@@ -1,0 +1,38 @@
+"""Production meshes (TPU v5e target).
+
+Single pod: 256 chips as (data=16, model=16). Multi-pod: 2 pods = 512 chips
+as (pod=2, data=16, model=16) — the "pod" axis carries only data parallelism
+(and the one-shot fusion psum), keeping cross-pod (DCI) traffic to gradient /
+statistic reductions.
+
+Defined as functions so importing this module never touches jax device state
+(jax locks the device count on first init; dryrun.py must set XLA_FLAGS
+before anything initializes jax).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(4, 2), axes=("data", "model")):
+    """Small mesh over host platform devices (tests)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def client_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes that play the paper's 'clients' role (row-sharding axes)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# TPU v5e hardware constants (per chip), used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BANDWIDTH = 819e9             # bytes/s
+ICI_LINK_BANDWIDTH = 50e9         # bytes/s per link

@@ -1,0 +1,248 @@
+"""Roofline analysis from the dry-run artifacts (TPU v5e target).
+
+Methodology (see also dryrun.py):
+  * XLA's HloCostAnalysis counts while-loop bodies once and sums both cond
+    branches, so the production (scanned) program cannot be costed directly.
+    The dry-run therefore lowers 2-stage and 4-stage *unrolled* cost-mode
+    variants of every combination (chunk = seq so every inner scan has trip
+    count 1) and this module extrapolates linearly:
+
+        per_stage = (cost(4) - cost(2)) / 2
+        total     = cost(2) + (num_stages - 2) * per_stage
+
+    The same extrapolation applies to collective bytes parsed from the
+    partitioned HLO text (collectives inside a scanned body appear once).
+  * cost_analysis runs on the post-SPMD per-device module, so all quantities
+    are per-chip; the three roofline terms follow directly:
+
+        compute_s    = flops_per_chip / PEAK_FLOPS_BF16
+        memory_s     = bytes_per_chip / HBM_BANDWIDTH
+        collective_s = collective_bytes_per_chip / ICI_LINK_BANDWIDTH
+
+  * MODEL_FLOPS = 6 N D (train) / 2 N_active D (inference) per chip-step,
+    and MODEL_FLOPS / HLO_FLOPS measures how much compiled compute is
+    "useful" (catches remat and redundancy waste; can exceed 1 when XLA's
+    static analysis undercounts, e.g. gather/scatter-heavy programs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+from repro import configs
+from repro.launch import mesh as mesh_lib
+from repro.models.config import INPUT_SHAPES
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+CHIPS = 256  # single-pod roofline
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    flops: float                 # per chip, extrapolated to full depth
+    bytes_: float                # HLO bytes accessed (unfused upper bound)
+    est_bytes: float             # fusion-aware analytic HBM traffic estimate
+    coll_bytes: float
+    coll_by_kind: dict
+    compute_s: float
+    memory_s: float              # from HLO bytes (spec formula)
+    est_memory_s: float          # from the analytic model (verdict basis)
+    collective_s: float
+    dominant: str
+    model_flops: float           # useful flops per chip
+    useful_ratio: float
+    note: str = ""
+
+    def step_time_bound_s(self) -> float:
+        return max(self.compute_s, self.est_memory_s, self.collective_s)
+
+
+def analytic_hbm_bytes(arch: str, shape_name: str, *, model_shards: int = 16,
+                       data_shards: int = 16) -> float:
+    """Fusion-aware per-chip HBM traffic estimate.
+
+    XLA's 'bytes accessed' counts every HLO op unfused (a ~100x overcount on
+    TPU where elementwise chains and flash-attention blocks fuse into VMEM),
+    so the bottleneck verdict uses this napkin model instead:
+
+      weights:   FSDP-gathered weights are written+read once per pass
+                 (P/model_shards per chip); training re-reads for backward
+                 and rematerialized forward, and the optimizer touches the
+                 fp32 master/m/v shard (P/chips x 24 bytes).
+      acts:      tokens_local x d_model x 2B per layer, with pass factors
+                 {train: 6 (fwd+bwd+remat stores/loads), prefill/decode: 3}.
+      KV cache:  decode reads the full per-chip cache slice once per token;
+                 prefill writes it once.
+    The HLO term stays in the table as the spec-mandated upper bound.
+    """
+    cfg = configs.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    chips = model_shards * data_shards
+    P = cfg.param_count() * 2                      # bf16
+    L = cfg.num_layers
+
+    if shape.kind == "train":
+        weights = 5 * P / model_shards + 24 * cfg.param_count() / chips * 4 / 4
+        tokens_local = shape.global_batch * shape.seq_len / data_shards
+        acts = tokens_local * cfg.d_model * 2 * L * 6
+        return weights + acts
+    if shape.kind == "prefill":
+        weights = P / model_shards
+        tokens_local = shape.global_batch * shape.seq_len / data_shards
+        acts = tokens_local * cfg.d_model * 2 * L * 3
+        cache_w = _cache_bytes(cfg, shape) / chips
+        return weights + acts + cache_w
+    # decode
+    weights = P / model_shards
+    cache_r = _cache_bytes(cfg, shape) / chips
+    toks = max(shape.global_batch / data_shards, 1) * cfg.d_model * 2 * L * 3
+    return weights + cache_r + toks
+
+
+def _cache_bytes(cfg, shape) -> float:
+    total = 0.0
+    for spec in (cfg.stage_pattern * cfg.num_stages) + cfg.tail_pattern:
+        if spec.attn in ("full", "swa"):
+            length = min(cfg.window, shape.seq_len) if spec.attn == "swa" \
+                else shape.seq_len
+            total += shape.global_batch * length * cfg.kv_dim * 2 * 2
+        elif spec.attn == "mamba":
+            total += shape.global_batch * cfg.d_inner * (
+                cfg.mamba_d_state * 4 + (cfg.mamba_conv - 1) * 2)
+        elif spec.attn == "rwkv":
+            total += shape.global_batch * cfg.rwkv_heads * \
+                cfg.rwkv_head_dim ** 2 * 4
+    return total
+
+
+def _extrapolate(rec: dict, field: str, num_stages: int) -> float:
+    c2 = rec["cost_2stage"][field] if field != "coll" else \
+        rec["cost_2stage"]["collectives"]["total"]
+    c4 = rec["cost_4stage"][field] if field != "coll" else \
+        rec["cost_4stage"]["collectives"]["total"]
+    delta = max((c4 - c2) / 2.0, 0.0)
+    return c2 + (num_stages - 2) * delta
+
+
+def _coll_by_kind(rec: dict, num_stages: int) -> dict:
+    kinds = set(rec["cost_2stage"]["collectives"]) | set(
+        rec["cost_4stage"]["collectives"])
+    out = {}
+    for k in kinds:
+        if k == "total":
+            continue
+        c2 = rec["cost_2stage"]["collectives"].get(k, 0)
+        c4 = rec["cost_4stage"]["collectives"].get(k, 0)
+        delta = max((c4 - c2) / 2.0, 0.0)
+        out[k] = c2 + (num_stages - 2) * delta
+    return out
+
+
+def _model_flops(arch: str, shape_name: str) -> float:
+    cfg = configs.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / CHIPS
+
+
+def analyze(rec: dict) -> Roofline | None:
+    if "skipped" in rec or "error" in rec or "cost_2stage" not in rec:
+        return None
+    cfg = configs.get(rec["arch"])
+    n = cfg.num_stages
+    flops = _extrapolate(rec, "flops", n)
+    bytes_ = _extrapolate(rec, "bytes", n)
+    coll = _extrapolate(rec, "coll", n)
+    est_bytes = analytic_hbm_bytes(rec["arch"], rec["shape"])
+    compute_s = flops / mesh_lib.PEAK_FLOPS_BF16
+    memory_s = bytes_ / mesh_lib.HBM_BANDWIDTH
+    est_memory_s = est_bytes / mesh_lib.HBM_BANDWIDTH
+    collective_s = coll / mesh_lib.ICI_LINK_BANDWIDTH
+    terms = {"compute": compute_s, "memory": est_memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    model_flops = _model_flops(rec["arch"], rec["shape"])
+    note = _suggestion(dominant, rec)
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], flops=flops, bytes_=bytes_,
+        est_bytes=est_bytes, coll_bytes=coll,
+        coll_by_kind=_coll_by_kind(rec, n),
+        compute_s=compute_s, memory_s=memory_s, est_memory_s=est_memory_s,
+        collective_s=collective_s, dominant=dominant, model_flops=model_flops,
+        useful_ratio=model_flops / flops if flops else 0.0, note=note)
+
+
+def _suggestion(dominant: str, rec: dict) -> str:
+    kind = rec["kind"]
+    if dominant == "collective":
+        return ("overlap/reshard: reduce all-gather volume (fsdp prefetch, "
+                "collective matmul) or move the reduction to reduce-scatter")
+    if dominant == "memory":
+        if kind == "decode":
+            return ("decode is KV/weight-bandwidth bound: quantize cache or "
+                    "widen batch to amortize weight reads")
+        return "increase arithmetic intensity: larger per-chip tiles, fusion"
+    return "compute-bound: already near MXU roofline; only algorithmic wins left"
+
+
+def load_all(mesh: str = "pod1") -> list[Roofline]:
+    out = []
+    for p in sorted(DRYRUN_DIR.glob(f"*_{mesh}.json")):
+        r = analyze(json.loads(p.read_text()))
+        if r:
+            out.append(r)
+    return out
+
+
+def markdown_table(rows: list[Roofline]) -> str:
+    hdr = ("| arch | shape | flops/chip | HLO bytes | est bytes | coll B | "
+           "compute | mem(HLO) | mem(est) | coll | bound | useful |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|---|\n")
+    fmt = []
+    for r in rows:
+        fmt.append(
+            f"| {r.arch} | {r.shape} | {r.flops:.3g} | {r.bytes_:.3g} | "
+            f"{r.est_bytes:.3g} | {r.coll_bytes:.3g} | "
+            f"{r.compute_s * 1e3:.1f}ms | {r.memory_s * 1e3:.0f}ms | "
+            f"{r.est_memory_s * 1e3:.1f}ms | {r.collective_s * 1e3:.1f}ms | "
+            f"**{r.dominant}** | {r.useful_ratio:.2f} |")
+    return hdr + "\n".join(fmt) + "\n"
+
+
+def main() -> None:
+    rows = load_all()
+    print(markdown_table(rows))
+    out = DRYRUN_DIR.parent / "roofline.md"
+    out.write_text(markdown_table(rows))
+    import csv
+    with (DRYRUN_DIR.parent / "roofline.csv").open("w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=[
+            "arch", "shape", "flops", "bytes", "est_bytes", "coll_bytes",
+            "compute_s", "memory_s", "est_memory_s", "collective_s",
+            "dominant", "model_flops", "useful_ratio", "note"])
+        w.writeheader()
+        for r in rows:
+            w.writerow({"arch": r.arch, "shape": r.shape, "flops": r.flops,
+                        "bytes": r.bytes_, "est_bytes": r.est_bytes,
+                        "coll_bytes": r.coll_bytes,
+                        "compute_s": r.compute_s, "memory_s": r.memory_s,
+                        "est_memory_s": r.est_memory_s,
+                        "collective_s": r.collective_s, "dominant": r.dominant,
+                        "model_flops": r.model_flops,
+                        "useful_ratio": r.useful_ratio, "note": r.note})
+    print(f"wrote {out} and roofline.csv ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallbacks.
+
+Model code annotates parameters/inputs/caches with *logical* axis names
+(PartitionSpecs over names like "embed", "heads", "experts"). This module
+resolves them against a concrete mesh:
+
+  * each logical name has an ordered list of candidate mesh axes
+    (possibly composite, e.g. batch -> ("pod", "data"));
+  * a candidate is taken only if the dimension is divisible by the mesh-axes
+    product and none of those mesh axes is already used by an earlier
+    dimension of the same tensor — otherwise the next candidate (or
+    replication) applies.
+
+This one rule set serves every assigned architecture: kv_heads in {4,8,16}
+shard over model=16 only when divisible, else the head_dim dimension picks up
+the model axis (contracting-dim tensor parallelism for the KV cache);
+mixtral's 8 experts skip the 16-way model axis and the expert FFN dim takes
+it instead; batch=1 (long_500k) falls back to replication.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+Candidate = tuple[str, ...]
+
+
+def _cands(*names) -> tuple[Candidate, ...]:
+    return tuple((n,) if isinstance(n, str) else tuple(n) for n in names)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Ordered mesh-axis candidates per logical axis name."""
+
+    rules: Mapping[str, tuple[Candidate, ...]]
+
+    def resolve(self, logical: P, shape: Sequence[int], mesh: Mesh) -> P:
+        used: set[str] = set()
+        out = []
+        names = tuple(logical) + (None,) * (len(shape) - len(logical))
+        for dim, name in zip(shape, names):
+            chosen: Candidate | None = None
+            for cand in self.rules.get(name, ()) if name else ():
+                axes = tuple(a for a in cand
+                             if a in mesh.axis_names and a not in used)
+                if not axes:
+                    continue
+                prod = math.prod(mesh.shape[a] for a in axes)
+                if prod > 1 and dim % prod == 0:
+                    chosen = axes
+                    used.update(axes)
+                    break
+            if chosen is None:
+                out.append(None)
+            elif len(chosen) == 1:
+                out.append(chosen[0])
+            else:
+                out.append(chosen)
+        return P(*out)
+
+    def named(self, logical: P, shape: Sequence[int], mesh: Mesh) -> NamedSharding:
+        return NamedSharding(mesh, self.resolve(logical, shape, mesh))
+
+    def tree_shardings(self, axes_tree, shape_tree, mesh: Mesh):
+        """Resolve a whole pytree of logical specs against matching shapes."""
+        return jax.tree.map(
+            lambda spec, leaf: self.named(spec, leaf.shape, mesh),
+            axes_tree, shape_tree,
+            is_leaf=lambda v: isinstance(v, P),
+        )
+
+
+DEFAULT_RULES = ShardingRules(rules={
+    # data / activations
+    "batch": _cands(("pod", "data"), ("data",)),
+    "seq": _cands(),
+    "seq_cache": _cands(),
+    # parameters
+    "embed": _cands(("data",)),            # FSDP over the data axis
+    "vocab": _cands(("model",)),
+    "heads": _cands(("model",)),
+    "kv": _cands(("model",)),
+    "kv_heads": _cands(("model",)),
+    "head_dim": _cands(("model",)),        # fallback when kv_heads indivisible
+    "ff": _cands(("model",)),
+    "experts": _cands(("model",)),
+    "inner": _cands(("model",)),           # mamba d_inner
+    "state": _cands(),
+    "rwkv_heads": _cands(("model",)),
+    "stack": _cands(),                     # stacked-stage dim: never sharded
+    # activation head axes (TP layout constraints, perf hillclimb)
+    "heads_act": _cands(("model",)),
+    "head_dim_act": _cands(("model",)),
+})
+
+
+# ZeRO-1 variant (perf hillclimb, see EXPERIMENTS.md §Perf): bf16 compute
+# weights are model-sharded only (no contracting-dim 'data' sharding, so no
+# activation gathers); the fp32 master/m/v optimizer shard over 'data' via
+# their 'embed' dimension instead (elementwise update -> no matmul cost).
+ZERO1_PARAM_RULES = ShardingRules(rules={
+    **DEFAULT_RULES.rules, "embed": _cands(),
+})
+
+# Stack-FSDP (§Perf iteration 5): shard the stacked-stage leading axis over
+# 'data' and drop 'embed' from weight shardings entirely. The layer scan
+# gathers exactly one stage's weights per iteration (weight-sized all-gather,
+# grad reduce-scatter on the transpose), and since no weight matrix carries a
+# data-axis dimension into a matmul, the partitioner can never trade a
+# weight gather for an activation gather (the failure mode of plain
+# embed->data FSDP under GSPMD; see EXPERIMENTS.md §Perf iteration 2).
+STACK_FSDP_RULES = ShardingRules(rules={
+    **DEFAULT_RULES.rules, "embed": _cands(), "stack": _cands(("data",)),
+})
+
+# Decode rules (§Perf iteration: decode pairs). Decode activations are tiny
+# (KB-MB) while weights are GB, so weights must stay fully sharded and
+# RESIDENT — any per-token weight gather destroys the collective term. No
+# data-axis sharding on 'embed' (that's what provoked per-token gathers in
+# the baseline); instead the spare data axis picks up the expert FFN dim
+# ('ff' falls back to 'data' when 'model' is taken by 'experts'), keeping
+# jamba's 385B of expert weights at ~3 GB/chip.
+DECODE_RULES = ShardingRules(rules={
+    **DEFAULT_RULES.rules,
+    "embed": _cands(),
+    "ff": _cands(("model",), ("data",)),
+})
+
+
+def params_shardings(rules: ShardingRules, axes_tree, params_shapes, mesh: Mesh):
+    return rules.tree_shardings(axes_tree, params_shapes, mesh)
+
+
+def opt_state_shardings(rules: ShardingRules, axes_tree, opt_shapes, mesh: Mesh):
+    """Optimizer state mirrors parameter sharding (master/m/v)."""
+    param_sh = {
+        k: rules.tree_shardings(axes_tree, opt_shapes[k], mesh)
+        for k in ("master", "m", "v")
+    }
+    param_sh["count"] = NamedSharding(mesh, P())
+    return param_sh
+
+
+# Logical specs for the input batches (per input_mode).
+BATCH_AXES = {
+    "tokens": {"tokens": P("batch", "seq"), "labels": P("batch", "seq")},
+    "embeddings": {"embeddings": P("batch", "seq", "embed"),
+                   "labels": P("batch", "seq"), "mask": P("batch", "seq")},
+    "prefix_embeddings": {"tokens": P("batch", "seq"),
+                          "labels": P("batch", "seq"),
+                          "patches": P("batch", "seq", "embed")},
+}

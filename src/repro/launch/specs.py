@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct input builders for every (arch x input-shape) pair.
+
+The dry-run lowers with these stand-ins — weak-type-correct, shardable, zero
+device allocation. For [audio]/[vlm] the frontend stub provides frame/patch
+embeddings of the documented shape (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.models.config import ArchConfig, InputShape
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """Input batch ShapeDtypeStructs for one step kind."""
+    B = shape.global_batch
+    act_dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+    if shape.kind == "decode":
+        if cfg.input_mode == "embeddings":
+            raise ValueError("encoder-only arch has no decode step")
+        return {"tokens": _sds((B, 1), jnp.int32)}
+
+    S = shape.seq_len
+    if cfg.input_mode == "tokens":
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S), jnp.int32)
+        return batch
+    if cfg.input_mode == "embeddings":
+        batch = {"embeddings": _sds((B, S, cfg.d_model), act_dt)}
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S), jnp.int32)
+            batch["mask"] = _sds((B, S), jnp.bool_)
+        return batch
+    if cfg.input_mode == "prefix_embeddings":
+        S_text = S - cfg.num_prefix           # total sequence = prefix + text
+        batch = {"tokens": _sds((B, S_text), jnp.int32),
+                 "patches": _sds((B, cfg.num_prefix, cfg.d_model), act_dt)}
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S_text), jnp.int32)
+        return batch
+    raise ValueError(cfg.input_mode)
+
+
+def params_specs(cfg: ArchConfig, key=None) -> dict:
+    """eval_shape of init_params — no allocation."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(lambda k: model.init_params(k, cfg), key)
+
+
+def opt_specs(cfg: ArchConfig) -> dict:
+    from repro.optim import adamw
+    p = params_specs(cfg)
+    return jax.eval_shape(adamw.init, p)
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    return jax.eval_shape(
+        lambda: model.init_decode_cache(cfg, shape.global_batch, shape.seq_len))

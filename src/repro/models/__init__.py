@@ -1,0 +1,13 @@
+from repro.models.config import (
+    ArchConfig,
+    InputShape,
+    INPUT_SHAPES,
+    LayerSpec,
+    shape_applicable,
+)
+from repro.models import model
+
+__all__ = [
+    "ArchConfig", "InputShape", "INPUT_SHAPES", "LayerSpec",
+    "shape_applicable", "model",
+]

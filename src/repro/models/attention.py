@@ -1,0 +1,290 @@
+"""Grouped-query attention: full / sliding-window / bidirectional.
+
+One chunked implementation serves every mode. The KV sequence is processed in
+``chunk_size`` blocks with an online-softmax carry (flash-attention algebra in
+pure JAX):
+
+  * memory-mode lowering uses small chunks — the (q_chunk, kv_chunk) score
+    block is the only quadratic intermediate, bounding per-device HBM;
+  * cost-mode lowering sets chunk_size = seq_len, making every scan trip-count
+    1 so XLA's HloCostAnalysis (which counts while-loop bodies once) reports
+    exact FLOPs (see EXPERIMENTS.md §Roofline methodology).
+
+Decode maintains a cache per layer: full-attention layers keep the whole
+(seq) cache; SWA layers keep a ``window``-sized ring buffer (this is what
+makes gemma3/mixtral long_500k decodes sub-quadratic in memory as well as
+compute). Keys are stored already-roped at absolute positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.config import ArchConfig
+
+NEG_INF = -1e30
+
+# --- optional TP layout constraints (perf hillclimb lever) --------------------
+# When set (by launch/dryrun knobs), attention_fwd pins activation layouts:
+# q/k/v head-sharded over the model axis and scores (B, H, q, k) sharded
+# (batch -> data, heads -> model). This switches to the repeat-based GQA
+# formulation whose head dim is the full H (cleanly divisible by the model
+# axis), preventing the partitioner from resharding quadratic score tensors.
+_TP_SPECS: dict | None = None
+
+
+def set_tp_constraints(specs: dict | None) -> None:
+    """specs: {'qkv': P, 'scores': P} resolved against the active mesh."""
+    global _TP_SPECS
+    _TP_SPECS = specs
+
+
+def _constrain(x, key):
+    if _TP_SPECS and key in _TP_SPECS:
+        return jax.lax.with_sharding_constraint(x, _TP_SPECS[key])
+    return x
+
+
+# --- params ------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, dt = cfg.d_model, {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    p = {
+        "wq": layers.dense_init(kq, d, cfg.q_dim, dt),
+        "wk": layers.dense_init(kk, d, cfg.kv_dim, dt),
+        "wv": layers.dense_init(kv, d, cfg.kv_dim, dt),
+        "wo": layers.dense_init(ko, cfg.q_dim, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+    return p
+
+
+def axes_attention(cfg: ArchConfig) -> dict:
+    p = {
+        "wq": P("embed", "heads"),
+        "wk": P("embed", "kv"),
+        "wv": P("embed", "kv"),
+        "wo": P("heads", "embed"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P("heads")
+        p["bk"] = P("kv")
+        p["bv"] = P("kv")
+    return p
+
+
+# --- projections -------------------------------------------------------------
+
+def _project_qkv(params, x, cfg: ArchConfig, positions):
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_block(q_pos, k_pos, *, causal: bool, window: int | None):
+    """(q_chunk, kv_chunk) additive mask for one block pair."""
+    rel = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(rel.shape, jnp.bool_)
+    if causal:
+        ok &= rel >= 0
+    if window is not None:
+        ok &= rel < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+# --- chunked flash-style attention (prefill / train) ---------------------------
+
+def attention_fwd(params, x, cfg: ArchConfig, *, kind: str,
+                  chunk_size: int | None = None) -> jax.Array:
+    """Self-attention over a full sequence (train / prefill).
+
+    kind: 'full' (causal), 'swa' (causal, windowed), 'full_bidir' (encoder).
+    """
+    B, S, _ = x.shape
+    chunk = layers.pick_chunk(S, chunk_size)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    causal = kind != "full_bidir"
+    window = cfg.window if kind == "swa" else None
+    group = cfg.num_heads // cfg.num_kv_heads
+    scale = cfg.head_dim ** -0.5
+
+    if _TP_SPECS is not None:
+        # TP-constrained path: grouped KV is materialized (cheap — kv_dim is
+        # small) so every tensor carries the full H head axis, which shards
+        # cleanly over the model axis.
+        q = _constrain(q, "qkv")
+        kg = _constrain(jnp.repeat(k, group, axis=2), "qkv")
+        vg = _constrain(jnp.repeat(v, group, axis=2), "qkv")
+        n_chunks = S // chunk
+        outs = []
+        for qi in range(n_chunks):
+            q_i = q[:, qi * chunk:(qi + 1) * chunk]
+            q_pos = qi * chunk + jnp.arange(chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_i, kg,
+                           preferred_element_type=jnp.float32) * scale
+            s = _constrain(s, "scores")
+            s = s + _mask_block(q_pos, jnp.arange(S), causal=causal,
+                                window=window)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vg.dtype), vg,
+                           preferred_element_type=jnp.float32)
+            outs.append(o)
+        out = jnp.concatenate(outs, axis=1).reshape(B, S, cfg.q_dim)
+        return out.astype(x.dtype) @ params["wo"]
+
+    n_chunks = S // chunk
+    qc = q.reshape(B, n_chunks, chunk, cfg.num_heads, cfg.head_dim)
+    kc = k.reshape(B, n_chunks, chunk, cfg.num_kv_heads, cfg.head_dim)
+    vc = v.reshape(B, n_chunks, chunk, cfg.num_kv_heads, cfg.head_dim)
+
+    def q_block(qi, q_i):
+        q_pos = qi * chunk + jnp.arange(chunk)
+        # GQA without materializing grouped KV: q (B,c,K,G,hd) vs kv (B,j,K,hd)
+        q_g = q_i.reshape(B, chunk, cfg.num_kv_heads, group, cfg.head_dim)
+
+        def kv_step(carry, inputs):
+            (m, l, acc) = carry
+            ki_idx, k_j, v_j = inputs
+            k_pos = ki_idx * chunk + jnp.arange(chunk)
+            s = jnp.einsum("bqkgd,bjkd->bkgqj", q_g, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + _mask_block(q_pos, k_pos, causal=causal, window=window)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqj,bjkd->bkgqd", p.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        kv_sh = (B, cfg.num_kv_heads, group, chunk)
+        m0 = jnp.full(kv_sh, NEG_INF, jnp.float32)
+        l0 = jnp.zeros(kv_sh, jnp.float32)
+        a0 = jnp.zeros((*kv_sh, cfg.head_dim), jnp.float32)
+        ks = jnp.arange(n_chunks)
+        if n_chunks == 1:
+            # Inline (no scan): a trip-count-1 while/call boundary would
+            # block SPMD sharding propagation and force conformance
+            # all-gathers of the activations (see EXPERIMENTS.md §Perf).
+            (m, l, acc), _ = kv_step((m0, l0, a0), (ks[0], kc[:, 0], vc[:, 0]))
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0),
+                (ks, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)      # (B,K,G,c,hd)
+        return jnp.moveaxis(out, 3, 1)                    # (B,c,K,G,hd)
+
+    if n_chunks == 1:
+        outs = q_block(0, qc[:, 0])[None]
+    else:
+        outs = jax.lax.map(lambda args: q_block(*args),
+                           (jnp.arange(n_chunks), jnp.moveaxis(qc, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, cfg.q_dim).astype(x.dtype)
+    return out @ params["wo"]
+
+
+# --- KV cache ----------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """Shape/sharding spec for one attention layer's decode cache."""
+
+    length: int  # seq_len for full layers, window for swa layers
+
+
+def cache_length(cfg: ArchConfig, kind: str, seq_len: int) -> int:
+    return min(cfg.window, seq_len) if kind == "swa" else seq_len
+
+
+def init_cache(cfg: ArchConfig, kind: str, batch: int, seq_len: int, dtype):
+    L = cache_length(cfg, kind, seq_len)
+    shape = (batch, L, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def axes_cache() -> dict:
+    spec = P("batch", "seq_cache", "kv_heads", "head_dim")
+    return {"k": spec, "v": spec}
+
+
+def attention_decode(params, x, cache: dict, pos: jax.Array, cfg: ArchConfig,
+                     *, kind: str) -> tuple[jax.Array, dict]:
+    """One decode step: x (B, 1, d), cache holds roped keys/values.
+
+    ``pos`` is the current absolute position (scalar int32). SWA layers use a
+    ring buffer (slot = pos % window); full layers write at slot = pos.
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(params, x, cfg, positions)   # (B,1,H/K,hd)
+    L = cache["k"].shape[1]
+    slot = pos % L if kind == "swa" else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+
+    group = cfg.num_heads // cfg.num_kv_heads
+    scale = cfg.head_dim ** -0.5
+    # GQA decode without materializing grouped KV: q (B,K,G,hd) vs (B,L,K,hd)
+    q_g = q.reshape(B, cfg.num_kv_heads, group, cfg.head_dim)
+    s = jnp.einsum("bkgd,blkd->bkgl", q_g, ck,
+                   preferred_element_type=jnp.float32) * scale  # (B,K,G,L)
+
+    idx = jnp.arange(L)
+    if kind == "swa":
+        # ring buffer: slot i holds absolute position p with p % L == i and
+        # p <= pos; valid iff pos - p < L i.e. the newest L positions.
+        abs_pos = jnp.where(idx <= slot, pos - slot + idx, pos - slot - L + idx)
+        valid = (abs_pos >= 0) & (abs_pos <= pos) & (pos - abs_pos < cfg.window)
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgl,blkd->bkgd", p.astype(cv.dtype), cv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, cfg.q_dim).astype(x.dtype)
+    return out @ params["wo"], {"k": ck, "v": cv}
+
+
+def prefill_cache(params, x, cfg: ArchConfig, *, kind: str,
+                  chunk_size: int | None = None,
+                  max_len: int | None = None) -> tuple[jax.Array, dict]:
+    """Prefill: full-sequence attention output + the cache decode will extend.
+
+    SWA layers keep the trailing ``window`` keys (aligned so that ring-buffer
+    slot p % window of the *next* position matches decode's convention).
+    """
+    B, S, _ = x.shape
+    out = attention_fwd(params, x, cfg, kind=kind, chunk_size=chunk_size)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    _, k, v = _project_qkv(params, x, cfg, positions)
+    L = cache_length(cfg, kind, max_len or S)
+    ck = jnp.zeros((B, L, cfg.num_kv_heads, cfg.head_dim), k.dtype)
+    cv = jnp.zeros_like(ck)
+    keep = min(L, S)                      # swa ring keeps the newest L keys
+    tail_pos = jnp.arange(S - keep, S)
+    slots = tail_pos % L if kind == "swa" else tail_pos
+    ck = ck.at[:, slots].set(k[:, S - keep:])
+    cv = cv.at[:, slots].set(v[:, S - keep:])
+    return out, {"k": ck, "v": cv}

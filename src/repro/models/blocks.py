@@ -1,0 +1,204 @@
+"""Per-layer block assembly and the stacked-stage machinery.
+
+A stage is a fixed tuple of LayerSpecs; its parameters are a tuple (indexed by
+pattern position) of per-layer dicts. Stages are stacked with a leading
+``num_stages`` axis (built by vmap over stage keys, so ``jax.eval_shape``
+works without materializing 72B parameters) and the model scans over that
+axis. Within the stage body every layer of the pattern is applied unrolled —
+no lax.cond, so HloCostAnalysis (which sums both cond branches) stays exact.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention, layers, mamba, moe, rwkv6
+from repro.models.config import ArchConfig, LayerSpec
+
+
+def _dt(cfg: ArchConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# --- single layer ------------------------------------------------------------
+
+def init_layer(key, cfg: ArchConfig, spec: LayerSpec) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = _dt(cfg)
+    p: dict[str, Any] = {"norm1": layers.init_rmsnorm(cfg.d_model, dt),
+                         "norm2": layers.init_rmsnorm(cfg.d_model, dt)}
+    if spec.attn in ("full", "swa", "full_bidir"):
+        p["attn"] = attention.init_attention(k1, cfg)
+    elif spec.attn == "mamba":
+        p["mamba"] = mamba.init_mamba(k1, cfg)
+    elif spec.attn == "rwkv":
+        p["rwkv_tm"] = rwkv6.init_rwkv(k1, cfg)
+        p["rwkv_cm"] = rwkv6.init_channel_mix(k2, cfg)
+        return p  # rwkv layers own their channel mix; no separate MLP
+    if spec.mlp == "dense":
+        p["mlp"] = layers.init_mlp(k3, cfg.d_model, cfg.d_ff, dt,
+                                   gated=not cfg.encoder_only)
+    elif spec.mlp == "moe":
+        p["moe"] = moe.init_moe(k4, cfg)
+    return p
+
+
+def axes_layer(cfg: ArchConfig, spec: LayerSpec) -> dict:
+    a: dict[str, Any] = {"norm1": layers.axes_rmsnorm(),
+                         "norm2": layers.axes_rmsnorm()}
+    if spec.attn in ("full", "swa", "full_bidir"):
+        a["attn"] = attention.axes_attention(cfg)
+    elif spec.attn == "mamba":
+        a["mamba"] = mamba.axes_mamba()
+    elif spec.attn == "rwkv":
+        a["rwkv_tm"] = rwkv6.axes_rwkv()
+        a["rwkv_cm"] = rwkv6.axes_channel_mix()
+        return a
+    if spec.mlp == "dense":
+        a["mlp"] = layers.axes_mlp(gated=not cfg.encoder_only)
+    elif spec.mlp == "moe":
+        a["moe"] = moe.axes_moe()
+    return a
+
+
+def apply_layer(params: dict, x: jax.Array, cfg: ArchConfig, spec: LayerSpec,
+                *, chunk_size: int | None, collect_aux: list | None) -> jax.Array:
+    eps = cfg.norm_eps
+    if spec.attn == "rwkv":
+        h = rwkv6.rwkv_time_mix(params["rwkv_tm"],
+                                layers.rmsnorm(params["norm1"], x, eps),
+                                cfg, chunk_size=chunk_size)
+        x = x + h
+        h = rwkv6.rwkv_channel_mix(params["rwkv_cm"],
+                                   layers.rmsnorm(params["norm2"], x, eps))
+        return x + h
+
+    if spec.attn in ("full", "swa", "full_bidir"):
+        h = attention.attention_fwd(params["attn"],
+                                    layers.rmsnorm(params["norm1"], x, eps),
+                                    cfg, kind=spec.attn, chunk_size=chunk_size)
+        x = x + h
+    elif spec.attn == "mamba":
+        h = mamba.mamba_fwd(params["mamba"],
+                            layers.rmsnorm(params["norm1"], x, eps),
+                            cfg, chunk_size=chunk_size)
+        x = x + h
+
+    xin = layers.rmsnorm(params["norm2"], x, eps)
+    if spec.mlp == "dense":
+        x = x + layers.mlp(params["mlp"], xin)
+    elif spec.mlp == "moe":
+        if collect_aux is not None:
+            y, aux = moe.moe_block(params["moe"], xin, cfg, return_aux=True)
+            collect_aux.append(aux)
+        else:
+            y = moe.moe_block(params["moe"], xin, cfg)
+        x = x + y
+    return x
+
+
+# --- layer decode ------------------------------------------------------------
+
+def init_layer_cache(cfg: ArchConfig, spec: LayerSpec, batch: int,
+                     seq_len: int, dtype) -> dict:
+    if spec.attn in ("full", "swa"):
+        return attention.init_cache(cfg, spec.attn, batch, seq_len, dtype)
+    if spec.attn == "mamba":
+        return mamba.init_mamba_cache(cfg, batch, dtype)
+    if spec.attn == "rwkv":
+        return rwkv6.init_rwkv_cache(cfg, batch, dtype)
+    raise ValueError(f"no decode cache for attn kind {spec.attn!r}")
+
+
+def axes_layer_cache(spec: LayerSpec) -> dict:
+    if spec.attn in ("full", "swa"):
+        return attention.axes_cache()
+    if spec.attn == "mamba":
+        return mamba.axes_mamba_cache()
+    if spec.attn == "rwkv":
+        return rwkv6.axes_rwkv_cache()
+    raise ValueError(spec.attn)
+
+
+def decode_layer(params: dict, x: jax.Array, cache: dict, pos: jax.Array,
+                 cfg: ArchConfig, spec: LayerSpec) -> tuple[jax.Array, dict]:
+    eps = cfg.norm_eps
+    if spec.attn == "rwkv":
+        return rwkv6.rwkv_decode(params["rwkv_tm"], params["rwkv_cm"],
+                                 params["norm1"], params["norm2"], x, cache,
+                                 cfg, eps)
+    if spec.attn in ("full", "swa"):
+        h, cache = attention.attention_decode(
+            params["attn"], layers.rmsnorm(params["norm1"], x, eps), cache,
+            pos, cfg, kind=spec.attn)
+        x = x + h
+    elif spec.attn == "mamba":
+        h, cache = mamba.mamba_decode(
+            params["mamba"], layers.rmsnorm(params["norm1"], x, eps), cache, cfg)
+        x = x + h
+    xin = layers.rmsnorm(params["norm2"], x, eps)
+    if spec.mlp == "dense":
+        x = x + layers.mlp(params["mlp"], xin)
+    elif spec.mlp == "moe":
+        # dispatch path: expert weights stay resident/sharded; only
+        # activation-sized tensors move (decisive at decode, where a
+        # per-token weight gather costs GBs — EXPERIMENTS.md §Perf pair 2).
+        x = x + moe.moe_block(params["moe"], xin, cfg)
+    return x, cache
+
+
+def prefill_layer(params: dict, x: jax.Array, cfg: ArchConfig, spec: LayerSpec,
+                  *, chunk_size: int | None,
+                  max_len: int | None = None) -> tuple[jax.Array, dict]:
+    """Full-sequence forward that also emits the decode cache for this layer."""
+    eps = cfg.norm_eps
+    if spec.attn == "rwkv":
+        xin = layers.rmsnorm(params["norm1"], x, eps)
+        h, S_final = rwkv6.rwkv_time_mix(params["rwkv_tm"], xin, cfg,
+                                         chunk_size=chunk_size, return_state=True)
+        x = x + h
+        xin2 = layers.rmsnorm(params["norm2"], x, eps)
+        x = x + rwkv6.rwkv_channel_mix(params["rwkv_cm"], xin2)
+        cache = {"S": S_final, "x_tm": xin[:, -1], "x_cm": xin2[:, -1]}
+        return x, cache
+
+    if spec.attn in ("full", "swa"):
+        h, cache = attention.prefill_cache(
+            params["attn"], layers.rmsnorm(params["norm1"], x, eps), cfg,
+            kind=spec.attn, chunk_size=chunk_size, max_len=max_len)
+        x = x + h
+    elif spec.attn == "mamba":
+        h, cache = mamba.mamba_fwd(
+            params["mamba"], layers.rmsnorm(params["norm1"], x, eps), cfg,
+            chunk_size=chunk_size, return_cache=True)
+        x = x + h
+    else:
+        raise ValueError(f"prefill unsupported for attn kind {spec.attn!r}")
+    xin = layers.rmsnorm(params["norm2"], x, eps)
+    if spec.mlp == "dense":
+        x = x + layers.mlp(params["mlp"], xin)
+    elif spec.mlp == "moe":
+        x = x + moe.moe_block(params["moe"], xin, cfg)
+    return x, cache
+
+
+# --- stage stacking ----------------------------------------------------------
+
+def init_stage(key, cfg: ArchConfig) -> tuple:
+    keys = jax.random.split(key, len(cfg.stage_pattern))
+    return tuple(init_layer(k, cfg, s) for k, s in zip(keys, cfg.stage_pattern))
+
+
+def init_stacked_stages(key, cfg: ArchConfig) -> tuple:
+    """(num_stages, ...)-stacked stage parameters, eval_shape friendly."""
+    keys = jax.random.split(key, cfg.num_stages)
+    return jax.vmap(lambda k: init_stage(k, cfg))(keys)
+
+
+def axes_stacked_stages(cfg: ArchConfig) -> tuple:
+    per_stage = tuple(axes_layer(cfg, s) for s in cfg.stage_pattern)
+    return jax.tree.map(lambda spec: P("stack", *spec),
+                        per_stage, is_leaf=lambda v: isinstance(v, P))

@@ -1,0 +1,138 @@
+"""Shared layers: norms, RoPE, MLPs, embeddings + logical-axis bookkeeping.
+
+Parameters are plain nested dicts so everything is ``jax.eval_shape``-able
+(the dry-run never materializes 72B parameters). Every ``init_*`` has a
+parallel ``axes_*`` returning an identically-structured tree of
+``PartitionSpec`` over *logical* axis names; ``launch/sharding.py`` resolves
+those to mesh axes with divisibility fallbacks.
+
+Logical names used across the model zoo:
+  vocab, embed (d_model), heads (fused q heads*head_dim), kv (fused kv dim),
+  ff, experts, inner (mamba), state, dt_rank, conv, rwkv_heads, head_dim,
+  batch, seq, stack (stacked-stage leading dim, never sharded).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def pick_chunk(seq_len: int, requested: int | None) -> int:
+    """Largest divisor of seq_len that is <= the requested chunk size.
+
+    Chunked layers require chunk | seq_len; VLM prefixes and odd smoke-test
+    lengths snap down to the nearest divisor instead of failing.
+    """
+    if requested is None or requested >= seq_len:
+        return seq_len
+    c = max(1, min(requested, seq_len))
+    while seq_len % c:
+        c -= 1
+    return c
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    scale = (in_dim ** -0.5) if scale is None else scale
+    return (jax.random.normal(key, (in_dim, out_dim), dtype) * scale)
+
+
+# --- RMSNorm -----------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def axes_rmsnorm() -> dict:
+    return {"scale": P("embed")}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * params["scale"]
+
+
+# --- RoPE --------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)                       # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)            # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- SwiGLU / GELU MLP -------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, *, gated: bool = True) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": dense_init(k1, d_model, d_ff, dtype),
+         "down": dense_init(k3, d_ff, d_model, dtype)}
+    if gated:
+        p["gate"] = dense_init(k2, d_model, d_ff, dtype)
+    return p
+
+
+def axes_mlp(*, gated: bool = True) -> dict:
+    p = {"up": P("embed", "ff"), "down": P("ff", "embed")}
+    if gated:
+        p["gate"] = P("embed", "ff")
+    return p
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    up = x @ params["up"]
+    if "gate" in params:
+        act = jax.nn.silu(x @ params["gate"]) * up
+    else:
+        act = jax.nn.gelu(up)
+    return act @ params["down"]
+
+
+# --- Embedding / LM head -----------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> dict:
+    return {"table": jax.random.normal(key, (vocab, d_model), dtype) * 0.02}
+
+
+def axes_embedding() -> dict:
+    return {"table": P("vocab", "embed")}
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return params["table"][tokens]
+
+
+def init_lm_head(key, d_model: int, vocab: int, dtype) -> dict:
+    return {"kernel": dense_init(key, d_model, vocab, dtype)}
+
+
+def axes_lm_head() -> dict:
+    return {"kernel": P("embed", "vocab")}
+
+
+def lm_logits(params: dict, x: jax.Array) -> jax.Array:
+    return x @ params["kernel"]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Token-mean CE; softmax in fp32 regardless of logits dtype."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

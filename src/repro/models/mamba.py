@@ -1,0 +1,151 @@
+"""Mamba (S6) selective state-space layer — Jamba's recurrent half.
+
+Prefill/train uses a chunked selective scan: the depthwise causal conv runs
+over the full sequence (local, cheap), then the state recurrence
+
+    h_t = exp(dt_t * A) . h_{t-1} + dt_t * x_t . B_t,    y_t = h_t . C_t + D x_t
+
+is processed in ``chunk_size`` blocks: within a chunk, ``associative_scan``
+(log-depth, counted exactly by HloCostAnalysis); across chunks, a lax.scan
+carrying h (B, d_inner, d_state). Cost-mode sets chunk_size = seq so the outer
+scan is trip-count 1 (§Roofline methodology). Decode is the single-step
+recurrence with a (conv window, h) cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.config import ArchConfig
+
+
+def init_mamba(key, cfg: ArchConfig) -> dict:
+    d, dt = cfg.d_model, {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    di, ds, dtr = cfg.d_inner, cfg.mamba_d_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": layers.dense_init(ks[0], d, 2 * di, dt),
+        "conv_w": jax.random.normal(ks[1], (cfg.mamba_conv, di), dt) * 0.2,
+        "x_proj": layers.dense_init(ks[2], di, dtr + 2 * ds, dt),
+        "dt_proj": layers.dense_init(ks[3], dtr, di, dt),
+        "dt_bias": jnp.zeros((di,), dt),
+        # S4D-real init: A_log = log(1..d_state), broadcast over channels
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.dense_init(ks[4], di, d, dt),
+    }
+
+
+def axes_mamba() -> dict:
+    return {
+        "in_proj": P("embed", "inner"),
+        "conv_w": P(None, "inner"),
+        "x_proj": P("inner", None),
+        "dt_proj": P(None, "inner"),
+        "dt_bias": P("inner"),
+        "A_log": P("inner", "state"),
+        "D": P("inner"),
+        "out_proj": P("inner", "embed"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. x: (B,S,di); w: (K,di)."""
+    out = jnp.zeros_like(x)
+    K = w.shape[0]
+    for j in range(K):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[K - 1 - j]
+    return out
+
+
+def _ssm_inputs(params, x_conv, cfg: ArchConfig):
+    """(dA, dBx, C) discretization terms from the conv'd activations."""
+    dtr, ds = cfg.dt_rank, cfg.mamba_d_state
+    proj = x_conv @ params["x_proj"]
+    dt_low, Bm, Cm = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_low @ params["dt_proj"] + params["dt_bias"])
+    dt = dt.astype(jnp.float32)                               # (B,S,di)
+    A = -jnp.exp(params["A_log"])                             # (di,ds)
+    dA = jnp.exp(dt[..., None] * A)                           # (B,S,di,ds)
+    dBx = (dt * x_conv.astype(jnp.float32))[..., None] * Bm[..., None, :].astype(jnp.float32)
+    return dA, dBx, Cm.astype(jnp.float32)
+
+
+def mamba_fwd(params, x, cfg: ArchConfig, *, chunk_size: int | None = None,
+              return_cache: bool = False):
+    B, S, _ = x.shape
+    chunk = layers.pick_chunk(S, chunk_size)
+    di, ds = cfg.d_inner, cfg.mamba_d_state
+
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv = jax.nn.silu(_causal_conv(x_in, params["conv_w"]))
+
+    dA, dBx, Cm = _ssm_inputs(params, x_conv, cfg)
+    n_chunks = S // chunk
+
+    def chunk_step(h0, inputs):
+        dA_c, dBx_c, C_c = inputs                             # (B,chunk,di,ds)...
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+        a_cum, b_cum = jax.lax.associative_scan(combine, (dA_c, dBx_c), axis=1)
+        h = b_cum + a_cum * h0[:, None]                       # (B,chunk,di,ds)
+        y = jnp.einsum("bcds,bcs->bcd", h, C_c)
+        return h[:, -1], y
+
+    def split_chunks(t):
+        return jnp.moveaxis(t.reshape(B, n_chunks, chunk, *t.shape[2:]), 1, 0)
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    if n_chunks == 1:
+        # inline: avoid a trip-count-1 call boundary (sharding propagation)
+        h_final, ys = chunk_step(h0, (dA, dBx, Cm))
+        ys = ys[None]
+    else:
+        h_final, ys = jax.lax.scan(chunk_step, h0,
+                                   (split_chunks(dA), split_chunks(dBx),
+                                    split_chunks(Cm)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    y = y + params["D"] * x_conv.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    if return_cache:
+        K = cfg.mamba_conv
+        cache = {"conv": x_in[:, S - (K - 1):].astype(x.dtype), "h": h_final}
+        return out, cache
+    return out
+
+
+# --- decode ------------------------------------------------------------------
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.mamba_d_state), jnp.float32),
+    }
+
+
+def axes_mamba_cache() -> dict:
+    return {"conv": P("batch", None, "inner"), "h": P("batch", "inner", "state")}
+
+
+def mamba_decode(params, x, cache: dict, cfg: ArchConfig) -> tuple[jax.Array, dict]:
+    """x: (B, 1, d) -> (B, 1, d), updated cache."""
+    B = x.shape[0]
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                       # (B,1,di)
+    window = jnp.concatenate([cache["conv"], x_in], axis=1)   # (B,K,di)
+    x_c = jnp.einsum("bkd,kd->bd", window, params["conv_w"])[:, None]
+    x_conv = jax.nn.silu(x_c)
+    dA, dBx, Cm = _ssm_inputs(params, x_conv, cfg)            # (B,1,di,ds)
+    h = dA[:, 0] * cache["h"] + dBx[:, 0]
+    y = jnp.einsum("bds,bs->bd", h, Cm[:, 0])[:, None]
+    y = y + params["D"] * x_conv.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return out, {"conv": window[:, 1:], "h": h}

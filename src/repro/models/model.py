@@ -1,0 +1,295 @@
+"""BackboneLM: top-level model assembly, losses, and step functions.
+
+Supports the three input modes of the assigned architectures:
+  tokens            — decoder LMs (dense / MoE / hybrid / SSM)
+  embeddings        — audio encoder (hubert): precomputed frame embeddings
+                      (frontend stub per DESIGN.md §5) + masked-unit prediction
+  prefix_embeddings — VLM (pixtral): patch-embedding prefix + text tokens
+
+Step functions:
+  loss_fn / make_train_step — next-token (or masked-unit) CE + MoE aux loss,
+      AdamW with fp32 master weights, stage body rematerialized.
+  prefill_step — full-sequence forward returning last-position logits + cache.
+  decode_step  — one token against the cache (full layers: seq cache; SWA:
+      ring buffer; mamba/rwkv: recurrent state).
+
+Everything is jax.eval_shape-compatible; the dry-run lowers these exact
+functions with ShapeDtypeStruct inputs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import blocks, layers
+from repro.models.config import ArchConfig
+from repro.optim import adamw
+
+
+def _dt(cfg: ArchConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# --- parameters ----------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    keys = jax.random.split(key, 6)
+    dt = _dt(cfg)
+    p: dict[str, Any] = {
+        "stages": blocks.init_stacked_stages(keys[0], cfg),
+        "final_norm": layers.init_rmsnorm(cfg.d_model, dt),
+        "head": layers.init_lm_head(keys[1], cfg.d_model, cfg.vocab_size, dt),
+    }
+    if cfg.tail_pattern:
+        tkeys = jax.random.split(keys[2], len(cfg.tail_pattern))
+        p["tail"] = tuple(blocks.init_layer(k, cfg, s)
+                          for k, s in zip(tkeys, cfg.tail_pattern))
+    if cfg.input_mode in ("tokens", "prefix_embeddings"):
+        p["embed"] = layers.init_embedding(keys[3], cfg.vocab_size, cfg.d_model, dt)
+    if cfg.input_mode == "embeddings":
+        p["mask_embed"] = jax.random.normal(keys[4], (cfg.d_model,), dt) * 0.02
+    return p
+
+
+def param_axes(cfg: ArchConfig) -> dict:
+    a: dict[str, Any] = {
+        "stages": blocks.axes_stacked_stages(cfg),
+        "final_norm": layers.axes_rmsnorm(),
+        "head": layers.axes_lm_head(),
+    }
+    if cfg.tail_pattern:
+        a["tail"] = tuple(blocks.axes_layer(cfg, s) for s in cfg.tail_pattern)
+    if cfg.input_mode in ("tokens", "prefix_embeddings"):
+        a["embed"] = layers.axes_embedding()
+    if cfg.input_mode == "embeddings":
+        a["mask_embed"] = P("embed")
+    return a
+
+
+# --- forward -------------------------------------------------------------------
+
+def _input_embeddings(params, batch, cfg: ArchConfig) -> jax.Array:
+    if cfg.input_mode == "tokens":
+        return layers.embed(params["embed"], batch["tokens"])
+    if cfg.input_mode == "embeddings":
+        x = batch["embeddings"].astype(_dt(cfg))
+        if "mask" in batch:
+            x = jnp.where(batch["mask"][..., None], params["mask_embed"], x)
+        return x
+    if cfg.input_mode == "prefix_embeddings":
+        text = layers.embed(params["embed"], batch["tokens"])
+        prefix = batch["patches"].astype(_dt(cfg))
+        return jnp.concatenate([prefix, text], axis=1)
+    raise ValueError(cfg.input_mode)
+
+
+def forward(params, batch, cfg: ArchConfig, *, chunk_size: int | None = None,
+            remat: bool = False, with_aux: bool = False,
+            scan_unroll: bool = False, stage_constraint=None):
+    """Full-sequence forward -> (logits, aux_loss_sum).
+
+    stage_constraint: optional callable(stage_params) -> stage_params applied
+    inside the scan body. Used for explicit FSDP weight gathering: storage
+    stays data-sharded (in_shardings) while the constraint re-shards to the
+    compute layout at the point of use, so XLA moves weight-sized tensors
+    per stage instead of activation-sized ones (EXPERIMENTS.md §Perf).
+    """
+    x = _input_embeddings(params, batch, cfg)
+
+    def stage_body(x, stage_params):
+        if stage_constraint is not None:
+            stage_params = stage_constraint(stage_params)
+        aux: list = [] if with_aux else None
+        for pos, spec in enumerate(cfg.stage_pattern):
+            x = blocks.apply_layer(stage_params[pos], x, cfg, spec,
+                                   chunk_size=chunk_size, collect_aux=aux)
+        aux_sum = (sum(aux) if aux else jnp.zeros((), jnp.float32)) \
+            if with_aux else jnp.zeros((), jnp.float32)
+        return x, aux_sum
+
+    body = jax.checkpoint(stage_body) if remat else stage_body
+    x, aux_stages = jax.lax.scan(body, x, params["stages"], unroll=scan_unroll)
+    aux_total = aux_stages.sum()
+
+    for pos, spec in enumerate(cfg.tail_pattern):
+        aux: list = [] if with_aux else None
+        x = blocks.apply_layer(params["tail"][pos], x, cfg, spec,
+                               chunk_size=chunk_size, collect_aux=aux)
+        if with_aux and aux:
+            aux_total = aux_total + sum(aux)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.lm_logits(params["head"], x)
+    return logits, aux_total
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, chunk_size: int | None = None,
+            remat: bool = True, scan_unroll: bool = False,
+            stage_constraint=None) -> jax.Array:
+    logits, aux = forward(params, batch, cfg, chunk_size=chunk_size,
+                          remat=remat, with_aux=True, scan_unroll=scan_unroll,
+                          stage_constraint=stage_constraint)
+    if cfg.input_mode == "embeddings":
+        # masked-unit prediction (hubert-style): CE only at masked frames
+        lg = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, batch["labels"][..., None], axis=-1)[..., 0]
+        ce = logz - gold
+        mask = batch["mask"].astype(jnp.float32)
+        loss = (ce * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    elif cfg.input_mode == "prefix_embeddings":
+        loss = layers.cross_entropy(logits[:, cfg.num_prefix:], batch["labels"])
+    else:
+        loss = layers.cross_entropy(logits, batch["labels"])
+    return loss + cfg.router_aux_weight * aux
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                    *, chunk_size: int | None = None, remat: bool = True,
+                    scan_unroll: bool = False, stage_constraint=None,
+                    microbatches: int = 1):
+    """(params, opt_state, batch) -> (loss, params, opt_state).
+
+    microbatches > 1 enables gradient accumulation: the global batch splits
+    along its leading axis and is scanned, dividing the live activation set
+    by the microbatch count at the cost of re-gathering FSDP weights per
+    microbatch (EXPERIMENTS.md §Perf discusses the trade).
+    """
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(
+            partial(loss_fn, batch=batch, cfg=cfg, chunk_size=chunk_size,
+                    remat=remat, scan_unroll=scan_unroll,
+                    stage_constraint=stage_constraint))(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            split = jax.tree.map(
+                lambda t: t.reshape(microbatches, t.shape[0] // microbatches,
+                                    *t.shape[1:]), batch)
+
+            def acc_step(carry, mb):
+                loss_acc, grads_acc = carry
+                loss_i, grads_i = grad_fn(params, mb)
+                return (loss_acc + loss_i,
+                        jax.tree.map(jnp.add, grads_acc, grads_i)), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zeros), split)
+            inv = 1.0 / microbatches
+            loss = loss * inv
+            grads = jax.tree.map(lambda g: (g * inv).astype(g.dtype), grads)
+        params, opt_state = adamw.apply(grads, opt_state, opt_cfg)
+        return loss, params, opt_state
+
+    return train_step
+
+
+# --- decode --------------------------------------------------------------------
+
+def init_decode_cache(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    dt = _dt(cfg)
+
+    def stage_cache(_):
+        return tuple(blocks.init_layer_cache(cfg, s, batch, seq_len, dt)
+                     for s in cfg.stage_pattern)
+
+    stages = jax.vmap(stage_cache)(jnp.arange(cfg.num_stages))
+    cache: dict[str, Any] = {"stages": stages, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.tail_pattern:
+        cache["tail"] = tuple(blocks.init_layer_cache(cfg, s, batch, seq_len, dt)
+                              for s in cfg.tail_pattern)
+    return cache
+
+
+def cache_axes(cfg: ArchConfig) -> dict:
+    per_stage = tuple(blocks.axes_layer_cache(s) for s in cfg.stage_pattern)
+    stages = jax.tree.map(lambda spec: P("stack", *spec), per_stage,
+                          is_leaf=lambda v: isinstance(v, P))
+    a: dict[str, Any] = {"stages": stages, "pos": P()}
+    if cfg.tail_pattern:
+        a["tail"] = tuple(blocks.axes_layer_cache(s) for s in cfg.tail_pattern)
+    return a
+
+
+def decode_step(params, cache, batch, cfg: ArchConfig,
+                *, scan_unroll: bool = False) -> tuple[jax.Array, dict]:
+    """One-token serve step. batch = {"tokens": (B, 1)}; returns logits (B,1,V)."""
+    pos = cache["pos"]
+    x = layers.embed(params["embed"], batch["tokens"]) \
+        if cfg.input_mode != "embeddings" else batch["embeddings"]
+
+    def stage_body(x, inputs):
+        stage_params, stage_cache = inputs
+        new_caches = []
+        for i, spec in enumerate(cfg.stage_pattern):
+            x, c = blocks.decode_layer(stage_params[i], x, stage_cache[i],
+                                       pos, cfg, spec)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_stage_caches = jax.lax.scan(stage_body, x,
+                                       (params["stages"], cache["stages"]),
+                                       unroll=scan_unroll)
+    new_cache: dict[str, Any] = {"stages": new_stage_caches, "pos": pos + 1}
+
+    if cfg.tail_pattern:
+        tails = []
+        for i, spec in enumerate(cfg.tail_pattern):
+            x, c = blocks.decode_layer(params["tail"][i], x, cache["tail"][i],
+                                       pos, cfg, spec)
+            tails.append(c)
+        new_cache["tail"] = tuple(tails)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.lm_logits(params["head"], x)
+    return logits, new_cache
+
+
+def prefill_step(params, batch, cfg: ArchConfig,
+                 *, chunk_size: int | None = None,
+                 max_len: int | None = None,
+                 scan_unroll: bool = False) -> tuple[jax.Array, dict]:
+    """Full-sequence prefill -> (last-position logits, decode cache)."""
+    x = _input_embeddings(params, batch, cfg)
+    S = x.shape[1]
+
+    def stage_body(x, stage_params):
+        caches = []
+        for i, spec in enumerate(cfg.stage_pattern):
+            x, c = blocks.prefill_layer(stage_params[i], x, cfg, spec,
+                                        chunk_size=chunk_size, max_len=max_len)
+            caches.append(c)
+        return x, tuple(caches)
+
+    x, stage_caches = jax.lax.scan(stage_body, x, params["stages"],
+                                   unroll=scan_unroll)
+    cache: dict[str, Any] = {"stages": stage_caches,
+                             "pos": jnp.asarray(S, jnp.int32)}
+    if cfg.tail_pattern:
+        tails = []
+        for i, spec in enumerate(cfg.tail_pattern):
+            x, c = blocks.prefill_layer(params["tail"][i], x, cfg, spec,
+                                        chunk_size=chunk_size, max_len=max_len)
+            tails.append(c)
+        cache["tail"] = tuple(tails)
+
+    x = layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = layers.lm_logits(params["head"], x)
+    return logits, cache
+
+
+def encode_step(params, batch, cfg: ArchConfig,
+                *, chunk_size: int | None = None,
+                scan_unroll: bool = False) -> jax.Array:
+    """Encoder-only 'prefill': full-sequence unit logits (hubert)."""
+    logits, _ = forward(params, batch, cfg, chunk_size=chunk_size,
+                        scan_unroll=scan_unroll)
+    return logits

@@ -1,0 +1,127 @@
+"""Mixture-of-Experts block: top-k softmax router + capacity-bounded dispatch.
+
+Dispatch is scatter-based (no (T, E, C) one-hot): each (token, choice) pair
+computes its rank within its expert via a cumulative-sum over the (T, E)
+assignment matrix, drops beyond-capacity overflow (standard token dropping),
+scatters hidden states into (E, C, d) slots, runs the expert FFNs as one
+batched einsum (so compiled FLOPs equal top_k x dense-equivalent — the MoE
+roofline's active-parameter model), and combines with router gates.
+
+Expert weights are logically sharded ("experts" -> model axis when divisible,
+else the expert FFN dim falls back to the model axis — mixtral's 8 experts on
+a 16-way model axis take the fallback; see launch/sharding.py).
+
+The router aux loss is the standard load-balance term
+  E * sum_e f_e * p_e   (f: fraction of tokens routed, p: mean router prob)
+(Switch/Mixtral form), weighted by cfg.router_aux_weight during training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.config import ArchConfig
+
+
+def init_moe(key, cfg: ArchConfig) -> dict:
+    kr, ke = jax.random.split(key)
+    d, dt = cfg.d_model, {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    E = cfg.num_experts
+    keys = jax.random.split(ke, 3)
+    return {
+        "router": layers.dense_init(kr, d, E, dt),
+        "gate": jax.random.normal(keys[0], (E, d, cfg.d_ff), dt) * d**-0.5,
+        "up": jax.random.normal(keys[1], (E, d, cfg.d_ff), dt) * d**-0.5,
+        "down": jax.random.normal(keys[2], (E, cfg.d_ff, d), dt) * cfg.d_ff**-0.5,
+    }
+
+
+def axes_moe() -> dict:
+    return {
+        "router": P("embed", None),
+        "gate": P("experts", "embed", "ff"),
+        "up": P("experts", "embed", "ff"),
+        "down": P("experts", "ff", "embed"),
+    }
+
+
+def capacity(cfg: ArchConfig, num_tokens: int) -> int:
+    c = int(cfg.capacity_factor * num_tokens * cfg.top_k / cfg.num_experts)
+    return max(c, cfg.top_k)
+
+
+def moe_block(params: dict, x: jax.Array, cfg: ArchConfig,
+              *, return_aux: bool = False):
+    """x: (B, S, d) -> (B, S, d) [, aux_loss scalar]."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt @ params["router"]).astype(jnp.float32)      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)           # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = capacity(cfg, T)
+    # rank of each (token, choice) within its expert, in token order
+    flat_e = expert_idx.reshape(T * k)                        # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (T*k, E)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot               # exclusive cumsum
+    rank_in_e = jnp.take_along_axis(ranks, flat_e[:, None], axis=1)[:, 0]
+    keep = rank_in_e < C
+    slot = jnp.where(keep, rank_in_e, C)                      # overflow -> slot C
+
+    # dispatch: (E, C+1, d); slot C is the spill bucket, dropped after compute
+    src = jnp.repeat(jnp.arange(T), k)
+    disp = jnp.zeros((E, C + 1, d), xt.dtype)
+    disp = disp.at[flat_e, slot].add(xt[src] * keep[:, None].astype(xt.dtype))
+
+    # expert FFN, batched over experts (einsum keeps flops = E*C*ffn exact)
+    h = jnp.einsum("ecd,edf->ecf", disp, params["gate"])
+    u = jnp.einsum("ecd,edf->ecf", disp, params["up"])
+    act = jax.nn.silu(h) * u
+    out_e = jnp.einsum("ecf,efd->ecd", act, params["down"])   # (E, C+1, d)
+
+    # combine: gather each kept choice's output, weight by gate
+    gathered = out_e[flat_e, slot]                            # (T*k, d)
+    w = (gate_vals.reshape(T * k) * keep).astype(xt.dtype)
+    y = jnp.zeros((T, d), xt.dtype).at[src].add(gathered * w[:, None])
+    y = y.reshape(B, S, d)
+
+    if not return_aux:
+        return y
+    # load-balance loss over *pre-capacity* assignments
+    frac = jnp.mean(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=(0, 1))
+    mean_prob = probs.mean(0)
+    aux = E * jnp.sum(frac * mean_prob)
+    return y, aux
+
+
+def moe_block_gather(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Dropless per-token expert gather — the decode path.
+
+    Decode is latency-bound and never drops tokens: each token gathers its
+    top-k experts' weights and runs them directly. Compiled FLOPs are exactly
+    T * k * (3 d ff) (active-parameter count) and the dominant cost is the
+    expert-weight HBM traffic — the true decode-MoE regime.
+    """
+    B, S, d = x.shape
+    k = cfg.top_k
+    xt = x.reshape(B * S, d)
+    logits = (xt @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    Wg = params["gate"][expert_idx]                            # (T, k, d, ff)
+    Wu = params["up"][expert_idx]
+    Wd = params["down"][expert_idx]                            # (T, k, ff, d)
+    h = jnp.einsum("td,tkdf->tkf", xt, Wg)
+    u = jnp.einsum("td,tkdf->tkf", xt, Wu)
+    act = jax.nn.silu(h) * u
+    out = jnp.einsum("tkf,tkfd->tkd", act, Wd)
+    y = (out * gate_vals[..., None].astype(out.dtype)).sum(1)
+    return y.reshape(B, S, d).astype(x.dtype)

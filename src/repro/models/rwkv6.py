@@ -1,0 +1,210 @@
+"""RWKV6 "Finch" time-mix (data-dependent decay) + channel-mix.
+
+Per head with state S in R^{hd x hd}:
+
+    y_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+
+where the decay w_t = exp(-exp(w0 + tanh(x_t A) B)) is *data-dependent*
+(the Finch contribution). Prefill/train uses the chunked-parallel form: within
+a chunk, decay products become an attention-like (c x c) masked einsum via
+cumulative log-decays; across chunks, a lax.scan carries S
+(B, H, hd, hd). Cost-mode sets chunk = seq (trip-count-1 outer scan ->
+exact HLO flop counting; the cost-mode program is never executed, so the
+log-domain overflow that a 32k chunk would suffer at runtime is irrelevant —
+memory-mode uses chunk <= 256 in fp32, the standard regime for this trick).
+Decode is the O(hd^2) single-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.config import ArchConfig
+
+LORA_RANK = 32
+
+
+def init_rwkv(key, cfg: ArchConfig) -> dict:
+    d, dt = cfg.d_model, {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    ks = jax.random.split(key, 10)
+    return {
+        "mix": jax.random.uniform(ks[0], (5, d), dt),          # r,k,v,w,g shifts
+        "wr": layers.dense_init(ks[1], d, d, dt),
+        "wk": layers.dense_init(ks[2], d, d, dt),
+        "wv": layers.dense_init(ks[3], d, d, dt),
+        "wg": layers.dense_init(ks[4], d, d, dt),
+        "wo": layers.dense_init(ks[5], d, d, dt),
+        "w0": jnp.zeros((d,), jnp.float32) - 0.5,              # base decay bias
+        "wA": layers.dense_init(ks[6], d, LORA_RANK, dt),
+        "wB": layers.dense_init(ks[7], LORA_RANK, d, dt, scale=0.01),
+        "u": jax.random.normal(ks[8], (H, hd), jnp.float32) * 0.1,
+        "ln_scale": jnp.ones((H, hd), jnp.float32),            # per-head groupnorm
+    }
+
+
+def axes_rwkv() -> dict:
+    return {
+        "mix": P(None, "embed"),
+        "wr": P("embed", "heads"), "wk": P("embed", "heads"),
+        "wv": P("embed", "heads"), "wg": P("embed", "heads"),
+        "wo": P("heads", "embed"),
+        "w0": P("embed"),
+        "wA": P("embed", None), "wB": P(None, "embed"),
+        "u": P("rwkv_heads", "head_dim"),
+        "ln_scale": P("rwkv_heads", "head_dim"),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """x_{t-1} with the step before the sequence = ``prev`` (or zeros)."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _projections(params, x, x_prev, cfg: ArchConfig):
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    B, S, d = x.shape
+    xs = _token_shift(x, x_prev)
+    mix = params["mix"]
+    xr, xk, xv, xw, xg = (x + mix[i] * (xs - x) for i in range(5))
+    r = (xr @ params["wr"]).reshape(B, S, H, hd)
+    k = (xk @ params["wk"]).reshape(B, S, H, hd)
+    v = (xv @ params["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ params["wg"])
+    # Finch data-dependent decay, low-rank modulated, in log domain
+    logw = -jnp.exp(params["w0"] + (jnp.tanh(xw @ params["wA"]) @ params["wB"])
+                    .astype(jnp.float32))                      # (B,S,d), < 0
+    logw = logw.reshape(B, S, H, hd)
+    return r, k, v, g, logw
+
+
+def _head_norm(params, y: jax.Array, eps: float) -> jax.Array:
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    return (y - mu) * jax.lax.rsqrt(var + eps) * params["ln_scale"]
+
+
+def rwkv_time_mix(params, x, cfg: ArchConfig, *, chunk_size: int | None = None,
+                  return_state: bool = False):
+    B, S, d = x.shape
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    chunk = layers.pick_chunk(S, chunk_size)
+    r, k, v, g, logw = _projections(params, x, None, cfg)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    u = params["u"]
+
+    n_chunks = S // chunk
+
+    def split(t):
+        return jnp.moveaxis(t.reshape(B, n_chunks, chunk, H, hd), 1, 0)
+
+    def chunk_step(S0, inputs):
+        r_c, k_c, v_c, lw_c = inputs                           # (B,c,H,hd)
+        lw_cum = jnp.cumsum(lw_c, axis=1)                      # inclusive
+        lw_prev = lw_cum - lw_c                                # exclusive
+        # cross: y_t += (r_t . prod_{j<=t-1} w_j) @ S0
+        q_t = r_c * jnp.exp(lw_prev)                           # (B,c,H,hd)
+        y = jnp.einsum("bchi,bhij->bchj", q_t, S0)
+        # intra: y_t += sum_{i<t} (r_t . prod_{i<j<t} w) . k_i  v_i
+        k_i = k_c * jnp.exp(-lw_cum)
+        att = jnp.einsum("bchd,bihd->bhci", q_t, k_i)          # (B,H,c,c)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(mask, att, 0.0)
+        y = y + jnp.einsum("bhci,bihd->bchd", att, v_c)
+        # bonus diagonal: (r_t . u k_t) v_t
+        bonus = jnp.einsum("bchd,hd,bchd->bch", r_c, u, k_c)
+        y = y + bonus[..., None] * v_c
+        # state to next chunk: S = diag(prod w) S0 + sum_i (prod_{j>i} w . k_i)^T v_i
+        k_dec = k_c * jnp.exp(lw_cum[:, -1:] - lw_cum)
+        S1 = jnp.exp(lw_cum[:, -1])[..., None] * S0 + jnp.einsum(
+            "bchi,bchj->bhij", k_dec, v_c)
+        return S1, y
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    if n_chunks == 1:
+        # inline: avoid a trip-count-1 call boundary (sharding propagation)
+        S_final, ys = chunk_step(S0, (rf, kf, vf, logw))
+        ys = ys[None]
+    else:
+        S_final, ys = jax.lax.scan(chunk_step, S0,
+                                   (split(rf), split(kf), split(vf),
+                                    split(logw)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd)
+    y = _head_norm(params, y, cfg.norm_eps).reshape(B, S, d)
+    out = (y.astype(x.dtype) * g) @ params["wo"]
+    if return_state:
+        return out, S_final
+    return out
+
+
+# --- channel mix -------------------------------------------------------------
+
+def init_channel_mix(key, cfg: ArchConfig) -> dict:
+    d, dt = cfg.d_model, {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    ks = jax.random.split(key, 3)
+    return {
+        "mix": jax.random.uniform(ks[0], (2, d), dt),
+        "wk": layers.dense_init(ks[1], d, cfg.d_ff, dt),
+        "wv": layers.dense_init(ks[2], cfg.d_ff, d, dt),
+        "wr": layers.dense_init(jax.random.fold_in(key, 7), d, d, dt),
+    }
+
+
+def axes_channel_mix() -> dict:
+    return {"mix": P(None, "embed"), "wk": P("embed", "ff"),
+            "wv": P("ff", "embed"), "wr": P("embed", "heads")}
+
+
+def rwkv_channel_mix(params, x: jax.Array, x_prev: jax.Array | None = None) -> jax.Array:
+    xs = _token_shift(x, x_prev)
+    mix = params["mix"]
+    xk = x + mix[0] * (xs - x)
+    xr = x + mix[1] * (xs - x)
+    kk = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    return jax.nn.sigmoid(xr @ params["wr"]) * (kk @ params["wv"])
+
+
+# --- decode ------------------------------------------------------------------
+
+def init_rwkv_cache(cfg: ArchConfig, batch: int, dtype):
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((batch, cfg.d_model), dtype),   # time-mix token shift
+        "x_cm": jnp.zeros((batch, cfg.d_model), dtype),   # channel-mix shift
+    }
+
+
+def axes_rwkv_cache() -> dict:
+    return {"S": P("batch", "rwkv_heads", "head_dim", None),
+            "x_tm": P("batch", "embed"), "x_cm": P("batch", "embed")}
+
+
+def rwkv_decode(params_tm, params_cm, norm1, norm2, x, cache, cfg: ArchConfig,
+                eps: float) -> tuple[jax.Array, dict]:
+    """Full RWKV layer decode step: x (B,1,d) -> (B,1,d), new cache."""
+    B = x.shape[0]
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+
+    xin = layers.rmsnorm(norm1, x, eps)
+    r, k, v, g, logw = _projections(params_tm, xin, cache["x_tm"], cfg)
+    rf, kf, vf = (t.astype(jnp.float32)[:, 0] for t in (r, k, v))  # (B,H,hd)
+    w = jnp.exp(logw[:, 0])
+    S = cache["S"]
+    kv = jnp.einsum("bhi,bhj->bhij", kf, vf)
+    y = jnp.einsum("bhi,bhij->bhj", rf,
+                   S + params_tm["u"][None, :, :, None] * kv)
+    S_new = w[..., None] * S + kv
+    y = _head_norm(params_tm, y[:, None].reshape(B, 1, H, hd), cfg.norm_eps)
+    y = y.reshape(B, 1, cfg.d_model).astype(x.dtype) * g
+    x = x + y @ params_tm["wo"]
+
+    xin2 = layers.rmsnorm(norm2, x, eps)
+    out = rwkv_channel_mix(params_cm, xin2, cache["x_cm"])
+    x = x + out
+    new_cache = {"S": S_new, "x_tm": xin[:, 0], "x_cm": xin2[:, 0]}
+    return x, new_cache

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, apply, init, schedule
+
+__all__ = ["AdamWConfig", "apply", "init", "schedule"]

@@ -1,0 +1,72 @@
+"""AdamW with fp32 master weights (mixed-precision training substrate).
+
+Model params live in bf16 (compute dtype); the optimizer keeps an fp32 master
+copy plus fp32 first/second moments. ``apply`` consumes bf16 grads, updates
+the master, and emits freshly-cast bf16 params — the standard TPU recipe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params: Any) -> dict:
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return {"master": master,
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def apply(grads: Any, state: dict, cfg: AdamWConfig) -> tuple[Any, dict]:
+    """Returns (new bf16-cast params, new state)."""
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step_ = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        p = p - lr * (step_ + cfg.weight_decay * p)
+        return m, v, p
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(state["master"])
+    new = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    m_new = treedef.unflatten([t[0] for t in new])
+    v_new = treedef.unflatten([t[1] for t in new])
+    p_new = treedef.unflatten([t[2] for t in new])
+    params_out = jax.tree.map(lambda p, g: p.astype(g.dtype), p_new, grads)
+    return params_out, {"master": p_new, "m": m_new, "v": v_new, "count": count}

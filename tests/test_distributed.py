@@ -1,0 +1,70 @@
+"""On-mesh protocol tests — run in a subprocess with 8 host devices.
+
+(jax locks the device count at first init, so the multi-device assertions
+live in a child process with XLA_FLAGS set; the parent only checks output.)
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+_CHILD = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro import core
+from repro.core import probe
+from repro.launch import mesh as mesh_lib
+
+assert jax.device_count() == 8, jax.device_count()
+mesh = mesh_lib.make_host_mesh((4, 2), ("data", "model"))
+
+k = jax.random.PRNGKey(0)
+A = jax.random.normal(k, (256, 16)); b = jax.random.normal(jax.random.PRNGKey(1), (256,))
+ref = core.compute_stats(A, b)
+
+# 1) distributed == local (Thm 1 on the mesh; ONE psum = one round)
+s = core.distributed_stats(A, b, mesh, client_axes=("data",))
+np.testing.assert_allclose(s.gram, ref.gram, rtol=1e-4, atol=1e-4)
+
+# 2) dropout mask (Thm 8)
+part = jnp.array([1., 0., 1., 1.])
+s_d = core.distributed_stats(A, b, mesh, client_axes=("data",), participation=part)
+keep = np.r_[0:64, 128:256]
+s_ref = core.compute_stats(A[keep], b[keep])
+np.testing.assert_allclose(s_d.gram, s_ref.gram, rtol=1e-4, atol=1e-4)
+
+# 3) per-client DP noise before the psum (Alg 2), symmetric result
+nf = core.make_dp_noise_fn(jax.random.PRNGKey(9), 2.0, 1e-5, 16)
+s_dp = core.distributed_stats(A, b, mesh, client_axes=("data",), noise_fn=nf)
+g = np.asarray(s_dp.gram)
+assert not np.allclose(g, np.asarray(ref.gram))
+np.testing.assert_allclose(g, g.T, atol=1e-4)
+
+# 4) one all-reduce of exactly d^2+d+1 floats in the compiled HLO
+lowered = jax.jit(lambda a, bb: core.distributed_stats(a, bb, mesh)).lower(A, b)
+txt = lowered.compile().as_text()
+n_ar = txt.count(" all-reduce(") + txt.count(" all-reduce-start(")
+assert n_ar >= 1, "fusion must lower to an all-reduce"
+
+# 5) one-shot probe on the mesh == single-device probe (linear feature map)
+W = jax.random.normal(jax.random.PRNGKey(3), (16, 8))
+feat = lambda x: jnp.tanh(x @ W)
+y = jax.random.normal(jax.random.PRNGKey(4), (256,))
+r_mesh = probe.one_shot_probe(feat, A, y, sigma=0.01, mesh=mesh)
+r_local = probe.one_shot_probe(feat, A, y, sigma=0.01)
+np.testing.assert_allclose(r_mesh.weights, r_local.weights, rtol=1e-3, atol=1e-4)
+
+print("DISTRIBUTED-OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_protocol_8dev():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    out = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "DISTRIBUTED-OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,142 @@
+"""Federated runtime: protocols, comm accounting, iterative baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs, core, data, fed
+
+RC = configs.RIDGE
+
+
+def _ds(seed=0, **kw):
+    defaults = dict(num_clients=8, samples_per_client=100, dim=20, gamma=0.5)
+    defaults.update(kw)
+    return data.generate(jax.random.PRNGKey(seed), **defaults)
+
+
+class TestDataGenerator:
+    def test_shapes_and_determinism(self):
+        ds = _ds()
+        assert ds.num_clients == 8 and ds.dim == 20
+        A, b = ds.stacked()
+        assert A.shape == (800, 20) and b.shape == (800,)
+        ds2 = _ds()
+        np.testing.assert_array_equal(ds.test_A, ds2.test_A)
+
+    def test_gamma_controls_heterogeneity(self):
+        """Client means spread with gamma (paper's knob)."""
+        def mean_spread(gamma):
+            ds = _ds(gamma=gamma)
+            mus = np.stack([np.asarray(a).mean(0) for a, _ in ds.clients])
+            return np.linalg.norm(mus, axis=1).mean()
+        assert mean_spread(1.0) > mean_spread(0.0) + 0.3
+
+    def test_noise_floor(self):
+        """Bayes MSE ~= noise_std^2 = 0.01 (module-note calibration)."""
+        ds = _ds(num_clients=20, samples_per_client=500, dim=50)
+        w = fed.run_centralized(ds, 0.01).weights
+        mse = float(core.mse(ds.test_A, ds.test_b, w))
+        assert 0.007 < mse < 0.014
+
+
+class TestProtocols:
+    def test_one_shot_equals_centralized(self):
+        ds = _ds()
+        one = fed.run_one_shot(ds, 0.01)
+        cen = fed.run_centralized(ds, 0.01)
+        np.testing.assert_allclose(one.weights, cen.weights, rtol=1e-3,
+                                   atol=1e-5)
+        assert one.rounds == 1
+
+    def test_dropout_exact_on_subset(self):
+        ds = _ds()
+        part = [True, True, False, False, True, False, True, True]
+        res = fed.run_one_shot(ds, 0.01, participating=part)
+        A = jnp.concatenate([a for (a, _), p in zip(ds.clients, part) if p])
+        b = jnp.concatenate([b for (_, b), p in zip(ds.clients, part) if p])
+        w_ref = core.solve_ridge(core.compute_stats(A, b), 0.01)
+        np.testing.assert_allclose(res.weights, w_ref, rtol=1e-3, atol=1e-5)
+        assert res.extras["participating_clients"] == sum(part)
+
+    def test_projected_protocol(self):
+        ds = _ds(dim=64)
+        res = fed.run_one_shot_projected(ds, 0.01, 32, key=jax.random.PRNGKey(5))
+        assert res.weights.shape == (64,)
+        assert res.comm.upload_floats_per_client == 32 * 33 // 2 + 32
+
+    def test_dp_protocol_noisy_but_sane(self):
+        ds = _ds(num_clients=20, samples_per_client=500, dim=30)
+        res = fed.run_one_shot(ds, 0.01, dp=(5.0, 1e-5),
+                               dp_key=jax.random.PRNGKey(3))
+        clean = fed.run_one_shot(ds, 0.01)
+        m_dp = float(core.mse(ds.test_A, ds.test_b, res.weights))
+        m_cl = float(core.mse(ds.test_A, ds.test_b, clean.weights))
+        assert m_dp != m_cl and m_dp < 20 * m_cl + 0.1
+
+
+class TestCommAccounting:
+    def test_theorem_4_upload(self):
+        c = fed.one_shot_comm(100, 20)
+        assert c.upload_floats_per_client == 100 * 101 // 2 + 100
+        assert c.download_floats_per_client == 100
+        f = fed.fedavg_comm(100, 20, 200)
+        assert f.upload_floats_per_client == 200 * 100
+
+    def test_corollary_2_crossover(self):
+        assert fed.crossover_rounds(100) == 26.25
+        # one-shot total < fedavg total iff R > (d+5)/4
+        for d in (20, 100, 400):
+            R = int(fed.crossover_rounds(d)) + 2
+            assert fed.one_shot_comm(d, 10).total_bytes < \
+                fed.fedavg_comm(d, 10, R).total_bytes
+            R = max(int(fed.crossover_rounds(d)) - 2, 1)
+            assert fed.one_shot_comm(d, 10).total_bytes >= \
+                fed.fedavg_comm(d, 10, R).total_bytes
+
+
+class TestIterative:
+    def test_fedavg_converges_iid(self):
+        ds = _ds(gamma=0.0)
+        res = fed.run_iterative(ds, fed.IterativeConfig(rounds=300, sigma=0.01))
+        oracle = fed.run_centralized(ds, 0.01)
+        m = float(core.mse(ds.test_A, ds.test_b, res.weights))
+        mo = float(core.mse(ds.test_A, ds.test_b, oracle.weights))
+        assert m < 1.05 * mo
+
+    def test_fedprox_runs(self):
+        ds = _ds()
+        res = fed.run_iterative(ds, fed.IterativeConfig(rounds=50, sigma=0.01,
+                                                        prox_mu=0.01))
+        assert np.isfinite(float(core.mse(ds.test_A, ds.test_b, res.weights)))
+
+    def test_history_tracking(self):
+        ds = _ds()
+        res = fed.run_iterative(ds, fed.IterativeConfig(rounds=30, sigma=0.01),
+                                track_history=True)
+        assert res.extras["history"].shape == (30, ds.dim)
+
+    def test_prop4_single_gradient_step_insufficient(self):
+        ds = _ds(num_clients=20, samples_per_client=500, dim=50)
+        one = fed.run_one_shot(ds, 0.01)
+        m_one = float(core.mse(ds.test_A, ds.test_b, one.weights))
+        best = min(float(core.mse(ds.test_A, ds.test_b,
+                                  fed.one_gradient_step(ds, float(eta))))
+                   for eta in np.logspace(-7, -1, 25))
+        assert best > 1.5 * m_one
+
+    def test_client_sampling(self):
+        ds = _ds()
+        res = fed.run_iterative(ds, fed.IterativeConfig(
+            rounds=60, sigma=0.01, sample_fraction=0.5))
+        assert np.isfinite(float(core.mse(ds.test_A, ds.test_b, res.weights)))
+
+
+class TestLocoCVProtocol:
+    def test_runs_and_accounts_overhead(self):
+        ds = _ds()
+        sigmas = [1e-3, 1e-2, 1e-1]
+        best, res = fed.run_loco_cv(ds, sigmas)
+        assert best in sigmas
+        base = fed.one_shot_comm(ds.dim, ds.num_clients)
+        assert res.comm.upload_floats_per_client == \
+            base.upload_floats_per_client + len(sigmas)

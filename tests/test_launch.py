@@ -1,0 +1,127 @@
+"""Launch machinery units: collective parsing, roofline math, input specs.
+
+These run without multi-device state (spec building is pure eval_shape; the
+HLO parser works on text) — the actual lower+compile passes live in the
+dry-run sweep (experiments/dryrun_*.log), not in pytest.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.launch import roofline, specs
+from repro.launch.dryrun import parse_collectives
+from repro.models import model
+from repro.models.config import INPUT_SHAPES, shape_applicable
+
+_HLO = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), dimensions={0}
+  %ar.1 = f32[256,128]{1,0} all-reduce-start(%y), to_apply=%sum
+  %tup = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(%a, %b)
+  %cp = u8[100]{0} collective-permute(%c)
+  %not_a_collective = f32[999]{0} add(%p, %q)
+"""
+
+
+class TestCollectiveParse:
+    def test_kinds_and_bytes(self):
+        out = parse_collectives(_HLO)
+        assert out["all-gather"] == 16 * 1024 * 2
+        assert out["all-reduce"] == 256 * 128 * 4
+        assert out["all-to-all"] == 2 * 8 * 8 * 4
+        assert out["collective-permute"] == 100
+        assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+    def test_ignores_non_collectives(self):
+        assert parse_collectives("%z = f32[4]{0} add(%a, %b)")["total"] == 0
+
+
+class TestRooflineMath:
+    def _record(self):
+        return {
+            "arch": "yi-9b", "shape": "train_4k", "kind": "train",
+            "cost_2stage": {"flops": 100.0, "bytes": 10.0,
+                            "collectives": {"all-reduce": 8, "total": 8}},
+            "cost_4stage": {"flops": 180.0, "bytes": 18.0,
+                            "collectives": {"all-reduce": 14, "total": 14}},
+        }
+
+    def test_linear_extrapolation(self):
+        r = roofline.analyze(self._record())
+        n = configs.get("yi-9b").num_stages  # 48
+        assert r.flops == pytest.approx(100 + (n - 2) * 40)
+        assert r.coll_bytes == pytest.approx(8 + (n - 2) * 3)
+
+    def test_negative_delta_clamped(self):
+        rec = self._record()
+        rec["cost_4stage"]["flops"] = 50.0  # partitioner noise
+        r = roofline.analyze(rec)
+        assert r.flops == pytest.approx(100.0)
+
+    def test_skip_records_return_none(self):
+        assert roofline.analyze({"skipped": "reason"}) is None
+        assert roofline.analyze({"error": "boom"}) is None
+
+    def test_analytic_memory_positive_and_sane(self):
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            b = roofline.analytic_hbm_bytes("yi-9b", shape)
+            assert 0 < b < 1e13
+        # decode is dominated by weights+cache, much smaller than training
+        assert roofline.analytic_hbm_bytes("yi-9b", "decode_32k") < \
+            roofline.analytic_hbm_bytes("yi-9b", "train_4k")
+
+    def test_model_flops_match_param_count(self):
+        r = roofline._model_flops("yi-9b", "train_4k")
+        cfg = configs.get("yi-9b")
+        expect = 6 * cfg.active_param_count() * 256 * 4096 / 256
+        assert r == pytest.approx(expect)
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("arch", list(configs.ARCH_IDS))
+    def test_batch_specs_cover_every_runnable_shape(self, arch):
+        cfg = configs.get(arch)
+        for shape in INPUT_SHAPES.values():
+            ok, _ = shape_applicable(cfg, shape)
+            if not ok:
+                continue
+            b = specs.batch_specs(cfg, shape)
+            if shape.kind == "decode":
+                assert b["tokens"].shape == (shape.global_batch, 1)
+            elif cfg.input_mode == "prefix_embeddings":
+                total = b["tokens"].shape[1] + cfg.num_prefix
+                assert total == shape.seq_len
+
+    def test_skip_matrix_is_exactly_seven(self):
+        skips = sum(
+            0 if shape_applicable(configs.get(a), s)[0] else 1
+            for a in configs.ARCH_IDS for s in INPUT_SHAPES.values())
+        assert skips == 7
+
+    def test_param_specs_match_analytic_count(self):
+        """eval_shape totals match config.param_count within 2%.
+
+        param_count feeds the roofline's MODEL_FLOPS = 6 N D; small analytic
+        drift (LoRA decay ranks, dt_rank rounding) is immaterial there.
+        """
+        import math
+
+        import jax
+
+        for arch in ("yi-9b", "mixtral-8x22b", "rwkv6-1.6b"):
+            cfg = configs.get(arch)
+            p = specs.params_specs(cfg)
+            # python ints: jnp.prod would overflow int32 on 8B+ params
+            total = sum(math.prod(l.shape) for l in jax.tree.leaves(p))
+            assert abs(total - cfg.param_count()) < 0.02 * total, \
+                (arch, total, cfg.param_count())
+
+    def test_cache_specs_shapes(self):
+        cfg = configs.get("gemma3-27b")
+        c = specs.cache_specs(cfg, INPUT_SHAPES["long_500k"])
+        # swa slots in the stage get window-length ring buffers
+        swa_cache = c["stages"][0]["k"]
+        assert swa_cache.shape == (cfg.num_stages, 1, cfg.window,
+                                   cfg.num_kv_heads, cfg.head_dim)
+        # the global (full) slot keeps the whole sequence
+        full_cache = c["stages"][5]["k"]
+        assert full_cache.shape[2] == INPUT_SHAPES["long_500k"].seq_len

@@ -1,0 +1,69 @@
+"""Props 2/3 (random projection) and the RFF kernel extension."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+
+
+class TestProjection:
+    def test_shapes_and_comm(self):
+        R = core.make_projection(jax.random.PRNGKey(0), 64, 16)
+        assert R.shape == (64, 16)
+        assert core.upload_floats(64) == 64 * 65 // 2 + 64
+        assert core.upload_floats(64, 16) == 16 * 17 // 2 + 16
+
+    def test_error_decreases_with_m(self):
+        """Prop 3: larger m -> better recovery of w (monotone trend)."""
+        k = jax.random.PRNGKey(0)
+        A = jax.random.normal(k, (2000, 128))
+        w_star = jax.random.normal(jax.random.PRNGKey(1), (128,))
+        b = A @ w_star
+        w_exact = core.solve_ridge(core.compute_stats(A, b), 0.01)
+        errs = []
+        for m in (16, 64, 128):
+            Rm = core.make_projection(jax.random.PRNGKey(2), 128, m)
+            v = core.solve_ridge(core.projected_stats(A, b, Rm), 0.01)
+            w_m = core.lift(v, Rm)
+            errs.append(float(jnp.linalg.norm(w_m - w_exact) /
+                              jnp.linalg.norm(w_exact)))
+        assert errs[0] > errs[1] > errs[2]
+        assert errs[2] < 0.05  # m == d nearly exact
+
+    def test_jl_distance_preservation(self):
+        """Prop 2: pairwise distances preserved within modest distortion."""
+        k = jax.random.PRNGKey(3)
+        X = jax.random.normal(k, (30, 256))
+        R = core.make_projection(jax.random.PRNGKey(4), 256, 128)
+        Xp = core.project_data(X, R)
+        d_orig = np.linalg.norm(np.asarray(X)[:, None] - np.asarray(X)[None], axis=-1)
+        d_proj = np.linalg.norm(np.asarray(Xp)[:, None] - np.asarray(Xp)[None], axis=-1)
+        iu = np.triu_indices(30, 1)
+        ratio = d_proj[iu] / d_orig[iu]
+        assert 0.6 < ratio.min() and ratio.max() < 1.4
+
+    def test_invalid_m(self):
+        with pytest.raises(ValueError):
+            core.make_projection(jax.random.PRNGKey(0), 8, 16)
+
+
+class TestRFF:
+    def test_kernel_approximation(self):
+        k = jax.random.PRNGKey(0)
+        X = jax.random.normal(k, (40, 6))
+        feat = core.make_rff(jax.random.PRNGKey(1), 6, 2048, lengthscale=1.5)
+        K_hat = np.asarray(feat(X) @ feat(X).T)
+        K_true = np.asarray(core.kernel_gram_exact(X, X, lengthscale=1.5))
+        assert np.abs(K_hat - K_true).mean() < 0.05
+
+    def test_one_shot_on_features_is_exact(self):
+        """Fusion applies verbatim in feature space (Thm 2 on phi(A))."""
+        k = jax.random.PRNGKey(0)
+        X = jax.random.normal(k, (300, 4))
+        y = jnp.sin(2 * X[:, 0]) + 0.1 * jax.random.normal(k, (300,))
+        feat = core.make_rff(jax.random.PRNGKey(1), 4, 64)
+        stats = [core.rff_stats(X[i::3], y[i::3], feat) for i in range(3)]
+        w_fed = core.solve_ridge(core.fuse_stats(stats), 0.01)
+        w_cen = core.solve_ridge(core.compute_stats(feat(X), y), 0.01)
+        np.testing.assert_allclose(w_fed, w_cen, rtol=2e-3, atol=2e-4)

@@ -1,0 +1,88 @@
+"""End-to-end behaviour: the paper's protocol inside the full framework.
+
+1. One-shot fusion on heterogeneous clients == centralized oracle (Thm 2/5).
+2. A small backbone trains (loss decreases) with the framework's train step.
+3. The paper's technique as a first-class feature: freeze the backbone and
+   fit its readout head with one-shot federated probing; the probe head
+   equals the centralized ridge fit on the same features.
+4. Checkpoint round-trips training state.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint, configs, core, data, fed
+from repro.core import probe
+from repro.data import BatchSpec, TokenPipeline
+from repro.models import model
+from repro.optim import adamw
+
+
+def test_protocol_end_to_end():
+    ds = data.generate(jax.random.PRNGKey(0), num_clients=12,
+                       samples_per_client=200, dim=40, gamma=0.8)
+    one = fed.run_one_shot(ds, 0.01)
+    cen = fed.run_centralized(ds, 0.01)
+    np.testing.assert_allclose(one.weights, cen.weights, rtol=1e-3, atol=1e-5)
+    fa = fed.run_iterative(ds, fed.IterativeConfig(rounds=100, sigma=0.01))
+
+    # one-shot is the exact minimizer of the centralized ridge objective —
+    # guaranteed not-worse than any iterate ON THE OBJECTIVE (test MSE can
+    # tie-break either way on a single seed; the benchmarks average trials).
+    A, b = ds.stacked()
+    def objective(w):
+        return float(jnp.sum((A @ w - b) ** 2) + 0.01 * jnp.sum(w ** 2))
+    assert objective(one.weights) <= objective(fa.weights) + 1e-4
+    assert one.comm.total_bytes < fa.comm.total_bytes
+
+
+def test_backbone_trains_and_probes(tmp_path):
+    cfg = configs.get_reduced("yi-9b")
+    pipe = TokenPipeline(BatchSpec(global_batch=4, seq_len=32,
+                                   vocab_size=cfg.vocab_size), seed=0)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=30,
+                                weight_decay=0.0)
+    step = jax.jit(model.make_train_step(cfg, opt_cfg, chunk_size=16))
+    opt = adamw.init(params)
+
+    losses = []
+    for i in range(12):
+        loss, params, opt = step(params, opt, pipe.batch(i % 3))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.1, losses  # actually learning
+
+    # checkpoint round-trip mid-training
+    checkpoint.save_pytree(params, tmp_path, step=12)
+    restored = checkpoint.load_pytree(params, tmp_path, step=12)
+    same = jax.tree.all(jax.tree.map(
+        lambda a, b: bool(np.allclose(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))),
+        params, restored))
+    assert same
+
+    # the paper's technique on top: one-shot federated linear probe of
+    # frozen backbone features
+    def feature_fn(tokens):
+        x = model._input_embeddings(params, {"tokens": tokens}, cfg)
+        return x.mean(axis=1)  # pooled features of the frozen backbone
+
+    toks = pipe.batch(0)["tokens"]
+    feats_key = jax.random.PRNGKey(5)
+    w_true = jax.random.normal(feats_key, (cfg.d_model,))
+    y = feature_fn(toks) @ w_true + 0.01 * jax.random.normal(feats_key, (4,))
+
+    res = probe.one_shot_probe(feature_fn, toks, y, sigma=1e-3)
+    feats = feature_fn(toks)
+    w_ref = core.solve_ridge(core.compute_stats(feats, y), 1e-3)
+    np.testing.assert_allclose(res.weights, w_ref, rtol=1e-3, atol=1e-4)
+
+
+def test_probe_multi_target():
+    k = jax.random.PRNGKey(0)
+    X = jax.random.normal(k, (100, 8))
+    Y = jax.random.normal(jax.random.fold_in(k, 1), (100, 3))
+    res = probe.one_shot_probe(lambda x: jnp.tanh(x), X, Y, sigma=0.01)
+    assert res.weights.shape == (8, 3)
+    head = probe.head_as_params(res)
+    assert head["kernel"].shape == (8, 3)
