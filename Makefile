@@ -1,0 +1,26 @@
+PY ?= python
+
+# Tier-1 gate: the full test suite plus a fast fusion-engine perf smoke so
+# regressions in the cached-solve / batched-sigma paths show up in CI output
+# (the smoke writes experiments/repro/fusion_engine_bench.json and exits
+# nonzero if any perf claim fails).
+.PHONY: tier1
+tier1:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+	PYTHONPATH=src $(PY) benchmarks/fusion_engine_bench.py --smoke
+
+.PHONY: test
+test:
+	PYTHONPATH=src $(PY) -m pytest -q
+
+.PHONY: bench
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run
+
+.PHONY: bench-engine
+bench-engine:
+	PYTHONPATH=src $(PY) benchmarks/fusion_engine_bench.py
+
+.PHONY: serve-fusion
+serve-fusion:
+	PYTHONPATH=src $(PY) src/repro/launch/serve.py --mode fusion

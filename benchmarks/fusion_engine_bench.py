@@ -1,0 +1,143 @@
+"""FusionEngine benchmark: cached vs cold solves, vmapped multi-sigma CV.
+
+Three measurements, each a row and (where the paper architecture promises a
+win) a claim:
+
+  * cached_solve  — repeated ``engine.solve(sigma)`` (O(d^2) triangular
+                    solves off the cached factor) vs the reference
+                    ``fusion.solve_ridge`` which refactorizes at O(d^3/3).
+  * batch_solve   — ``engine.solve_batch`` over an S-point sigma grid (one
+                    vmapped factor+solve) vs the equivalent per-sigma
+                    ``solve_ridge`` loop.
+  * loco_cv       — ``engine.loco_cv`` (ONE vectorized K*S solve) vs the
+                    reference sequential ``fusion.loco_cv``.
+
+Usage: PYTHONPATH=src:. python benchmarks/fusion_engine_bench.py [--smoke]
+Emits a CSV + BENCH JSON under experiments/repro/ and prints a BENCH line.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+if __package__ in (None, ""):  # `python benchmarks/fusion_engine_bench.py`
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import common
+from repro.core import fusion
+from repro.core.sufficient_stats import compute_stats
+from repro.data import synthetic
+from repro.server import FusionEngine
+
+
+def _median_time(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def run(smoke: bool = False) -> list[dict]:
+    dim = 192 if smoke else 384
+    num_clients = 8 if smoke else 16
+    reps = 5 if smoke else 15
+    sigmas = [float(s) for s in jnp.logspace(-3, 1, 8 if smoke else 16)]
+
+    ds = synthetic.generate(jax.random.PRNGKey(0), num_clients=num_clients,
+                            samples_per_client=max(2 * dim // num_clients, 64),
+                            dim=dim)
+    stats = {k: compute_stats(A_k, b_k)
+             for k, (A_k, b_k) in enumerate(ds.clients)}
+    engine = FusionEngine.from_clients(stats)
+    fused = engine.stats
+    sigma0 = sigmas[len(sigmas) // 2]
+
+    claims = common.Claims("fusion_engine")
+    rows = []
+
+    # 1. cached single-sigma solve vs cold reference solve.
+    t_cold = _median_time(lambda: fusion.solve_ridge(fused, sigma0), reps)
+    engine.solve(sigma0)  # factor once
+    t_cached = _median_time(lambda: engine.solve(sigma0), reps)
+    rows.append({"name": f"solve_d{dim}", "cold_us": t_cold * 1e6,
+                 "cached_us": t_cached * 1e6,
+                 "speedup": t_cold / t_cached})
+    claims.check("cached_solve_beats_cold", t_cached < t_cold,
+                 f"{t_cold / t_cached:.1f}x")
+
+    # 2. vmapped multi-sigma solve vs the per-sigma reference loop.
+    def loop():
+        return [fusion.solve_ridge(fused, s) for s in sigmas]
+
+    fresh = FusionEngine.from_stats(fused)
+    fresh.solve_batch(sigmas, method="chol")  # compile
+
+    def batch():
+        eng = FusionEngine.from_stats(fused)  # cold cache each rep
+        return eng.solve_batch(sigmas, method="chol")
+
+    t_loop = _median_time(loop, reps)
+    t_batch = _median_time(batch, reps)
+    rows.append({"name": f"multi_sigma_S{len(sigmas)}_d{dim}",
+                 "loop_us": t_loop * 1e6, "batch_us": t_batch * 1e6,
+                 "speedup": t_loop / t_batch})
+    claims.check("solve_batch_beats_per_sigma_loop", t_batch < t_loop,
+                 f"S={len(sigmas)}: {t_loop / t_batch:.1f}x")
+
+    # 2b. spectral serving path: eigh cached, any sigma grid is matmuls.
+    engine.solve_batch(sigmas, method="spectral")  # pays + caches the eigh
+    t_spec = _median_time(
+        lambda: engine.solve_batch(sigmas, method="spectral"), reps)
+    rows.append({"name": f"spectral_warm_S{len(sigmas)}_d{dim}",
+                 "loop_us": t_loop * 1e6, "batch_us": t_spec * 1e6,
+                 "speedup": t_loop / t_spec})
+
+    # 3. LOCO CV: one vectorized pass vs the sequential reference.
+    cv_sigmas = sigmas[: 8 if smoke else 12]
+    client_list = list(stats.values())
+    data_list = list(ds.clients)
+    engine.loco_cv(data_list, cv_sigmas)  # compile
+    t_ref = _median_time(
+        lambda: fusion.loco_cv(client_list, data_list, cv_sigmas)[1],
+        max(reps // 3, 2))
+    t_eng = _median_time(lambda: engine.loco_cv(data_list, cv_sigmas)[1],
+                         max(reps // 3, 2))
+    best_ref, _ = fusion.loco_cv(client_list, data_list, cv_sigmas)
+    best_eng, _ = engine.loco_cv(data_list, cv_sigmas)
+    rows.append({"name": f"loco_K{num_clients}_S{len(cv_sigmas)}_d{dim}",
+                 "reference_ms": t_ref * 1e3, "engine_ms": t_eng * 1e3,
+                 "speedup": t_ref / t_eng})
+    claims.check("vectorized_loco_beats_reference", t_eng < t_ref,
+                 f"K*S={num_clients * len(cv_sigmas)}: {t_ref / t_eng:.1f}x")
+    claims.check("loco_same_sigma_choice", best_ref == best_eng,
+                 f"ref {best_ref} vs engine {best_eng}")
+
+    common.write_csv("fusion_engine_bench", rows)
+    bench = {"smoke": smoke, "dim": dim, "rows": rows,
+             "claims": claims.rows()}
+    common.OUT_DIR.mkdir(parents=True, exist_ok=True)
+    (common.OUT_DIR / "fusion_engine_bench.json").write_text(
+        json.dumps(bench, indent=2))
+    print("BENCH " + json.dumps({r["name"]: round(r["speedup"], 2)
+                                 for r in rows}))
+    return claims.rows()
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few reps for CI")
+    args = ap.parse_args()
+    failed = [c for c in run(smoke=args.smoke) if not c["pass"]]
+    sys.exit(1 if failed else 0)

@@ -11,14 +11,16 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (extensions, fig_3, kernels_bench, table_ii,
-                            table_iii, table_iv, table_v, table_vi, table_vii)
+    from benchmarks import (extensions, fig_3, fusion_engine_bench,
+                            kernels_bench, table_ii, table_iii, table_iv,
+                            table_v, table_vi, table_vii)
 
     modules = [
         ("table_ii", table_ii), ("table_iii", table_iii),
         ("table_iv", table_iv), ("fig_3", fig_3), ("table_v", table_v),
         ("table_vi", table_vi), ("table_vii", table_vii),
         ("extensions", extensions), ("kernels", kernels_bench),
+        ("fusion_engine", fusion_engine_bench),
     ]
     all_claims = []
     for name, mod in modules:

@@ -4,6 +4,13 @@ Implements paper Algorithm 1 Phase 3 plus:
   * Theorem 3 / Corollary 1 — SPD solve via Cholesky, condition-number util
   * Theorem 8 — dropout fusion (exact solution on the participating subset)
   * Proposition 5 — federated leave-one-client-out cross-validation for sigma
+
+These are the pure-function REFERENCE implementations: every call factors
+from scratch and the LOCO loop is deliberately the paper's sequential
+K * |Sigma| recipe. The production path — cached/incrementally-updated
+factors, batched multi-sigma solves, one-pass LOCO — is
+``repro.server.FusionEngine``, whose equivalence to these functions is
+pinned by tests/test_fusion_engine.py.
 """
 from __future__ import annotations
 

@@ -59,6 +59,14 @@ class SuffStats:
             count=self.count + other.count,
         )
 
+    def __sub__(self, other: "SuffStats") -> "SuffStats":
+        # Additivity also licenses removal (Thm 8 dropout, Prop 5 LOCO).
+        return SuffStats(
+            gram=self.gram - other.gram,
+            moment=self.moment - other.moment,
+            count=self.count - other.count,
+        )
+
     def scale(self, s) -> "SuffStats":
         """Scale a client's contribution (0/1 masks give Thm 8 dropout)."""
         return SuffStats(self.gram * s, self.moment * s, self.count * s)
@@ -122,13 +130,17 @@ def compute_stats_streaming(A: jax.Array, b: jax.Array, *, chunk: int = 1024) ->
 
 
 def fuse_stats(stats: Sequence[SuffStats]) -> SuffStats:
-    """Phase-2 server aggregation: G = sum_k G_k, h = sum_k h_k (Thm 1)."""
+    """Phase-2 server aggregation: G = sum_k G_k, h = sum_k h_k (Thm 1).
+
+    Implemented as one stacked reduction over the K clients (stack each leaf
+    to (K, ...) and sum along axis 0) rather than K sequential adds — a
+    single XLA reduce instead of a K-deep dependency chain.
+    """
     if not stats:
         raise ValueError("need at least one client's statistics")
-    out = stats[0]
-    for s in stats[1:]:
-        out = out + s
-    return out
+    if len(stats) == 1:
+        return stats[0]
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves).sum(axis=0), *stats)
 
 
 # ---------------------------------------------------------------------------

@@ -4,6 +4,13 @@ This is the paper-faithful K-client simulation used by the benchmark tables
 (the on-mesh shard_map variant lives in core.sufficient_stats.distributed_stats
 — same algebra, Theorem 1 makes them interchangeable). Every execution returns
 both the model and a CommRecord so tables report measured bytes, not formulas.
+
+The executions are thin protocol adapters over ``server.FusionEngine``: they
+emulate the client side (local stats, clipping, DP noise, dropout masks) and
+hand everything server-side — aggregation, factorization, solving, LOCO CV —
+to one engine instance, which each run returns in ``extras["engine"]`` so
+callers can keep serving from the fused state (drop/restore/solve at new
+sigmas) without re-running the protocol.
 """
 from __future__ import annotations
 
@@ -14,10 +21,11 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import fusion, privacy, projection
-from repro.core.sufficient_stats import SuffStats, compute_stats, fuse_stats
+from repro.core import privacy, projection
+from repro.core.sufficient_stats import SuffStats, compute_stats
 from repro.data.synthetic import FederatedDataset
 from repro.fed import comm
+from repro.server import FusionEngine
 
 
 @dataclasses.dataclass
@@ -29,36 +37,32 @@ class RunResult:
     extras: dict = dataclasses.field(default_factory=dict)
 
 
-def run_one_shot(
+def client_phase(
     ds: FederatedDataset,
-    sigma: float,
     *,
     participating: Sequence[bool] | None = None,
     dp: tuple[float, float] | None = None,
     dp_clip: tuple[float, float] | None = None,
     dp_key: jax.Array | None = None,
-    psd_repair: bool = False,
-) -> RunResult:
-    """Algorithm 1 (or Algorithm 2 when ``dp`` is given) over process clients.
+    client_stats: Sequence[SuffStats] | None = None,
+) -> dict[int, SuffStats]:
+    """Phase 1 on every participating client: what each one uploads.
 
-    Args:
-      participating: Thm 8 dropout mask; dropped clients transmit nothing.
-      dp: (eps, delta) for Algorithm 2 — per-client Gaussian noise, no
-        composition. Rows are clipped per Definition 3 (generalized) with
-        public clip constants ``dp_clip = (clip_a, clip_b)``; default
-        (1.2 sqrt(d), 4) covers N(mu, I)-scale features without biasing.
-      psd_repair: beyond-paper post-processing (privacy.psd_repair).
+    ``client_stats`` short-circuits the (deterministic) local computation with
+    already-computed statistics — e.g. the ones a LOCO CV pass just used —
+    but never the DP pipeline, whose clipping must see the raw rows.
     """
-    t0 = time.perf_counter()
     keys = (jax.random.split(dp_key, ds.num_clients)
             if dp is not None else [None] * ds.num_clients)
     if dp is not None and dp_clip is None:
         dp_clip = (1.2 * ds.dim ** 0.5, 4.0)
 
-    stats: list[SuffStats] = []
-    kept = 0
+    uploads: dict[int, SuffStats] = {}
     for k, (A_k, b_k) in enumerate(ds.clients):
         if participating is not None and not participating[k]:
+            continue
+        if dp is None and client_stats is not None:
+            uploads[k] = client_stats[k]
             continue
         s_g, s_h = (1.0, 1.0)
         if dp is not None:
@@ -69,21 +73,50 @@ def run_one_shot(
         if dp is not None:
             s = privacy.privatize_stats(keys[k], s, *dp,
                                         sensitivity_g=s_g, sensitivity_h=s_h)
-        stats.append(s)
-        kept += 1
+        uploads[k] = s
+    return uploads
 
-    fused = fuse_stats(stats)
+
+def run_one_shot(
+    ds: FederatedDataset,
+    sigma: float,
+    *,
+    participating: Sequence[bool] | None = None,
+    dp: tuple[float, float] | None = None,
+    dp_clip: tuple[float, float] | None = None,
+    dp_key: jax.Array | None = None,
+    psd_repair: bool = False,
+    client_stats: Sequence[SuffStats] | None = None,
+) -> RunResult:
+    """Algorithm 1 (or Algorithm 2 when ``dp`` is given) over process clients.
+
+    Args:
+      participating: Thm 8 dropout mask; dropped clients transmit nothing.
+      dp: (eps, delta) for Algorithm 2 — per-client Gaussian noise, no
+        composition. Rows are clipped per Definition 3 (generalized) with
+        public clip constants ``dp_clip = (clip_a, clip_b)``; default
+        (1.2 sqrt(d), 4) covers N(mu, I)-scale features without biasing.
+      psd_repair: beyond-paper post-processing (privacy.psd_repair).
+      client_stats: reuse already-computed per-client statistics (skips the
+        redundant Phase-1 recomputation; ignored under DP).
+    """
+    t0 = time.perf_counter()
+    uploads = client_phase(ds, participating=participating, dp=dp,
+                           dp_clip=dp_clip, dp_key=dp_key,
+                           client_stats=client_stats)
+    engine = FusionEngine.from_clients(uploads)
     if psd_repair:
-        fused = privacy.psd_repair(fused)
-    w = fusion.solve_ridge(fused, sigma)
+        engine.apply(privacy.psd_repair)
+    w = engine.solve(sigma)
     w.block_until_ready()
     dt = time.perf_counter() - t0
     return RunResult(
         weights=w,
-        comm=comm.one_shot_comm(ds.dim, kept),
+        comm=comm.one_shot_comm(ds.dim, len(uploads)),
         wall_time_s=dt,
         rounds=1,
-        extras={"fused_stats": fused, "participating_clients": kept},
+        extras={"fused_stats": engine.stats, "engine": engine,
+                "participating_clients": len(uploads)},
     )
 
 
@@ -97,16 +130,18 @@ def run_one_shot_projected(
     """§IV-F random-projection protocol; returns the lifted w~ = R v."""
     t0 = time.perf_counter()
     R = projection.make_projection(key, ds.dim, m)
-    stats = [projection.projected_stats(A_k, b_k, R) for A_k, b_k in ds.clients]
-    v = fusion.solve_ridge(fuse_stats(stats), sigma)
-    w = projection.lift(v, R)
+    engine = FusionEngine.from_clients(
+        [projection.projected_stats(A_k, b_k, R) for A_k, b_k in ds.clients])
+    w = projection.lift(engine.solve(sigma), R)
     w.block_until_ready()
     return RunResult(
         weights=w,
         comm=comm.one_shot_comm(ds.dim, ds.num_clients, projected_m=m),
         wall_time_s=time.perf_counter() - t0,
         rounds=1,
-        extras={"m": m},
+        # The engine lives in projected space (dim m): solve() yields v, and
+        # callers must lift with extras["projection"] to get d-dim weights.
+        extras={"m": m, "engine": engine, "projection": R},
     )
 
 
@@ -114,21 +149,29 @@ def run_centralized(ds: FederatedDataset, sigma: float) -> RunResult:
     """Oracle: centralized ridge with access to all data."""
     t0 = time.perf_counter()
     A, b = ds.stacked()
-    w = fusion.solve_ridge(compute_stats(A, b), sigma)
+    engine = FusionEngine.from_stats(compute_stats(A, b))
+    w = engine.solve(sigma)
     w.block_until_ready()
     return RunResult(
         weights=w,
         comm=comm.CommRecord(0, 0, ds.num_clients, 0),
         wall_time_s=time.perf_counter() - t0,
         rounds=0,
+        extras={"engine": engine},
     )
 
 
 def run_loco_cv(ds: FederatedDataset, sigmas: Sequence[float]) -> tuple[float, RunResult]:
-    """Prop 5 sigma selection followed by final fusion at sigma*."""
+    """Prop 5 sigma selection followed by final fusion at sigma*.
+
+    The engine solves all K * |Sigma| held-out systems in one vectorized
+    pass, and the final fusion reuses the statistics the CV already received
+    — no client recomputes anything.
+    """
     stats = [compute_stats(A_k, b_k) for A_k, b_k in ds.clients]
-    best, losses = fusion.loco_cv(stats, list(ds.clients), sigmas)
-    res = run_one_shot(ds, best)
+    engine = FusionEngine.from_clients(stats)
+    best, losses = engine.loco_cv(list(ds.clients), sigmas)
+    res = run_one_shot(ds, best, client_stats=stats)
     res.extras["cv_losses"] = losses
     res.extras["sigma_grid"] = list(sigmas)
     # Prop 5 overhead: K * |Sigma| scalars on top of the one-shot payload.

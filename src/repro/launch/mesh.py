@@ -12,19 +12,26 @@ before anything initializes jax).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4; older runtimes use implicit Auto axes.
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def _axis_types(n: int) -> dict:
+    return {"axis_types": (AxisType.Auto,) * n} if AxisType is not None else {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types(len(axes)))
 
 
 def make_host_mesh(shape=(4, 2), axes=("data", "model")):
     """Small mesh over host platform devices (tests)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types(len(axes)))
 
 
 def client_axes(mesh) -> tuple[str, ...]:

@@ -1,8 +1,15 @@
-"""Batched serving loop: prefill a batch of prompts, decode new tokens.
+"""Batched serving loops.
 
-The decode path is the same ``model.decode_step`` the dry-run lowers for
-decode_32k / long_500k; here it actually executes (reduced configs on CPU,
-full configs on a TPU slice).
+Two modes:
+  * ``model``  — prefill a batch of prompts, decode new tokens. The decode
+    path is the same ``model.decode_step`` the dry-run lowers for
+    decode_32k / long_500k; here it actually executes (reduced configs on
+    CPU, full configs on a TPU slice).
+  * ``fusion`` — ridge-serving: one ``FusionEngine`` owns the fused (G, h)
+    and answers a stream of concurrent queries from many tenants, each with
+    its own sigma grid. Queries are batched through ``solve_batch`` (one
+    vmapped factorization sweep warms the factor cache) and then served off
+    cached factors — versus the naive per-query cold solve.
 """
 from __future__ import annotations
 
@@ -68,14 +75,89 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
     }
 
 
+def serve_fusion(*, num_clients: int = 16, samples_per_client: int = 256,
+                 dim: int = 128, tenants: int = 8, sigmas_per_tenant: int = 4,
+                 queries: int = 256, query_rows: int = 8,
+                 seed: int = 0) -> dict:
+    """Serve many tenants' ridge queries through ONE FusionEngine.
+
+    Each tenant owns a sigma grid (its own bias/variance tradeoff over the
+    shared fused model). A query is (tenant, sigma, X) -> X @ w_sigma. The
+    batched server warms every distinct sigma with one ``solve_batch`` and
+    serves all queries off cached factors; the naive baseline re-factorizes
+    per query (what the per-table scripts used to do).
+    """
+    from repro.core import fusion
+    from repro.core.sufficient_stats import compute_stats
+    from repro.data import synthetic
+    from repro.server import FusionEngine
+
+    ds = synthetic.generate(jax.random.PRNGKey(seed), num_clients=num_clients,
+                            samples_per_client=samples_per_client, dim=dim)
+    engine = FusionEngine.from_clients(
+        {k: compute_stats(A_k, b_k) for k, (A_k, b_k) in enumerate(ds.clients)})
+
+    # Tenant t's grid: sigmas_per_tenant points on a per-tenant log range.
+    rng = np.random.default_rng(seed)
+    grids = [sorted(10.0 ** rng.uniform(-3, 1, sigmas_per_tenant))
+             for _ in range(tenants)]
+    stream = []
+    for q in range(queries):
+        t = int(rng.integers(tenants))
+        sigma = grids[t][int(rng.integers(sigmas_per_tenant))]
+        X = jnp.asarray(rng.standard_normal((query_rows, dim)),
+                        jnp.float32)
+        stream.append((t, sigma, X))
+
+    # Naive: cold factorization per query.
+    fused = engine.stats
+    t0 = time.perf_counter()
+    for _, sigma, X in stream:
+        jax.block_until_ready(X @ fusion.solve_ridge(fused, sigma))
+    t_naive = time.perf_counter() - t0
+
+    # Batched: one vmapped sweep over every distinct sigma, then cached serves.
+    t0 = time.perf_counter()
+    distinct = sorted({sigma for _, sigma, _ in stream})
+    engine.solve_batch(distinct, method="chol")  # warm the factor cache
+    for _, sigma, X in stream:
+        jax.block_until_ready(engine.predict(X, sigma))
+    t_batched = time.perf_counter() - t0
+
+    return {
+        "tenants": tenants,
+        "queries": queries,
+        "distinct_sigmas": len(distinct),
+        "naive_qps": queries / t_naive,
+        "batched_qps": queries / t_batched,
+        "speedup": t_naive / t_batched,
+        "engine": engine.summary(),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
+    ap.add_argument("--mode", choices=["model", "fusion"], default="model")
+    ap.add_argument("--arch", choices=list(configs.ARCH_IDS))
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-tokens", type=int, default=32)
+    ap.add_argument("--dim", type=int, default=128)
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--queries", type=int, default=256)
     args = ap.parse_args()
+    if args.mode == "fusion":
+        res = serve_fusion(dim=args.dim, tenants=args.tenants,
+                           queries=args.queries)
+        print(f"[serve_fusion] {res['queries']} queries, {res['tenants']} "
+              f"tenants, {res['distinct_sigmas']} distinct sigmas")
+        print(f"[serve_fusion] naive {res['naive_qps']:.0f} qps -> batched "
+              f"{res['batched_qps']:.0f} qps ({res['speedup']:.1f}x)")
+        print(f"[serve_fusion] engine: {res['engine']}")
+        return
+    if args.arch is None:
+        ap.error("--arch is required for --mode model")
     res = serve(args.arch, reduced=args.reduced, batch=args.batch,
                 prompt_len=args.prompt_len, gen_tokens=args.gen_tokens)
     print(f"[serve] {res['arch']}: prefill {res['prefill_s']:.2f}s, "

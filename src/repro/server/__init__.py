@@ -1,0 +1,12 @@
+"""Server subsystem: the production path for one-shot fusion.
+
+``FusionEngine`` is the paper's server made stateful and servable — fused
+``(G, h)`` ownership, cached/incrementally-maintained Cholesky factors,
+batched multi-sigma solving, Thm 8 dropout, §VI-C streaming, and Prop 5
+LOCO CV as one vectorized pass. ``core.fusion`` keeps the pure-function
+reference implementations the engine is tested against.
+"""
+from repro.server.cholesky import chol_rank1, chol_update, psd_update_vectors
+from repro.server.engine import FusionEngine
+
+__all__ = ["FusionEngine", "chol_rank1", "chol_update", "psd_update_vectors"]

@@ -1,0 +1,84 @@
+"""Incremental Cholesky machinery for the fusion server.
+
+The server's regularized Gram ``G + sigma I`` changes only by PSD low-rank
+deltas: streaming rows arrive (§VI-C, rank = #rows), a client drops out or
+rejoins (Thm 8, rank = rank(G_k)). A cached factor L with L L^T = G + sigma I
+can therefore be maintained by rank-1 up/downdates at O(d^2) each instead of
+an O(d^3/3) refactorization — the classic LINPACK recurrence, expressed as a
+``lax.scan`` over update vectors so it jits once per (d, r) shape.
+
+Numerical caveat: downdates lose accuracy as the downdated matrix approaches
+singularity. Here the result is always >= sigma I (Prop 1), but the engine
+still bounds the *accumulated* update rank per cached factor and falls back
+to a fresh factorization past that staleness threshold.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("sign",))
+def chol_rank1(L: jax.Array, x: jax.Array, *, sign: float = 1.0) -> jax.Array:
+    """Factor of ``L L^T + sign * x x^T`` from the factor L (lower).
+
+    ``sign=+1`` is an update, ``sign=-1`` a downdate; the downdate is valid
+    only when the result stays positive definite (guaranteed here by the
+    sigma I floor). O(d^2).
+    """
+    d = L.shape[0]
+    idx = jnp.arange(d)
+
+    def body(k, carry):
+        L, x = carry
+        Lkk = L[k, k]
+        xk = x[k]
+        r = jnp.sqrt(jnp.maximum(Lkk * Lkk + sign * xk * xk,
+                                 jnp.finfo(L.dtype).tiny))
+        c = r / Lkk
+        s = xk / Lkk
+        below = idx > k
+        col = L[:, k]
+        new_col = jnp.where(below, (col + sign * s * x) / c, col)
+        new_col = new_col.at[k].set(r)
+        x = jnp.where(below, c * x - s * new_col, x)
+        return L.at[:, k].set(new_col), x
+
+    L, _ = jax.lax.fori_loop(0, d, body, (L, x))
+    return L
+
+
+@partial(jax.jit, static_argnames=("sign",))
+def chol_update(L: jax.Array, U: jax.Array, *, sign: float = 1.0) -> jax.Array:
+    """Factor of ``L L^T + sign * U^T U`` for U of shape (r, d). O(r d^2)."""
+
+    def step(L, u):
+        return chol_rank1(L, u, sign=sign), None
+
+    L, _ = jax.lax.scan(step, L, U)
+    return L
+
+
+def psd_update_vectors(G: jax.Array, *, tol: float = 1e-7) -> jax.Array:
+    """Rows U (r, d) with ``U^T U ~= G`` for PSD G, r = numerical rank.
+
+    One eigendecomposition turns an arbitrary PSD delta (e.g. a departing
+    client's Gram, for which the server holds no row-level factor) into
+    explicit update vectors. The O(d^3) cost is paid once per delta and
+    amortized across every cached per-sigma factor it is applied to.
+
+    Host-side on purpose: r must be concrete so downstream scans have a
+    static shape.
+    """
+    evals, evecs = jnp.linalg.eigh(G)
+    evals = jax.device_get(evals)
+    cutoff = tol * max(float(evals[-1]), 1.0)
+    keep = evals > cutoff
+    r = int(keep.sum())
+    if r == 0:
+        return jnp.zeros((0, G.shape[0]), G.dtype)
+    vecs = evecs[:, -r:]
+    vals = jnp.clip(jnp.asarray(evals[-r:]), 0.0, None)
+    return (vecs * jnp.sqrt(vals)).T

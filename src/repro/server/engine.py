@@ -1,0 +1,371 @@
+"""FusionEngine — the stateful one-shot fusion server.
+
+The paper's server is, in full, the pair ``(G, h)`` plus algebra on it. This
+module makes that literal: one object owns the fused :class:`SuffStats`,
+retains per-client contributions, and exposes every server-side capability
+of the paper as a method:
+
+==================  =======================================================
+method              paper surface
+==================  =======================================================
+``ingest``          Phase 2 aggregation (Thm 1) / streaming updates (§VI-C)
+``ingest_rows``     §VI-C with row-level deltas (incremental factor update)
+``drop/restore``    client dropout and rejoin (Thm 8) — exact on the subset
+``solve``           Phase 3 ridge solve (Thm 3), Cholesky factor cached
+``solve_batch``     one vmapped multi-sigma solve (batched Phase 3)
+``loco_weights``    all K leave-one-client-out models, all sigmas (Prop 5)
+``loco_cv``         Prop 5 sigma selection as ONE vectorized solve
+``predict``         serving hot path: x -> x @ w_sigma off the cached factor
+==================  =======================================================
+
+Factor caching: each distinct sigma's Cholesky factor of ``G + sigma I`` is
+kept. PSD low-rank mutations (rows arriving, clients dropping/rejoining)
+up/down-date every cached factor in O(r d^2) instead of refactorizing at
+O(d^3/3) each; once a factor has absorbed more than ``max_update_rank``
+update vectors since its last full factorization it is evicted and lazily
+refactorized on next use (downdate error compounds; see server.cholesky).
+
+The pure-function reference implementations live in ``core.fusion`` and stay
+authoritative for correctness; tests pin the engine against them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Hashable, Iterable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sufficient_stats import SuffStats, compute_stats, zeros_like_stats
+from repro.server.cholesky import chol_update, psd_update_vectors
+
+
+@dataclasses.dataclass
+class _CachedFactor:
+    chol: jax.Array   # lower-triangular L with L L^T = G + sigma I
+    stale_rank: int   # update vectors absorbed since the last full factorization
+
+
+@jax.jit
+def _cold_factor(G, sigma):
+    d = G.shape[0]
+    return jnp.linalg.cholesky(G + sigma * jnp.eye(d, dtype=G.dtype))
+
+
+@jax.jit
+def _factor_solve(L, h):
+    return jax.scipy.linalg.cho_solve((L, True), h)
+
+
+@jax.jit
+def _multi_sigma_factor_solve(G, h, sigmas):
+    """Batched Phase 3: factors and solutions for every sigma in one call.
+
+    One batched Cholesky over the stacked (S, d, d) shifted Grams, then a
+    scan of cho_solves (jax's *batched* triangular solve is slow on CPU;
+    a scan of rank-1-batch solves inside the same jit is not).
+    """
+    eye = jnp.eye(G.shape[0], dtype=G.dtype)
+    Ls = jnp.linalg.cholesky(G[None] + sigmas[:, None, None] * eye[None])
+
+    def step(_, L):
+        return None, jax.scipy.linalg.cho_solve((L, True), h)
+
+    _, ws = jax.lax.scan(step, None, Ls)
+    return Ls, ws
+
+
+@jax.jit
+def _eigh_gram(G):
+    return jnp.linalg.eigh(G)
+
+
+@jax.jit
+def _spectral_solve(lam, Q, h, sigmas):
+    """w(sigma) for all sigmas from G's eigendecomposition.
+
+    Corollary-1 structure: G + sigma I shares G's eigenbasis, so after ONE
+    eigh every sigma costs only matmuls — O(d^2) per sigma, no factorization.
+    """
+    qh = Q.T @ h
+    return (qh[None] / (lam[None] + sigmas[:, None])) @ Q.T
+
+
+@jax.jit
+def _loco_solve(G, h, Gk, hk, sigmas):
+    """w_{-k}(sigma) for every client k and sigma: (K, S, d)."""
+    Gm = G[None] - Gk                      # (K, d, d)
+    hm = h[None] - hk                      # (K, d)
+    eye = jnp.eye(G.shape[0], dtype=G.dtype)
+
+    def per_sigma(sigma):
+        def per_client(gm, hmk):
+            L = jnp.linalg.cholesky(gm + sigma * eye)
+            return jax.scipy.linalg.cho_solve((L, True), hmk)
+
+        return jax.vmap(per_client)(Gm, hm)
+
+    return jnp.transpose(jax.vmap(per_sigma)(sigmas), (1, 0, 2))
+
+
+class FusionEngine:
+    """Stateful fusion server over one model's sufficient statistics."""
+
+    def __init__(self, dim: int, *, dtype=jnp.float32,
+                 max_update_rank: int | None = None, rank_tol: float = 1e-7):
+        self._fused = zeros_like_stats(dim, dtype)
+        self._clients: dict[Hashable, SuffStats] = {}
+        # dropped id -> (stats, update vectors computed at drop time, reused
+        # verbatim on restore so drop->restore round-trips the factors)
+        self._dropped: dict[Hashable, tuple[SuffStats, jax.Array | None]] = {}
+        self._factors: dict[float, _CachedFactor] = {}
+        self._spectral: tuple[jax.Array, jax.Array] | None = None  # (lam, Q)
+        self.max_update_rank = (max(1, dim // 4) if max_update_rank is None
+                                else max_update_rank)
+        self.rank_tol = rank_tol
+        self.dtype = dtype
+        # Observability counters (surfaced by benchmarks and serve_fusion).
+        self.stats_version = 0
+        self.cold_factorizations = 0
+        self.incremental_updates = 0
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_clients(cls, stats: Mapping[Hashable, SuffStats] | Sequence[SuffStats],
+                     **kwargs) -> "FusionEngine":
+        items = (stats.items() if isinstance(stats, Mapping)
+                 else enumerate(stats))
+        items = list(items)
+        if not items:
+            raise ValueError("need at least one client's statistics")
+        d = items[0][1].dim
+        eng = cls(d, dtype=items[0][1].gram.dtype, **kwargs)
+        for cid, s in items:
+            eng.ingest(s, client_id=cid)
+        return eng
+
+    @classmethod
+    def from_stats(cls, stats: SuffStats, **kwargs) -> "FusionEngine":
+        """Engine over pre-fused statistics (no per-client retention)."""
+        eng = cls(stats.dim, dtype=stats.gram.dtype, **kwargs)
+        eng._fused = stats
+        eng.stats_version += 1
+        return eng
+
+    # -- inspection ---------------------------------------------------------
+
+    @property
+    def stats(self) -> SuffStats:
+        return self._fused
+
+    @property
+    def dim(self) -> int:
+        return self._fused.dim
+
+    @property
+    def client_ids(self) -> tuple[Hashable, ...]:
+        return tuple(self._clients)
+
+    @property
+    def dropped_ids(self) -> tuple[Hashable, ...]:
+        return tuple(self._dropped)
+
+    @property
+    def count(self) -> int:
+        """Effective sample size currently fused (Thm 8 reporting)."""
+        return int(self._fused.count)
+
+    def summary(self) -> dict:
+        return {
+            "dim": self.dim,
+            "clients": len(self._clients),
+            "dropped": len(self._dropped),
+            "rows": self.count,
+            "cached_sigmas": sorted(self._factors),
+            "spectral_cached": self._spectral is not None,
+            "stats_version": self.stats_version,
+            "cold_factorizations": self.cold_factorizations,
+            "incremental_updates": self.incremental_updates,
+        }
+
+    # -- mutation (Thm 1 / Thm 8 / §VI-C) -----------------------------------
+
+    def ingest(self, stats: SuffStats, client_id: Hashable | None = None, *,
+               update_vectors: jax.Array | None = None) -> None:
+        """Fold a statistics delta into the server state (Thm 1 additivity).
+
+        ``client_id`` retains the contribution for later ``drop``/``restore``
+        and LOCO CV; repeated ingests under one id accumulate (a client
+        uploading in installments, §VI-C). ``update_vectors`` (r, d) with
+        ``U^T U = stats.gram`` lets cached factors be up-dated incrementally;
+        without them the PSD square root is derived (or, when the delta is
+        clearly high-rank, the cache is simply invalidated).
+        """
+        if stats.dim != self.dim:
+            raise ValueError(f"stats dim {stats.dim} != engine dim {self.dim}")
+        self._fused = self._fused + stats
+        if client_id is not None:
+            prev = self._clients.get(client_id)
+            self._clients[client_id] = stats if prev is None else prev + stats
+        self._touch_factors(stats, update_vectors, sign=1.0)
+
+    def ingest_rows(self, A: jax.Array, b: jax.Array,
+                    client_id: Hashable | None = None) -> SuffStats:
+        """§VI-C streaming: fold raw rows in; the rows ARE the update vectors."""
+        s = compute_stats(A, b)
+        self.ingest(s, client_id=client_id,
+                    update_vectors=A.astype(self.dtype))
+        return s
+
+    def drop(self, client_id: Hashable) -> None:
+        """Thm 8: remove a client; state becomes exact on the remaining subset."""
+        s = self._clients.pop(client_id)  # KeyError for unknown/already-dropped
+        vectors = self._touch_factors(s, None, sign=-1.0)
+        self._fused = self._fused - s
+        self._dropped[client_id] = (s, vectors)
+
+    def restore(self, client_id: Hashable) -> None:
+        """Thm 8 rejoin: add a dropped client back, exactly."""
+        s, vectors = self._dropped.pop(client_id)
+        self._fused = self._fused + s
+        self._clients[client_id] = s
+        self._touch_factors(s, vectors, sign=1.0)
+
+    def apply(self, fn: Callable[[SuffStats], SuffStats]) -> None:
+        """Post-process fused stats (e.g. privacy.psd_repair); drops caches.
+
+        Per-client retained stats are left untouched, so LOCO/dropout algebra
+        after an ``apply`` mixes repaired and raw statistics — acceptable for
+        PSD repair (a projection), but the caller owns that judgement.
+        """
+        self._fused = fn(self._fused)
+        self._factors.clear()
+        self._spectral = None
+        self.stats_version += 1
+
+    def _touch_factors(self, delta: SuffStats, update_vectors, sign: float):
+        """Up/down-date every cached factor by a PSD delta, or evict it."""
+        self.stats_version += 1
+        self._spectral = None  # eigenbasis has no cheap low-rank update here
+        if not self._factors:
+            return update_vectors
+        if update_vectors is None:
+            # rank(G_k) <= min(rows, d); skip the eigh when it cannot pay off.
+            bound = min(int(delta.count), self.dim)
+            if bound <= self.max_update_rank:
+                update_vectors = psd_update_vectors(delta.gram,
+                                                    tol=self.rank_tol)
+        rank = None if update_vectors is None else int(update_vectors.shape[0])
+        fresh: dict[float, _CachedFactor] = {}
+        for sigma, f in self._factors.items():
+            if rank is not None and f.stale_rank + rank <= self.max_update_rank:
+                fresh[sigma] = _CachedFactor(
+                    chol_update(f.chol, update_vectors, sign=sign),
+                    f.stale_rank + rank)
+                self.incremental_updates += 1
+            # else: evict; next solve at this sigma refactorizes from scratch.
+        self._factors = fresh
+        return update_vectors
+
+    # -- solving (Thm 3 / Prop 5) -------------------------------------------
+
+    def factor(self, sigma: float) -> jax.Array:
+        """Cached (or freshly computed) Cholesky factor of G + sigma I."""
+        key = float(sigma)
+        f = self._factors.get(key)
+        if f is None:
+            L = _cold_factor(self._fused.gram,
+                             jnp.asarray(key, self._fused.gram.dtype))
+            f = _CachedFactor(L, 0)
+            self._factors[key] = f
+            self.cold_factorizations += 1
+        return f.chol
+
+    def solve(self, sigma: float) -> jax.Array:
+        """Phase 3 (Thm 3): w = (G + sigma I)^{-1} h off the cached factor."""
+        return _factor_solve(self.factor(sigma), self._fused.moment)
+
+    def solve_batch(self, sigmas: Sequence[float], *,
+                    method: str = "auto") -> jax.Array:
+        """All sigmas in one batched solve; returns (S, d) weights.
+
+        ``method="chol"``: one batched Cholesky sweep; also warms the per-
+        sigma factor cache (subsequent ``solve``/``predict`` at these sigmas
+        are O(d^2)).
+
+        ``method="spectral"``: one eigendecomposition of G — cached until
+        the stats next change — after which ANY sigma grid costs only
+        matmuls (Corollary-1 spectral-shift structure). The right choice for
+        many-sigma / many-tenant serving; does not warm the Cholesky cache.
+
+        ``"auto"`` picks spectral when its eigh is already cached or the
+        grid is large enough (>= 16) to amortize it.
+        """
+        keys = [float(s) for s in sigmas]
+        dtype = self._fused.gram.dtype
+        if method == "auto":
+            method = ("spectral" if self._spectral is not None
+                      or len(keys) >= 16 else "chol")
+        if method == "spectral":
+            if self._spectral is None:
+                lam, Q = _eigh_gram(self._fused.gram)
+                self._spectral = (lam, Q)
+                self.cold_factorizations += 1
+            lam, Q = self._spectral
+            return _spectral_solve(lam, Q, self._fused.moment,
+                                   jnp.asarray(keys, dtype))
+        if method != "chol":
+            raise ValueError(f"unknown method {method!r}")
+        Ls, ws = _multi_sigma_factor_solve(
+            self._fused.gram, self._fused.moment, jnp.asarray(keys, dtype))
+        for i, k in enumerate(keys):
+            # Overwrite: the fresh factor supersedes any stale incrementally
+            # updated one (free accuracy/staleness reset).
+            self._factors[k] = _CachedFactor(Ls[i], 0)
+        return ws
+
+    def loco_weights(self, sigmas: Sequence[float]
+                     ) -> tuple[list[Hashable], jax.Array]:
+        """Prop 5 server step for ALL (k, sigma): one call, (K, S, d)."""
+        if not self._clients:
+            raise ValueError("no retained per-client statistics")
+        ids = list(self._clients)
+        Gk = jnp.stack([self._clients[i].gram for i in ids])
+        hk = jnp.stack([self._clients[i].moment for i in ids])
+        dtype = self._fused.gram.dtype
+        W = _loco_solve(self._fused.gram, self._fused.moment, Gk, hk,
+                        jnp.asarray([float(s) for s in sigmas], dtype))
+        return ids, W
+
+    def loco_cv(self, client_data: Mapping[Hashable, tuple[jax.Array, jax.Array]]
+                | Sequence[tuple[jax.Array, jax.Array]],
+                sigmas: Sequence[float]):
+        """Prop 5 end-to-end: vectorized solves + per-client loss evaluation.
+
+        ``client_data`` maps client id -> (A_k, b_k) (a sequence is treated
+        as ids 0..K-1), emulating step 3 where each held-out client scores
+        w_{-k}(sigma) locally and returns |Sigma| scalars.
+
+        Returns ``(best_sigma, losses)`` like ``core.fusion.loco_cv``.
+        """
+        if not isinstance(client_data, Mapping):
+            client_data = dict(enumerate(client_data))
+        ids, W = self.loco_weights(sigmas)          # (K, S, d)
+        losses = jnp.zeros((len(sigmas),), self._fused.moment.dtype)
+        for k, cid in enumerate(ids):
+            A_k, b_k = client_data[cid]
+            resid = A_k @ W[k].T - b_k[:, None]     # (n_k, S)
+            losses = losses + jnp.mean(resid**2, axis=0)
+        best = int(jnp.argmin(losses))
+        return sigmas[best], losses
+
+    # -- serving ------------------------------------------------------------
+
+    def predict(self, A: jax.Array, sigma: float) -> jax.Array:
+        """Hot path: ridge predictions for query rows at one sigma."""
+        return A @ self.solve(sigma)
+
+    def predict_batch(self, A: jax.Array, sigmas: Sequence[float]) -> jax.Array:
+        """(S, n) predictions — n query rows against S regularizations."""
+        return self.solve_batch(sigmas) @ A.T

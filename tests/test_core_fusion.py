@@ -1,11 +1,10 @@
 """Core protocol tests: Theorems 1/2/3/5/8, Prop 5, equilibrium machinery."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypo import hypothesis, st
 from repro import core
 
 

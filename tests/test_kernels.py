@@ -4,13 +4,12 @@ Kernels execute in interpret mode on CPU (the kernel body itself runs) —
 the BlockSpec tiling, grid accumulation, and masking logic are what's under
 test; Mosaic compilation happens only on a real TPU.
 """
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypo import hypothesis, st
 from repro.kernels import ops, ref
 
 

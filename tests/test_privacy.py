@@ -1,13 +1,12 @@
 """Algorithm 2 / Theorems 6-7: Gaussian mechanism, composition, PSD repair."""
 import math
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypo import hypothesis, st
 from repro import core
 from repro.core import privacy
 

@@ -90,9 +90,12 @@ class TestShardingRules:
     """Resolution against an abstract 16x16 (and 2x16x16) mesh — no devices."""
 
     def _mesh(self, multi=False):
-        if multi:
-            return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-        return AbstractMesh((16, 16), ("data", "model"))
+        shape = (2, 16, 16) if multi else (16, 16)
+        axes = ("pod", "data", "model") if multi else ("data", "model")
+        try:
+            return AbstractMesh(shape, axes)
+        except TypeError:  # jax<=0.4 signature: tuple of (name, size) pairs
+            return AbstractMesh(tuple(zip(axes, shape)))
 
     def test_param_2d_sharding(self):
         spec = DEFAULT_RULES.resolve(P("embed", "ff"), (8192, 29568), self._mesh())
