@@ -1,13 +1,23 @@
 PY ?= python
 
-# Tier-1 gate: the full test suite plus a fast fusion-engine perf smoke so
-# regressions in the cached-solve / batched-sigma paths show up in CI output
-# (the smoke writes experiments/repro/fusion_engine_bench.json and exits
-# nonzero if any perf claim fails).
+# Tier-1 gate: the full test suite (which already includes the sharded
+# equivalence tests and their 8-device child), a fast fusion-engine perf
+# smoke (writes experiments/repro/fusion_engine_bench.json, exits nonzero if
+# any perf claim fails), and one dense-vs-sharded crossover measurement so
+# experiments/repro/ tracks the sharded table per PR.
 .PHONY: tier1
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 	PYTHONPATH=src $(PY) benchmarks/fusion_engine_bench.py --smoke
+	PYTHONPATH=src $(PY) benchmarks/sharded_fusion_bench.py --smoke
+
+# Standalone sharded gate: just the sharded-backend equivalence tests (they
+# spawn their own 8-device host-platform child; jax locks the device count
+# at first init, so the parent needs no flags) plus the crossover bench.
+.PHONY: sharded-smoke
+sharded-smoke:
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_sharded_backend.py
+	PYTHONPATH=src $(PY) benchmarks/sharded_fusion_bench.py --smoke
 
 .PHONY: test
 test:

@@ -12,6 +12,10 @@ win) a claim:
   * loco_cv       — ``engine.loco_cv`` (ONE vectorized K*S solve) vs the
                     reference sequential ``fusion.loco_cv``.
 
+All rows measure the DENSE backend (the engine default); the dense-vs-
+sharded solve crossover over a mesh is its own module,
+``benchmarks.sharded_fusion_bench``.
+
 Usage: PYTHONPATH=src:. python benchmarks/fusion_engine_bench.py [--smoke]
 Emits a CSV + BENCH JSON under experiments/repro/ and prints a BENCH line.
 """
@@ -121,8 +125,8 @@ def run(smoke: bool = False) -> list[dict]:
                  f"ref {best_ref} vs engine {best_eng}")
 
     common.write_csv("fusion_engine_bench", rows)
-    bench = {"smoke": smoke, "dim": dim, "rows": rows,
-             "claims": claims.rows()}
+    bench = {"smoke": smoke, "dim": dim, "backend": engine.summary()["backend"],
+             "rows": rows, "claims": claims.rows()}
     common.OUT_DIR.mkdir(parents=True, exist_ok=True)
     (common.OUT_DIR / "fusion_engine_bench.json").write_text(
         json.dumps(bench, indent=2))

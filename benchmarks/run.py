@@ -1,19 +1,27 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
-Runs Tables II-VII, Fig 3, the satellite-result extensions, and the kernel
-micro-bench; persists CSVs under experiments/repro/ and prints a final
-claim-validation summary. Exits nonzero if any paper claim fails.
+Runs Tables II-VII, Fig 3, the satellite-result extensions, the kernel
+micro-bench, and the engine benches (dense fusion-engine perf plus the
+dense-vs-sharded solve crossover); persists CSVs under experiments/repro/
+and prints a final claim-validation summary. Exits nonzero if any paper
+claim fails.
+
+``--smoke`` runs the modules that support it (the engine/sharded benches) at
+reduced shapes/reps so experiments/repro/ tracks every measurement — the
+sharded fusion one included — per PR without the full-table cost.
 """
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import time
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     from benchmarks import (extensions, fig_3, fusion_engine_bench,
-                            kernels_bench, table_ii, table_iii, table_iv,
-                            table_v, table_vi, table_vii)
+                            kernels_bench, sharded_fusion_bench, table_ii,
+                            table_iii, table_iv, table_v, table_vi, table_vii)
 
     modules = [
         ("table_ii", table_ii), ("table_iii", table_iii),
@@ -21,12 +29,16 @@ def main() -> None:
         ("table_vi", table_vi), ("table_vii", table_vii),
         ("extensions", extensions), ("kernels", kernels_bench),
         ("fusion_engine", fusion_engine_bench),
+        ("sharded_fusion", sharded_fusion_bench),
     ]
     all_claims = []
     for name, mod in modules:
+        kwargs = ({"smoke": True}
+                  if smoke and "smoke" in inspect.signature(mod.run).parameters
+                  else {})
         print(f"=== {name} ===", flush=True)
         t0 = time.time()
-        all_claims += mod.run()
+        all_claims += mod.run(**kwargs)
         print(f"=== {name} done in {time.time() - t0:.1f}s ===\n", flush=True)
 
     failed = [c for c in all_claims if not c["pass"]]
@@ -38,4 +50,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shapes/reps for modules that support it")
+    main(**vars(ap.parse_args()))

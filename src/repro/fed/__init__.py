@@ -1,4 +1,11 @@
-from repro.fed.comm import CommRecord, crossover_rounds, fedavg_comm, one_shot_comm
+from repro.fed.comm import (
+    CommRecord,
+    ShardedCommRecord,
+    crossover_rounds,
+    fedavg_comm,
+    one_shot_comm,
+    sharded_oneshot_record,
+)
 from repro.fed.protocol import (
     RunResult,
     run_centralized,
@@ -9,7 +16,8 @@ from repro.fed.protocol import (
 from repro.fed.fedavg import IterativeConfig, one_gradient_step, run_iterative
 
 __all__ = [
-    "CommRecord", "crossover_rounds", "fedavg_comm", "one_shot_comm",
+    "CommRecord", "ShardedCommRecord", "crossover_rounds", "fedavg_comm",
+    "one_shot_comm", "sharded_oneshot_record",
     "RunResult", "run_centralized", "run_loco_cv", "run_one_shot",
     "run_one_shot_projected",
     "IterativeConfig", "one_gradient_step", "run_iterative",

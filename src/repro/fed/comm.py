@@ -3,10 +3,19 @@
 Counts are in *floats per client*; ``bytes`` helpers assume fp32 (4 bytes) as
 the paper's MB figures do. Upload for One-Shot exploits Gram symmetry:
 d(d+1)/2 + d floats up, d down. FedAvg: R*d up and R*d down.
+
+The sharded serving path (server.distributed.ShardedBackend) adds a second
+ledger axis: beyond the client->server uploads Theorem 4 counts, the on-mesh
+psum of the fused statistics moves bytes *between shards*.
+``sharded_oneshot_record`` accounts both — per-client uploads exactly as
+``one_shot_comm`` (including the §IV-F projected O(m^2) variant, so
+Table-IV-style comparisons cover the sharded path too) plus per-mesh-axis
+ring all-reduce traffic for the one fusion psum.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Mapping
 
 FLOAT_BYTES = 4
 
@@ -41,6 +50,62 @@ def one_shot_comm(d: int, num_clients: int, *, projected_m: int | None = None) -
         download_floats_per_client=k,
         num_clients=num_clients,
         rounds=1,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedCommRecord(CommRecord):
+    """CommRecord plus cross-shard reduction traffic for on-mesh fusion.
+
+    ``psum_floats_per_axis`` counts floats moved per device by the single
+    fusion reduction along each mesh axis the reduction actually crosses
+    (the row/client axes — the model axis only slices locally). The Gram is
+    *reduce-scattered* into the block layout (a ring reduce-scatter of a
+    p-float payload over an axis of size n moves (n-1)/n * p floats per
+    device; the fused G is never all-gathered), while the d-float moment and
+    the count are all-reduced (2 (n-1)/n * p). Payloads are the full square
+    d^2 (+ d + 1) on-mesh statistic — symmetry is a wire optimization for
+    uploads, not for device-to-device collectives.
+    """
+
+    psum_floats_per_axis: tuple[tuple[str, int], ...] = ()
+
+    @property
+    def psum_bytes_per_axis(self) -> dict[str, int]:
+        return {ax: f * FLOAT_BYTES for ax, f in self.psum_floats_per_axis}
+
+    @property
+    def cross_shard_bytes(self) -> int:
+        """Total per-device cross-shard bytes for the one fusion round."""
+        return sum(self.psum_bytes_per_axis.values())
+
+
+def sharded_oneshot_record(d: int, num_clients: int,
+                           axis_sizes: Mapping[str, int], *,
+                           projected_m: int | None = None) -> ShardedCommRecord:
+    """Thm 4 uploads + on-mesh psum traffic for the sharded fusion path.
+
+    Args:
+      d: feature dimension (uploads use ``projected_m`` when given — the
+        §IV-F O(m^2) record, so projected and unprojected sharded runs are
+        comparable in one table).
+      num_clients: uploading clients (process-level or mesh shards).
+      axis_sizes: mesh axes the fusion reduction crosses -> axis size
+        (``ShardedBackend.fusion_axis_sizes``: the row/client axes only,
+        e.g. ``{"data": 16}`` or ``{"pod": 2, "data": 16}``).
+      projected_m: optional §IV-F projection dimension.
+    """
+    base = one_shot_comm(d, num_clients, projected_m=projected_m)
+    k = d if projected_m is None else projected_m
+    per_axis = tuple(
+        (ax, ((n - 1) * k * k + 2 * (n - 1) * (k + 1)) // max(n, 1))
+        for ax, n in axis_sizes.items() if n > 1)
+    return ShardedCommRecord(
+        upload_floats_per_client=base.upload_floats_per_client,
+        download_floats_per_client=base.download_floats_per_client,
+        num_clients=base.num_clients,
+        rounds=base.rounds,
+        psum_floats_per_axis=per_axis,
     )
 
 

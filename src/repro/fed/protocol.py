@@ -25,7 +25,7 @@ from repro.core import privacy, projection
 from repro.core.sufficient_stats import SuffStats, compute_stats
 from repro.data.synthetic import FederatedDataset
 from repro.fed import comm
-from repro.server import FusionEngine
+from repro.server import FusionEngine, LinalgBackend, ShardedBackend
 
 
 @dataclasses.dataclass
@@ -87,6 +87,8 @@ def run_one_shot(
     dp_key: jax.Array | None = None,
     psd_repair: bool = False,
     client_stats: Sequence[SuffStats] | None = None,
+    backend: LinalgBackend | None = None,
+    mesh=None,
 ) -> RunResult:
     """Algorithm 1 (or Algorithm 2 when ``dp`` is given) over process clients.
 
@@ -99,24 +101,43 @@ def run_one_shot(
       psd_repair: beyond-paper post-processing (privacy.psd_repair).
       client_stats: reuse already-computed per-client statistics (skips the
         redundant Phase-1 recomputation; ignored under DP).
+      backend: linalg backend for the engine; defaults to dense. With a
+        sharded backend, ``extras["engine"]`` is mesh-backed — the fused
+        Gram lives block-sharded and the solve runs on-mesh — and the
+        CommRecord gains the cross-shard psum ledger.
+      mesh: shorthand for ``backend=ShardedBackend(ds.dim, mesh)``.
     """
     t0 = time.perf_counter()
+    if backend is None and mesh is not None:
+        backend = ShardedBackend(ds.dim, mesh)
     uploads = client_phase(ds, participating=participating, dp=dp,
                            dp_clip=dp_clip, dp_key=dp_key,
                            client_stats=client_stats)
-    engine = FusionEngine.from_clients(uploads)
+    engine = FusionEngine.from_clients(uploads, backend=backend)
     if psd_repair:
         engine.apply(privacy.psd_repair)
     w = engine.solve(sigma)
     w.block_until_ready()
     dt = time.perf_counter() - t0
+    extras = {"engine": engine, "participating_clients": len(uploads)}
+    if isinstance(backend, ShardedBackend):
+        # The psum ledger models the on-mesh reduction of the fused
+        # statistic into the block layout (what fuse_distributed pays; this
+        # process-level adapter emulates the clients host-side). No eager
+        # dense "fused_stats" here: gathering G onto one device is exactly
+        # what the sharded backend exists to avoid — use
+        # extras["engine"].stats when a dense view is really wanted.
+        record = comm.sharded_oneshot_record(
+            ds.dim, len(uploads), backend.fusion_axis_sizes)
+    else:
+        record = comm.one_shot_comm(ds.dim, len(uploads))
+        extras["fused_stats"] = engine.stats
     return RunResult(
         weights=w,
-        comm=comm.one_shot_comm(ds.dim, len(uploads)),
+        comm=record,
         wall_time_s=dt,
         rounds=1,
-        extras={"fused_stats": engine.stats, "engine": engine,
-                "participating_clients": len(uploads)},
+        extras=extras,
     )
 
 

@@ -48,6 +48,53 @@ def _gram_kernel(a_i_ref, a_j_ref, b_ref, g_ref, h_ref):
         h_ref[...] += jnp.sum(a_i.astype(jnp.float32) * bv[:, None], axis=0)
 
 
+def _gemm_nt_kernel(alpha, c_ref, a_ref, b_ref, o_ref):
+    """O = C + alpha * A @ B^T for one (bm, bn) output tile.
+
+    The inner tile of the sharded block-Cholesky (server.distributed): with
+    alpha=-1 it is the SYRK/GEMM trailing update ``G_ij -= L_ik L_jk^T``;
+    with alpha=+1 and C=0 it is the TRSM panel solve re-expressed as a GEMM
+    against the inverted bs x bs diagonal tile. Same MXU contraction pattern
+    as the Gram kernel above (A and B contract over their last axis), so the
+    whole factorization's O(d^3) lives on this one tile.
+    """
+    acc = jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[...] = c_ref[...] + alpha * acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "block_m", "block_n", "interpret"))
+def gemm_nt_pallas(C: jax.Array, A: jax.Array, B: jax.Array, *,
+                   alpha: float = -1.0, block_m: int = 128,
+                   block_n: int = 128, interpret: bool = False):
+    """C + alpha * A @ B^T. C: (m, n), A: (m, k), B: (n, k); blocks divide.
+
+    k is a panel width (one block column of the factorization), so each
+    output tile needs exactly one A tile and one B tile — no accumulation
+    grid axis.
+    """
+    m, n = C.shape
+    k = A.shape[1]
+    assert A.shape == (m, k) and B.shape == (n, k), (C.shape, A.shape, B.shape)
+    assert m % block_m == 0 and n % block_n == 0, (C.shape, block_m, block_n)
+    grid = (m // block_m, n // block_n)
+
+    return pl.pallas_call(
+        functools.partial(_gemm_nt_kernel, alpha),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), C.dtype),
+        interpret=interpret,
+    )(C, A, B)
+
+
 @functools.partial(jax.jit, static_argnames=("block_d", "block_n", "interpret"))
 def gram_moment_pallas(A: jax.Array, b: jax.Array, *, block_d: int = 128,
                        block_n: int = 512, interpret: bool = False):

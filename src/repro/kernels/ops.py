@@ -46,6 +46,30 @@ def gram_moment(A: jax.Array, b: jax.Array, *, block_d: int = 128,
     return G[:d, :d], h[:d]
 
 
+def gemm_nt(C: jax.Array, A: jax.Array, B: jax.Array, *, alpha: float = -1.0,
+            block_m: int = 128, block_n: int = 128,
+            interpret: bool | None = None) -> jax.Array:
+    """C + alpha * A @ B^T via the Pallas tile; pads ragged shapes exactly.
+
+    The sharded block-Cholesky's inner tile op (SYRK trailing update with
+    alpha=-1; TRSM-as-GEMM with alpha=+1). Zero padding is exact: padded k
+    columns contribute nothing to the product, and padded m/n rows/cols of C
+    land in output tiles that are sliced away.
+    """
+    m, n = C.shape
+    k = A.shape[1]
+    block_m = min(block_m, max(8, 1 << (m - 1).bit_length()))
+    block_n = min(block_n, max(8, 1 << (n - 1).bit_length()))
+    Cp = _pad_to(_pad_to(C, 0, block_m), 1, block_n)
+    Ap = _pad_to(_pad_to(A, 0, block_m), 1, 128)
+    Bp = _pad_to(_pad_to(B, 0, block_n), 1, 128)
+    interpret = _interpret_default() if interpret is None else interpret
+    out = gram_kernel.gemm_nt_pallas(Cp, Ap, Bp, alpha=alpha,
+                                     block_m=block_m, block_n=block_n,
+                                     interpret=interpret)
+    return out[:m, :n]
+
+
 def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   window: int | None, causal: bool = True,
                   block_q: int = 128, block_k: int = 128,

@@ -30,8 +30,43 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(shape=(4, 2), axes=("data", "model")):
-    """Small mesh over host platform devices (tests)."""
+    """Small mesh over host platform devices (tests).
+
+    Assumes the platform actually exposes prod(shape) devices (i.e.
+    ``--xla_force_host_platform_device_count`` was set before jax
+    initialized) and raises otherwise; :func:`make_cpu_mesh` is the
+    degrading variant for code that must run anywhere.
+    """
     return jax.make_mesh(shape, axes, **_axis_types(len(axes)))
+
+
+def make_cpu_mesh(n: int = 8, axes=("data", "model")):
+    """Mesh over up to ``n`` host-platform devices; degrades, never crashes.
+
+    The host platform only exposes multiple devices when
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` is set *before*
+    jax first initializes (jax locks the device count at first init). This
+    helper validates that expectation: when fewer than ``n`` devices exist
+    it warns with the exact flag to set and builds the largest 2-D mesh that
+    fits — down to a 1x1 single-device mesh — instead of raising the way a
+    fixed-shape ``make_host_mesh`` does.
+
+    The ``n`` devices are arranged as the most-square (rows, cols)
+    factorization with rows >= cols, so the fusion server's 2-D
+    block-sharding gets balanced tiles.
+    """
+    import warnings
+
+    avail = jax.device_count()
+    if avail < n:
+        warnings.warn(
+            f"make_cpu_mesh: requested {n} devices but the platform has "
+            f"{avail}; set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} before jax initializes to get the full mesh",
+            stacklevel=2)
+    n_eff = min(n, avail)
+    cols = max(c for c in range(1, int(n_eff ** 0.5) + 1) if n_eff % c == 0)
+    return jax.make_mesh((n_eff // cols, cols), axes, **_axis_types(len(axes)))
 
 
 def client_axes(mesh) -> tuple[str, ...]:

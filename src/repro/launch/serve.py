@@ -5,11 +5,15 @@ Two modes:
     path is the same ``model.decode_step`` the dry-run lowers for
     decode_32k / long_500k; here it actually executes (reduced configs on
     CPU, full configs on a TPU slice).
-  * ``fusion`` — ridge-serving: one ``FusionEngine`` owns the fused (G, h)
-    and answers a stream of concurrent queries from many tenants, each with
-    its own sigma grid. Queries are batched through ``solve_batch`` (one
-    vmapped factorization sweep warms the factor cache) and then served off
-    cached factors — versus the naive per-query cold solve.
+  * ``fusion`` — ridge-serving: ``FusionEngine``s own the fused (G, h) and
+    answer a stream of concurrent queries from many tenants, each with its
+    own sigma grid. Queries are batched through ``solve_batch`` (one
+    factorization sweep warms the factor cache) and then served off cached
+    factors — versus the naive per-query cold solve. Tenants choose their
+    backend: dense single-device (default) or mesh-sharded
+    (``--sharded-tenants N`` routes the first N tenants through a
+    ``ShardedBackend`` over a host CPU mesh); both kinds coexist in one
+    serving loop, sharing the same fused statistics.
 """
 from __future__ import annotations
 
@@ -78,24 +82,38 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
 def serve_fusion(*, num_clients: int = 16, samples_per_client: int = 256,
                  dim: int = 128, tenants: int = 8, sigmas_per_tenant: int = 4,
                  queries: int = 256, query_rows: int = 8,
+                 sharded_tenants: int = 0, mesh=None,
                  seed: int = 0) -> dict:
-    """Serve many tenants' ridge queries through ONE FusionEngine.
+    """Serve many tenants' ridge queries through per-backend FusionEngines.
 
     Each tenant owns a sigma grid (its own bias/variance tradeoff over the
-    shared fused model). A query is (tenant, sigma, X) -> X @ w_sigma. The
-    batched server warms every distinct sigma with one ``solve_batch`` and
-    serves all queries off cached factors; the naive baseline re-factorizes
-    per query (what the per-table scripts used to do).
+    shared fused model) and a backend: the first ``sharded_tenants`` tenants
+    are served by an engine whose fused Gram lives block-sharded on a mesh
+    (``launch.mesh.make_cpu_mesh`` host mesh unless one is passed), the rest
+    by the dense single-device engine. A query is (tenant, sigma, X) ->
+    X @ w_sigma. Each engine warms every distinct sigma its tenants use with
+    one ``solve_batch`` and serves all queries off cached factors; the naive
+    baseline re-factorizes per query (what the per-table scripts used to do).
     """
     from repro.core import fusion
     from repro.core.sufficient_stats import compute_stats
     from repro.data import synthetic
-    from repro.server import FusionEngine
+    from repro.launch import mesh as mesh_lib
+    from repro.server import FusionEngine, ShardedBackend
 
     ds = synthetic.generate(jax.random.PRNGKey(seed), num_clients=num_clients,
                             samples_per_client=samples_per_client, dim=dim)
-    engine = FusionEngine.from_clients(
-        {k: compute_stats(A_k, b_k) for k, (A_k, b_k) in enumerate(ds.clients)})
+    stats = {k: compute_stats(A_k, b_k)
+             for k, (A_k, b_k) in enumerate(ds.clients)}
+    engines = {"dense": FusionEngine.from_clients(stats)}
+    sharded_tenants = min(sharded_tenants, tenants)
+    if sharded_tenants:
+        if mesh is None:
+            mesh = mesh_lib.make_cpu_mesh(8)
+        engines["sharded"] = FusionEngine.from_clients(
+            stats, backend=ShardedBackend(dim, mesh))
+    backend_of = ["sharded" if t < sharded_tenants else "dense"
+                  for t in range(tenants)]
 
     # Tenant t's grid: sigmas_per_tenant points on a per-tenant log range.
     rng = np.random.default_rng(seed)
@@ -110,28 +128,33 @@ def serve_fusion(*, num_clients: int = 16, samples_per_client: int = 256,
         stream.append((t, sigma, X))
 
     # Naive: cold factorization per query.
-    fused = engine.stats
+    fused = engines["dense"].stats
     t0 = time.perf_counter()
     for _, sigma, X in stream:
         jax.block_until_ready(X @ fusion.solve_ridge(fused, sigma))
     t_naive = time.perf_counter() - t0
 
-    # Batched: one vmapped sweep over every distinct sigma, then cached serves.
+    # Batched: per engine, one sweep over its tenants' distinct sigmas, then
+    # every query served off that engine's cached factors.
     t0 = time.perf_counter()
-    distinct = sorted({sigma for _, sigma, _ in stream})
-    engine.solve_batch(distinct, method="chol")  # warm the factor cache
-    for _, sigma, X in stream:
-        jax.block_until_ready(engine.predict(X, sigma))
+    for name, eng in engines.items():
+        distinct = sorted({sigma for t, sigma, _ in stream
+                           if backend_of[t] == name})
+        if distinct:
+            eng.solve_batch(distinct, method="chol")  # warm the factor cache
+    for t, sigma, X in stream:
+        jax.block_until_ready(engines[backend_of[t]].predict(X, sigma))
     t_batched = time.perf_counter() - t0
 
     return {
         "tenants": tenants,
+        "sharded_tenants": sharded_tenants,
         "queries": queries,
-        "distinct_sigmas": len(distinct),
+        "distinct_sigmas": len({sigma for _, sigma, _ in stream}),
         "naive_qps": queries / t_naive,
         "batched_qps": queries / t_batched,
         "speedup": t_naive / t_batched,
-        "engine": engine.summary(),
+        "engines": {name: eng.summary() for name, eng in engines.items()},
     }
 
 
@@ -146,15 +169,21 @@ def main() -> None:
     ap.add_argument("--dim", type=int, default=128)
     ap.add_argument("--tenants", type=int, default=8)
     ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--sharded-tenants", type=int, default=0,
+                    help="serve the first N tenants off a mesh-sharded "
+                         "backend (host CPU mesh; degrades to 1 device)")
     args = ap.parse_args()
     if args.mode == "fusion":
         res = serve_fusion(dim=args.dim, tenants=args.tenants,
-                           queries=args.queries)
+                           queries=args.queries,
+                           sharded_tenants=args.sharded_tenants)
         print(f"[serve_fusion] {res['queries']} queries, {res['tenants']} "
-              f"tenants, {res['distinct_sigmas']} distinct sigmas")
+              f"tenants ({res['sharded_tenants']} sharded), "
+              f"{res['distinct_sigmas']} distinct sigmas")
         print(f"[serve_fusion] naive {res['naive_qps']:.0f} qps -> batched "
               f"{res['batched_qps']:.0f} qps ({res['speedup']:.1f}x)")
-        print(f"[serve_fusion] engine: {res['engine']}")
+        for name, summary in res["engines"].items():
+            print(f"[serve_fusion] {name} engine: {summary}")
         return
     if args.arch is None:
         ap.error("--arch is required for --mode model")

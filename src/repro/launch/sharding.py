@@ -100,6 +100,21 @@ DEFAULT_RULES = ShardingRules(rules={
 })
 
 
+# One-shot fusion server state (server.distributed.ShardedBackend): the fused
+# Gram is 2-D block-sharded — rows over the client/data axes (where the psum
+# of Phase 2 already lives), columns over the model axis — and its Cholesky
+# factor inherits the same layout. The moment vector h is d floats and stays
+# replicated. The usual divisibility fallback applies: on a mesh axis of size
+# 1 (or an indivisible padded dim, which the backend prevents by padding to
+# the axis lcm) the dimension falls back to replication.
+FUSION_RULES = ShardingRules(rules={
+    "gram_row": _cands(("pod", "data"), ("data",)),
+    "gram_col": _cands(("model",)),
+})
+
+GRAM_AXES = P("gram_row", "gram_col")
+
+
 # ZeRO-1 variant (perf hillclimb, see EXPERIMENTS.md §Perf): bf16 compute
 # weights are model-sharded only (no contracting-dim 'data' sharding, so no
 # activation gathers); the fp32 master/m/v optimizer shard over 'data' via

@@ -1,12 +1,24 @@
 """Server subsystem: the production path for one-shot fusion.
 
 ``FusionEngine`` is the paper's server made stateful and servable — fused
-``(G, h)`` ownership, cached/incrementally-maintained Cholesky factors,
-batched multi-sigma solving, Thm 8 dropout, §VI-C streaming, and Prop 5
-LOCO CV as one vectorized pass. ``core.fusion`` keeps the pure-function
-reference implementations the engine is tested against.
+``(G, h)`` ownership, cached/incrementally-maintained factors, batched
+multi-sigma solving, Thm 8 dropout, §VI-C streaming, and Prop 5 LOCO CV as
+one vectorized pass. The engine is the *policy* layer; the linear algebra
+lives behind a pluggable ``LinalgBackend``:
+
+  * ``DenseBackend``   — replicated single-device (G, h), cached Cholesky +
+                         eigh spectral serving (the default).
+  * ``ShardedBackend`` — (G, h) block-sharded across a mesh; on-mesh psum
+                         fusion and a shard_map block-Cholesky / CG solve;
+                         G never materializes on one device.
+
+``core.fusion`` keeps the pure-function reference implementations both
+backends are tested against.
 """
+from repro.server.backends import DenseBackend, LinalgBackend
 from repro.server.cholesky import chol_rank1, chol_update, psd_update_vectors
+from repro.server.distributed import ShardedBackend, ShardedFactor
 from repro.server.engine import FusionEngine
 
-__all__ = ["FusionEngine", "chol_rank1", "chol_update", "psd_update_vectors"]
+__all__ = ["FusionEngine", "LinalgBackend", "DenseBackend", "ShardedBackend",
+           "ShardedFactor", "chol_rank1", "chol_update", "psd_update_vectors"]

@@ -1,0 +1,193 @@
+"""Pluggable linear-algebra backends for the fusion server.
+
+``FusionEngine`` (server.engine) is the *policy* layer — client ledger,
+staleness-bounded factor reuse, sigma cache, LOCO — and delegates every
+representation-dependent operation on the fused ``(G, h)`` to a
+``LinalgBackend``:
+
+  * ``DenseBackend`` (here): one replicated ``(d, d)`` Gram on one device,
+    cached-Cholesky / eigh algebra. The right choice while ``G`` fits a
+    single chip's HBM.
+  * ``ShardedBackend`` (server.distributed): ``G`` lives 2-D block-sharded
+    across a mesh and is fused, factored, and solved without ever being
+    gathered to one device.
+
+The protocol is intentionally small: ``fuse`` (fold a stats delta into the
+backend-held state), ``factor``/``solve``/``solve_batch`` (Phase 3),
+``update`` (incremental factor maintenance under PSD deltas — a backend may
+decline by returning ``None``, in which case the engine evicts and lazily
+refactorizes), and ``spectral`` (the Corollary-1 eigh serving path, likewise
+optional). Everything the engine caches is opaque to it: a "factor" is
+whatever object the backend's ``factor`` returned.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sufficient_stats import SuffStats, zeros_like_stats
+from repro.server.cholesky import chol_update
+
+
+@runtime_checkable
+class LinalgBackend(Protocol):
+    """What the engine needs from a linear-algebra backend.
+
+    ``stats()`` returns a *dense* view of the fused statistics and is a
+    debug/interop surface (reference checks, LOCO over retained dense client
+    stats) — never part of the solve path; distributed backends may gather
+    to implement it.
+    """
+
+    name: str
+    supports_update: bool
+
+    @property
+    def dim(self) -> int: ...
+
+    @property
+    def dtype(self) -> Any: ...
+
+    @property
+    def count(self) -> jax.Array: ...
+
+    @property
+    def spectral_ready(self) -> bool: ...
+
+    def fuse(self, delta: SuffStats, sign: float = 1.0) -> None: ...
+
+    def stats(self) -> SuffStats: ...
+
+    def set_stats(self, stats: SuffStats) -> None: ...
+
+    def factor(self, sigma: float) -> Any: ...
+
+    def solve(self, factor: Any) -> jax.Array: ...
+
+    def solve_batch(self, sigmas: Sequence[float]
+                    ) -> tuple[list[Any] | None, jax.Array]: ...
+
+    def update(self, factor: Any, update_vectors: jax.Array,
+               sign: float) -> Any | None: ...
+
+    def spectral(self, sigmas: Sequence[float]) -> jax.Array | None: ...
+
+
+# -- dense kernels (jitted once per shape) ----------------------------------
+
+@jax.jit
+def _cold_factor(G, sigma):
+    d = G.shape[0]
+    return jnp.linalg.cholesky(G + sigma * jnp.eye(d, dtype=G.dtype))
+
+
+@jax.jit
+def _factor_solve(L, h):
+    return jax.scipy.linalg.cho_solve((L, True), h)
+
+
+@jax.jit
+def _multi_sigma_factor_solve(G, h, sigmas):
+    """Batched Phase 3: factors and solutions for every sigma in one call.
+
+    One batched Cholesky over the stacked (S, d, d) shifted Grams, then a
+    scan of cho_solves (jax's *batched* triangular solve is slow on CPU;
+    a scan of rank-1-batch solves inside the same jit is not).
+    """
+    eye = jnp.eye(G.shape[0], dtype=G.dtype)
+    Ls = jnp.linalg.cholesky(G[None] + sigmas[:, None, None] * eye[None])
+
+    def step(_, L):
+        return None, jax.scipy.linalg.cho_solve((L, True), h)
+
+    _, ws = jax.lax.scan(step, None, Ls)
+    return Ls, ws
+
+
+@jax.jit
+def _eigh_gram(G):
+    return jnp.linalg.eigh(G)
+
+
+@jax.jit
+def _spectral_solve(lam, Q, h, sigmas):
+    """w(sigma) for all sigmas from G's eigendecomposition.
+
+    Corollary-1 structure: G + sigma I shares G's eigenbasis, so after ONE
+    eigh every sigma costs only matmuls — O(d^2) per sigma, no factorization.
+    """
+    qh = Q.T @ h
+    return (qh[None] / (lam[None] + sigmas[:, None])) @ Q.T
+
+
+class DenseBackend:
+    """Single-device dense backend: the extracted FusionEngine linalg.
+
+    The factor object is the lower-triangular Cholesky factor itself; PSD
+    low-rank deltas are absorbed into cached factors via the LINPACK
+    up/downdate recurrence (server.cholesky), and the spectral path caches
+    one eigh of G until the stats next change.
+    """
+
+    name = "dense"
+    supports_update = True
+
+    def __init__(self, dim: int, *, dtype=jnp.float32):
+        self._stats = zeros_like_stats(dim, dtype)
+        self._eigh: tuple[jax.Array, jax.Array] | None = None
+
+    @property
+    def dim(self) -> int:
+        return self._stats.dim
+
+    @property
+    def dtype(self):
+        return self._stats.gram.dtype
+
+    @property
+    def count(self) -> jax.Array:
+        return self._stats.count
+
+    @property
+    def spectral_ready(self) -> bool:
+        return self._eigh is not None
+
+    def fuse(self, delta: SuffStats, sign: float = 1.0) -> None:
+        self._stats = (self._stats + delta) if sign > 0 else (self._stats - delta)
+        self._eigh = None
+
+    def stats(self) -> SuffStats:
+        return self._stats
+
+    def set_stats(self, stats: SuffStats) -> None:
+        if stats.dim != self.dim:
+            raise ValueError(f"stats dim {stats.dim} != backend dim {self.dim}")
+        self._stats = stats
+        self._eigh = None
+
+    def factor(self, sigma: float) -> jax.Array:
+        return _cold_factor(self._stats.gram,
+                            jnp.asarray(sigma, self._stats.gram.dtype))
+
+    def solve(self, factor: jax.Array) -> jax.Array:
+        return _factor_solve(factor, self._stats.moment)
+
+    def solve_batch(self, sigmas: Sequence[float]
+                    ) -> tuple[list[jax.Array], jax.Array]:
+        Ls, ws = _multi_sigma_factor_solve(
+            self._stats.gram, self._stats.moment,
+            jnp.asarray(list(sigmas), self.dtype))
+        return [Ls[i] for i in range(Ls.shape[0])], ws
+
+    def update(self, factor: jax.Array, update_vectors: jax.Array,
+               sign: float) -> jax.Array:
+        return chol_update(factor, update_vectors, sign=sign)
+
+    def spectral(self, sigmas: Sequence[float]) -> jax.Array:
+        if self._eigh is None:
+            self._eigh = _eigh_gram(self._stats.gram)
+        lam, Q = self._eigh
+        return _spectral_solve(lam, Q, self._stats.moment,
+                               jnp.asarray(list(sigmas), self.dtype))

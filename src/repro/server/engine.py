@@ -1,4 +1,4 @@
-"""FusionEngine — the stateful one-shot fusion server.
+"""FusionEngine — the stateful one-shot fusion server (policy layer).
 
 The paper's server is, in full, the pair ``(G, h)`` plus algebra on it. This
 module makes that literal: one object owns the fused :class:`SuffStats`,
@@ -10,20 +10,29 @@ method              paper surface
 ==================  =======================================================
 ``ingest``          Phase 2 aggregation (Thm 1) / streaming updates (§VI-C)
 ``ingest_rows``     §VI-C with row-level deltas (incremental factor update)
+``ingest_distributed``  Phases 1+2 on-mesh: psum of shard-local stats
 ``drop/restore``    client dropout and rejoin (Thm 8) — exact on the subset
-``solve``           Phase 3 ridge solve (Thm 3), Cholesky factor cached
-``solve_batch``     one vmapped multi-sigma solve (batched Phase 3)
+``solve``           Phase 3 ridge solve (Thm 3), factor cached per sigma
+``solve_batch``     one batched multi-sigma solve (batched Phase 3)
 ``loco_weights``    all K leave-one-client-out models, all sigmas (Prop 5)
 ``loco_cv``         Prop 5 sigma selection as ONE vectorized solve
 ``predict``         serving hot path: x -> x @ w_sigma off the cached factor
 ==================  =======================================================
 
-Factor caching: each distinct sigma's Cholesky factor of ``G + sigma I`` is
-kept. PSD low-rank mutations (rows arriving, clients dropping/rejoining)
-up/down-date every cached factor in O(r d^2) instead of refactorizing at
-O(d^3/3) each; once a factor has absorbed more than ``max_update_rank``
-update vectors since its last full factorization it is evicted and lazily
-refactorized on next use (downdate error compounds; see server.cholesky).
+The engine itself is *backend-agnostic*: all representation-dependent linear
+algebra — where the fused ``(G, h)`` lives, what a "factor" is, how a solve
+runs — is delegated to a :class:`~repro.server.backends.LinalgBackend`
+(dense single-device by default; ``server.distributed.ShardedBackend`` keeps
+``G`` block-sharded across a mesh end to end). What stays here is policy:
+
+  * the per-client ledger behind ``drop``/``restore`` and LOCO;
+  * per-sigma factor caching with staleness-bounded incremental updates —
+    PSD low-rank mutations up/down-date every cached factor in O(r d^2)
+    (when the backend supports it) instead of refactorizing at O(d^3/3);
+    once a factor has absorbed more than ``max_update_rank`` update vectors
+    it is evicted and lazily refactorized on next use;
+  * the chol-vs-spectral ``solve_batch`` method choice, falling back to the
+    Cholesky sweep when the backend has no spectral path.
 
 The pure-function reference implementations live in ``core.fusion`` and stay
 authoritative for correctness; tests pin the engine against them.
@@ -31,64 +40,20 @@ authoritative for correctness; tests pin the engine against them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Hashable, Iterable, Mapping, Sequence
+from typing import Any, Callable, Hashable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.sufficient_stats import SuffStats, compute_stats, zeros_like_stats
-from repro.server.cholesky import chol_update, psd_update_vectors
+from repro.core.sufficient_stats import SuffStats, compute_stats
+from repro.server.backends import DenseBackend, LinalgBackend
+from repro.server.cholesky import psd_update_vectors
 
 
 @dataclasses.dataclass
 class _CachedFactor:
-    chol: jax.Array   # lower-triangular L with L L^T = G + sigma I
+    factor: Any       # backend-opaque factor of G + sigma I
     stale_rank: int   # update vectors absorbed since the last full factorization
-
-
-@jax.jit
-def _cold_factor(G, sigma):
-    d = G.shape[0]
-    return jnp.linalg.cholesky(G + sigma * jnp.eye(d, dtype=G.dtype))
-
-
-@jax.jit
-def _factor_solve(L, h):
-    return jax.scipy.linalg.cho_solve((L, True), h)
-
-
-@jax.jit
-def _multi_sigma_factor_solve(G, h, sigmas):
-    """Batched Phase 3: factors and solutions for every sigma in one call.
-
-    One batched Cholesky over the stacked (S, d, d) shifted Grams, then a
-    scan of cho_solves (jax's *batched* triangular solve is slow on CPU;
-    a scan of rank-1-batch solves inside the same jit is not).
-    """
-    eye = jnp.eye(G.shape[0], dtype=G.dtype)
-    Ls = jnp.linalg.cholesky(G[None] + sigmas[:, None, None] * eye[None])
-
-    def step(_, L):
-        return None, jax.scipy.linalg.cho_solve((L, True), h)
-
-    _, ws = jax.lax.scan(step, None, Ls)
-    return Ls, ws
-
-
-@jax.jit
-def _eigh_gram(G):
-    return jnp.linalg.eigh(G)
-
-
-@jax.jit
-def _spectral_solve(lam, Q, h, sigmas):
-    """w(sigma) for all sigmas from G's eigendecomposition.
-
-    Corollary-1 structure: G + sigma I shares G's eigenbasis, so after ONE
-    eigh every sigma costs only matmuls — O(d^2) per sigma, no factorization.
-    """
-    qh = Q.T @ h
-    return (qh[None] / (lam[None] + sigmas[:, None])) @ Q.T
 
 
 @jax.jit
@@ -111,19 +76,31 @@ def _loco_solve(G, h, Gk, hk, sigmas):
 class FusionEngine:
     """Stateful fusion server over one model's sufficient statistics."""
 
-    def __init__(self, dim: int, *, dtype=jnp.float32,
+    def __init__(self, dim: int, *, dtype=None,
+                 backend: LinalgBackend | None = None,
                  max_update_rank: int | None = None, rank_tol: float = 1e-7):
-        self._fused = zeros_like_stats(dim, dtype)
+        if backend is None:
+            backend = DenseBackend(dim, dtype=dtype if dtype is not None
+                                   else jnp.float32)
+        elif dtype is not None and jnp.dtype(dtype) != jnp.dtype(backend.dtype):
+            # A silent downcast here would make precision differ between
+            # backends for the same call; construct the backend with the
+            # dtype you want instead.
+            raise ValueError(f"requested dtype {jnp.dtype(dtype)} != backend "
+                             f"dtype {jnp.dtype(backend.dtype)}")
+        self.backend: LinalgBackend = backend
+        if self.backend.dim != dim:
+            raise ValueError(
+                f"backend dim {self.backend.dim} != engine dim {dim}")
         self._clients: dict[Hashable, SuffStats] = {}
         # dropped id -> (stats, update vectors computed at drop time, reused
         # verbatim on restore so drop->restore round-trips the factors)
         self._dropped: dict[Hashable, tuple[SuffStats, jax.Array | None]] = {}
         self._factors: dict[float, _CachedFactor] = {}
-        self._spectral: tuple[jax.Array, jax.Array] | None = None  # (lam, Q)
         self.max_update_rank = (max(1, dim // 4) if max_update_rank is None
                                 else max_update_rank)
         self.rank_tol = rank_tol
-        self.dtype = dtype
+        self.dtype = self.backend.dtype
         # Observability counters (surfaced by benchmarks and serve_fusion).
         self.stats_version = 0
         self.cold_factorizations = 0
@@ -140,7 +117,16 @@ class FusionEngine:
         if not items:
             raise ValueError("need at least one client's statistics")
         d = items[0][1].dim
-        eng = cls(d, dtype=items[0][1].gram.dtype, **kwargs)
+        kwargs.setdefault("dtype", items[0][1].gram.dtype)
+        backend = kwargs.get("backend")
+        if backend is not None and int(backend.count) != 0:
+            # Reusing a populated backend would silently fuse ON TOP of its
+            # existing (G, h), double-counting statistics.
+            raise ValueError(
+                "backend already holds fused statistics "
+                f"(count={int(backend.count)}); build the engine with "
+                "from_stats, or pass a fresh backend")
+        eng = cls(d, **kwargs)
         for cid, s in items:
             eng.ingest(s, client_id=cid)
         return eng
@@ -148,8 +134,9 @@ class FusionEngine:
     @classmethod
     def from_stats(cls, stats: SuffStats, **kwargs) -> "FusionEngine":
         """Engine over pre-fused statistics (no per-client retention)."""
-        eng = cls(stats.dim, dtype=stats.gram.dtype, **kwargs)
-        eng._fused = stats
+        kwargs.setdefault("dtype", stats.gram.dtype)
+        eng = cls(stats.dim, **kwargs)
+        eng.backend.set_stats(stats)
         eng.stats_version += 1
         return eng
 
@@ -157,11 +144,12 @@ class FusionEngine:
 
     @property
     def stats(self) -> SuffStats:
-        return self._fused
+        """Dense view of the fused statistics (gathers on a sharded backend)."""
+        return self.backend.stats()
 
     @property
     def dim(self) -> int:
-        return self._fused.dim
+        return self.backend.dim
 
     @property
     def client_ids(self) -> tuple[Hashable, ...]:
@@ -174,16 +162,17 @@ class FusionEngine:
     @property
     def count(self) -> int:
         """Effective sample size currently fused (Thm 8 reporting)."""
-        return int(self._fused.count)
+        return int(self.backend.count)
 
     def summary(self) -> dict:
         return {
             "dim": self.dim,
+            "backend": self.backend.name,
             "clients": len(self._clients),
             "dropped": len(self._dropped),
             "rows": self.count,
             "cached_sigmas": sorted(self._factors),
-            "spectral_cached": self._spectral is not None,
+            "spectral_cached": self.backend.spectral_ready,
             "stats_version": self.stats_version,
             "cold_factorizations": self.cold_factorizations,
             "incremental_updates": self.incremental_updates,
@@ -204,7 +193,7 @@ class FusionEngine:
         """
         if stats.dim != self.dim:
             raise ValueError(f"stats dim {stats.dim} != engine dim {self.dim}")
-        self._fused = self._fused + stats
+        self.backend.fuse(stats, 1.0)
         if client_id is not None:
             prev = self._clients.get(client_id)
             self._clients[client_id] = stats if prev is None else prev + stats
@@ -218,17 +207,34 @@ class FusionEngine:
                     update_vectors=A.astype(self.dtype))
         return s
 
+    def ingest_distributed(self, A: jax.Array, b: jax.Array, **kwargs) -> None:
+        """Phases 1+2 on-mesh: each shard's stats are psum'd straight into the
+        backend-held (sharded) state — the fused Gram never lands replicated.
+
+        Requires a backend with a ``fuse_distributed`` method (ShardedBackend).
+        Mesh shards are not ledger clients: dropout on this path is the
+        ``participation`` mask (Thm 8), not ``drop``/``restore``.
+        """
+        fuse = getattr(self.backend, "fuse_distributed", None)
+        if fuse is None:
+            raise NotImplementedError(
+                f"backend {self.backend.name!r} has no on-mesh fusion path")
+        fuse(A, b, **kwargs)
+        # Unknown-rank delta folded behind the engine's back: drop all caches.
+        self._factors.clear()
+        self.stats_version += 1
+
     def drop(self, client_id: Hashable) -> None:
         """Thm 8: remove a client; state becomes exact on the remaining subset."""
         s = self._clients.pop(client_id)  # KeyError for unknown/already-dropped
         vectors = self._touch_factors(s, None, sign=-1.0)
-        self._fused = self._fused - s
+        self.backend.fuse(s, -1.0)
         self._dropped[client_id] = (s, vectors)
 
     def restore(self, client_id: Hashable) -> None:
         """Thm 8 rejoin: add a dropped client back, exactly."""
         s, vectors = self._dropped.pop(client_id)
-        self._fused = self._fused + s
+        self.backend.fuse(s, 1.0)
         self._clients[client_id] = s
         self._touch_factors(s, vectors, sign=1.0)
 
@@ -239,16 +245,19 @@ class FusionEngine:
         after an ``apply`` mixes repaired and raw statistics — acceptable for
         PSD repair (a projection), but the caller owns that judgement.
         """
-        self._fused = fn(self._fused)
+        self.backend.set_stats(fn(self.backend.stats()))
         self._factors.clear()
-        self._spectral = None
         self.stats_version += 1
 
     def _touch_factors(self, delta: SuffStats, update_vectors, sign: float):
         """Up/down-date every cached factor by a PSD delta, or evict it."""
         self.stats_version += 1
-        self._spectral = None  # eigenbasis has no cheap low-rank update here
         if not self._factors:
+            return update_vectors
+        if not self.backend.supports_update:
+            # Backend has no incremental path (e.g. sharded block factors):
+            # evict everything; next solve per sigma refactorizes on-mesh.
+            self._factors.clear()
             return update_vectors
         if update_vectors is None:
             # rank(G_k) <= min(rows, d); skip the eigh when it cannot pay off.
@@ -261,7 +270,7 @@ class FusionEngine:
         for sigma, f in self._factors.items():
             if rank is not None and f.stale_rank + rank <= self.max_update_rank:
                 fresh[sigma] = _CachedFactor(
-                    chol_update(f.chol, update_vectors, sign=sign),
+                    self.backend.update(f.factor, update_vectors, sign),
                     f.stale_rank + rank)
                 self.incremental_updates += 1
             # else: evict; next solve at this sigma refactorizes from scratch.
@@ -270,21 +279,19 @@ class FusionEngine:
 
     # -- solving (Thm 3 / Prop 5) -------------------------------------------
 
-    def factor(self, sigma: float) -> jax.Array:
-        """Cached (or freshly computed) Cholesky factor of G + sigma I."""
+    def factor(self, sigma: float):
+        """Cached (or freshly computed) factor of G + sigma I (backend-opaque)."""
         key = float(sigma)
         f = self._factors.get(key)
         if f is None:
-            L = _cold_factor(self._fused.gram,
-                             jnp.asarray(key, self._fused.gram.dtype))
-            f = _CachedFactor(L, 0)
+            f = _CachedFactor(self.backend.factor(key), 0)
             self._factors[key] = f
             self.cold_factorizations += 1
-        return f.chol
+        return f.factor
 
     def solve(self, sigma: float) -> jax.Array:
         """Phase 3 (Thm 3): w = (G + sigma I)^{-1} h off the cached factor."""
-        return _factor_solve(self.factor(sigma), self._fused.moment)
+        return self.backend.solve(self.factor(sigma))
 
     def solve_batch(self, sigmas: Sequence[float], *,
                     method: str = "auto") -> jax.Array:
@@ -298,44 +305,50 @@ class FusionEngine:
         the stats next change — after which ANY sigma grid costs only
         matmuls (Corollary-1 spectral-shift structure). The right choice for
         many-sigma / many-tenant serving; does not warm the Cholesky cache.
+        Backends without a spectral path (sharded) fall back to ``chol``.
 
         ``"auto"`` picks spectral when its eigh is already cached or the
         grid is large enough (>= 16) to amortize it.
         """
         keys = [float(s) for s in sigmas]
-        dtype = self._fused.gram.dtype
         if method == "auto":
-            method = ("spectral" if self._spectral is not None
+            method = ("spectral" if self.backend.spectral_ready
                       or len(keys) >= 16 else "chol")
         if method == "spectral":
-            if self._spectral is None:
-                lam, Q = _eigh_gram(self._fused.gram)
-                self._spectral = (lam, Q)
-                self.cold_factorizations += 1
-            lam, Q = self._spectral
-            return _spectral_solve(lam, Q, self._fused.moment,
-                                   jnp.asarray(keys, dtype))
+            was_ready = self.backend.spectral_ready
+            ws = self.backend.spectral(keys)
+            if ws is not None:
+                if not was_ready:
+                    self.cold_factorizations += 1
+                return ws
+            method = "chol"  # backend declined; fall through to the sweep
         if method != "chol":
             raise ValueError(f"unknown method {method!r}")
-        Ls, ws = _multi_sigma_factor_solve(
-            self._fused.gram, self._fused.moment, jnp.asarray(keys, dtype))
-        for i, k in enumerate(keys):
-            # Overwrite: the fresh factor supersedes any stale incrementally
-            # updated one (free accuracy/staleness reset).
-            self._factors[k] = _CachedFactor(Ls[i], 0)
+        factors, ws = self.backend.solve_batch(keys)
+        if factors is not None:
+            for k, fac in zip(keys, factors):
+                # Overwrite: the fresh factor supersedes any stale
+                # incrementally updated one (free accuracy/staleness reset).
+                self._factors[k] = _CachedFactor(fac, 0)
         return ws
 
     def loco_weights(self, sigmas: Sequence[float]
                      ) -> tuple[list[Hashable], jax.Array]:
-        """Prop 5 server step for ALL (k, sigma): one call, (K, S, d)."""
+        """Prop 5 server step for ALL (k, sigma): one call, (K, S, d).
+
+        Runs on the dense view of the fused stats: the per-client statistics
+        it subtracts are retained densely regardless of backend, so LOCO is
+        only meaningful at dimensions where K dense Grams fit anyway.
+        """
         if not self._clients:
             raise ValueError("no retained per-client statistics")
         ids = list(self._clients)
+        fused = self.backend.stats()
         Gk = jnp.stack([self._clients[i].gram for i in ids])
         hk = jnp.stack([self._clients[i].moment for i in ids])
-        dtype = self._fused.gram.dtype
-        W = _loco_solve(self._fused.gram, self._fused.moment, Gk, hk,
-                        jnp.asarray([float(s) for s in sigmas], dtype))
+        W = _loco_solve(fused.gram, fused.moment, Gk, hk,
+                        jnp.asarray([float(s) for s in sigmas],
+                                    fused.gram.dtype))
         return ids, W
 
     def loco_cv(self, client_data: Mapping[Hashable, tuple[jax.Array, jax.Array]]
@@ -352,7 +365,7 @@ class FusionEngine:
         if not isinstance(client_data, Mapping):
             client_data = dict(enumerate(client_data))
         ids, W = self.loco_weights(sigmas)          # (K, S, d)
-        losses = jnp.zeros((len(sigmas),), self._fused.moment.dtype)
+        losses = jnp.zeros((len(sigmas),), self.dtype)
         for k, cid in enumerate(ids):
             A_k, b_k = client_data[cid]
             resid = A_k @ W[k].T - b_k[:, None]     # (n_k, S)
