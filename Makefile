@@ -3,13 +3,19 @@ PY ?= python
 # Tier-1 gate: the full test suite (which already includes the sharded
 # equivalence tests and their 8-device child), a fast fusion-engine perf
 # smoke (writes experiments/repro/fusion_engine_bench.json, exits nonzero if
-# any perf claim fails), and one dense-vs-sharded crossover measurement so
-# experiments/repro/ tracks the sharded table per PR.
+# any perf claim fails), one dense-vs-sharded crossover measurement, and the
+# mutation-path smoke (blocked rank-r update / ingest coalescer / packed
+# payload ledger) so experiments/repro/ tracks write-path perf per PR.
 .PHONY: tier1
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 	PYTHONPATH=src $(PY) benchmarks/fusion_engine_bench.py --smoke
 	PYTHONPATH=src $(PY) benchmarks/sharded_fusion_bench.py --smoke
+	PYTHONPATH=src $(PY) benchmarks/mutation_bench.py --smoke
+
+.PHONY: bench-mutation
+bench-mutation:
+	PYTHONPATH=src $(PY) benchmarks/mutation_bench.py --smoke
 
 # Standalone sharded gate: just the sharded-backend equivalence tests (they
 # spawn their own 8-device host-platform child; jax locks the device count

@@ -6,9 +6,10 @@ dense-vs-sharded solve crossover); persists CSVs under experiments/repro/
 and prints a final claim-validation summary. Exits nonzero if any paper
 claim fails.
 
-``--smoke`` runs the modules that support it (the engine/sharded benches) at
-reduced shapes/reps so experiments/repro/ tracks every measurement — the
-sharded fusion one included — per PR without the full-table cost.
+``--smoke`` runs the modules that support it (the engine/sharded/mutation
+benches) at reduced shapes/reps so experiments/repro/ tracks every
+measurement — sharded fusion and the ingest/mutation path included — per PR
+without the full-table cost.
 """
 from __future__ import annotations
 
@@ -20,8 +21,9 @@ import time
 
 def main(smoke: bool = False) -> None:
     from benchmarks import (extensions, fig_3, fusion_engine_bench,
-                            kernels_bench, sharded_fusion_bench, table_ii,
-                            table_iii, table_iv, table_v, table_vi, table_vii)
+                            kernels_bench, mutation_bench,
+                            sharded_fusion_bench, table_ii, table_iii,
+                            table_iv, table_v, table_vi, table_vii)
 
     modules = [
         ("table_ii", table_ii), ("table_iii", table_iii),
@@ -30,6 +32,7 @@ def main(smoke: bool = False) -> None:
         ("extensions", extensions), ("kernels", kernels_bench),
         ("fusion_engine", fusion_engine_bench),
         ("sharded_fusion", sharded_fusion_bench),
+        ("mutation", mutation_bench),
     ]
     all_claims = []
     for name, mod in modules:

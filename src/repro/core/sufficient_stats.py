@@ -104,43 +104,64 @@ def compute_stats(A: jax.Array, b: jax.Array, *, use_pallas: bool = False) -> Su
     return SuffStats(gram=gram, moment=moment, count=jnp.asarray(A.shape[0], jnp.int32))
 
 
-def compute_stats_streaming(A: jax.Array, b: jax.Array, *, chunk: int = 1024) -> SuffStats:
-    """Streaming Phase-1 over row chunks via lax.scan (bounded working set).
-
-    Mirrors what a memory-constrained edge client does: G accumulates in a
-    d x d buffer while rows stream through. Rows are zero-padded to a chunk
-    multiple; zero rows contribute zero to both G and h, so padding is exact.
-    """
+@partial(jax.jit, static_argnames=("chunk",))
+def _streaming_main(A: jax.Array, b: jax.Array, chunk: int) -> SuffStats:
+    """Full chunks via fori_loop + dynamic_slice: the working set beyond the
+    input is one (chunk, d) window and the (d, d) accumulator — A is read in
+    place, never reshaped or copied wholesale."""
     n, d = A.shape
-    n_pad = (-n) % chunk
-    if n_pad:
-        A = jnp.concatenate([A, jnp.zeros((n_pad, d), A.dtype)], axis=0)
-        b = jnp.concatenate([b, jnp.zeros((n_pad,), b.dtype)], axis=0)
-    A = A.reshape(-1, chunk, d)
-    b = b.reshape(-1, chunk)
 
-    def body(carry: SuffStats, xs):
-        a_c, b_c = xs
-        return carry + compute_stats(a_c, b_c), None
+    def body(i, carry: SuffStats) -> SuffStats:
+        a_c = jax.lax.dynamic_slice(A, (i * chunk, 0), (chunk, d))
+        b_c = jax.lax.dynamic_slice(b, (i * chunk,), (chunk,))
+        return carry + compute_stats(a_c, b_c)
 
     init = zeros_like_stats(d, jnp.promote_types(A.dtype, jnp.float32))
-    out, _ = jax.lax.scan(body, init, (A, b))
-    # scan added `chunk` per step including padding; fix the true count.
+    return jax.lax.fori_loop(0, n // chunk, body, init)
+
+
+def compute_stats_streaming(A: jax.Array, b: jax.Array, *, chunk: int = 1024) -> SuffStats:
+    """Streaming Phase-1 over row chunks (bounded working set).
+
+    Mirrors what a memory-constrained edge client does: G accumulates in a
+    d x d buffer while rows stream through, one ``dynamic_slice`` window at
+    a time. Only the ragged tail chunk is zero-padded — zero rows contribute
+    zero to both G and h, so padding is exact — keeping the working set at
+    O(chunk * d) instead of materializing a padded copy of the full A.
+    """
+    n, d = A.shape
+    n_main = (n // chunk) * chunk
+    out = _streaming_main(A[:n_main], b[:n_main], chunk) if n_main \
+        else zeros_like_stats(d, jnp.promote_types(A.dtype, jnp.float32))
+    if n_main < n:
+        tail = n - n_main
+        a_t = jnp.pad(A[n_main:], ((0, chunk - tail), (0, 0)))
+        b_t = jnp.pad(b[n_main:], (0, chunk - tail))
+        out = out + compute_stats(a_t, b_t)
+    # chunk-sized steps over-count padded rows; fix the true count.
     return SuffStats(out.gram, out.moment, jnp.asarray(n, jnp.int32))
 
 
-def fuse_stats(stats: Sequence[SuffStats]) -> SuffStats:
+def fuse_stats(stats: Sequence[SuffStats], *, chunk: int = 8) -> SuffStats:
     """Phase-2 server aggregation: G = sum_k G_k, h = sum_k h_k (Thm 1).
 
-    Implemented as one stacked reduction over the K clients (stack each leaf
-    to (K, ...) and sum along axis 0) rather than K sequential adds — a
-    single XLA reduce instead of a K-deep dependency chain.
+    A chunked tree reduction: at most ``chunk`` Grams are ever stacked into
+    one buffer (a (chunk, d, d) stack-and-sum is one XLA reduce, not a
+    chunk-deep dependency chain), and the chunk partials recurse. Peak extra
+    allocation is O(chunk * d^2 + K/chunk * d^2) instead of the O(K * d^2)
+    a single (K, d, d) stack costs — at K in the hundreds of clients and
+    production d, the full stack is the server's largest transient buffer.
     """
     if not stats:
         raise ValueError("need at least one client's statistics")
     if len(stats) == 1:
         return stats[0]
-    return jax.tree.map(lambda *leaves: jnp.stack(leaves).sum(axis=0), *stats)
+    if len(stats) <= chunk:
+        return jax.tree.map(lambda *leaves: jnp.stack(leaves).sum(axis=0),
+                            *stats)
+    partials = [fuse_stats(stats[i:i + chunk], chunk=chunk)
+                for i in range(0, len(stats), chunk)]
+    return fuse_stats(partials, chunk=chunk)
 
 
 # ---------------------------------------------------------------------------

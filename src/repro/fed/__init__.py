@@ -3,10 +3,12 @@ from repro.fed.comm import (
     ShardedCommRecord,
     crossover_rounds,
     fedavg_comm,
+    measured_one_shot,
     one_shot_comm,
     sharded_oneshot_record,
 )
 from repro.fed.protocol import (
+    PackedStats,
     RunResult,
     run_centralized,
     run_loco_cv,
@@ -17,8 +19,8 @@ from repro.fed.fedavg import IterativeConfig, one_gradient_step, run_iterative
 
 __all__ = [
     "CommRecord", "ShardedCommRecord", "crossover_rounds", "fedavg_comm",
-    "one_shot_comm", "sharded_oneshot_record",
-    "RunResult", "run_centralized", "run_loco_cv", "run_one_shot",
-    "run_one_shot_projected",
+    "measured_one_shot", "one_shot_comm", "sharded_oneshot_record",
+    "PackedStats", "RunResult", "run_centralized", "run_loco_cv",
+    "run_one_shot", "run_one_shot_projected",
     "IterativeConfig", "one_gradient_step", "run_iterative",
 ]

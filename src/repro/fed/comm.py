@@ -4,6 +4,12 @@ Counts are in *floats per client*; ``bytes`` helpers assume fp32 (4 bytes) as
 the paper's MB figures do. Upload for One-Shot exploits Gram symmetry:
 d(d+1)/2 + d floats up, d down. FedAvg: R*d up and R*d down.
 
+Since the protocol runs actually ship :class:`~repro.fed.protocol.PackedStats`
+payloads (the Gram's d(d+1)/2 lower triangle, not the full square),
+``measured_one_shot`` builds the record from the *payload arrays themselves*
+— the ledger reports bytes that moved, and a test pins measured == Thm 4's
+formula so the two can never drift apart silently.
+
 The sharded serving path (server.distributed.ShardedBackend) adds a second
 ledger axis: beyond the client->server uploads Theorem 4 counts, the on-mesh
 psum of the fused statistics moves bytes *between shards*.
@@ -49,6 +55,26 @@ def one_shot_comm(d: int, num_clients: int, *, projected_m: int | None = None) -
         upload_floats_per_client=k * (k + 1) // 2 + k,
         download_floats_per_client=k,
         num_clients=num_clients,
+        rounds=1,
+    )
+
+
+def measured_one_shot(payloads, download_floats: int) -> CommRecord:
+    """Ledger from actual wire payloads, not the Thm 4 formula.
+
+    ``payloads`` is the per-client upload collection (anything with a
+    ``wire_floats`` property, e.g. ``fed.protocol.PackedStats``); the upload
+    count is the *maximum* over clients (Thm 4 is a per-client bound and
+    every client ships the same shapes, so max == the common size — asserted
+    here so a heterogeneous bug is loud rather than averaged away).
+    """
+    sizes = {int(p.wire_floats) for p in payloads}
+    if len(sizes) > 1:
+        raise ValueError(f"heterogeneous upload payloads: {sorted(sizes)}")
+    return CommRecord(
+        upload_floats_per_client=max(sizes) if sizes else 0,
+        download_floats_per_client=download_floats,
+        num_clients=len(payloads),
         rounds=1,
     )
 

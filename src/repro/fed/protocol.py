@@ -11,6 +11,13 @@ hand everything server-side — aggregation, factorization, solving, LOCO CV —
 to one engine instance, which each run returns in ``extras["engine"]`` so
 callers can keep serving from the fused state (drop/restore/solve at new
 sigmas) without re-running the protocol.
+
+What travels between the two sides is :class:`PackedStats` — the Theorem-4
+wire format. A client Gram is symmetric, so the upload ships only its
+d(d+1)/2 lower triangle (``kernels.ops.pack_lower``) plus the d-float
+moment; the server unpacks before ingesting. Comm records are built from
+the actual payload arrays (``comm.measured_one_shot``), so the ledger
+reports bytes that moved rather than a formula.
 """
 from __future__ import annotations
 
@@ -25,7 +32,39 @@ from repro.core import privacy, projection
 from repro.core.sufficient_stats import SuffStats, compute_stats
 from repro.data.synthetic import FederatedDataset
 from repro.fed import comm
+from repro.kernels import ops as kernel_ops
 from repro.server import FusionEngine, LinalgBackend, ShardedBackend
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedStats:
+    """One client's upload in the Theorem-4 wire encoding.
+
+    ``tri`` is the row-major lower triangle of the client Gram — d(d+1)/2
+    floats instead of the d^2 a square upload would cost — and ``moment``
+    the d-float moment vector; ``count`` rides along as metadata (one int,
+    not part of the Thm 4 float budget). ``pack``/``unpack`` are exact:
+    no arithmetic touches the kept entries.
+    """
+
+    tri: jax.Array       # (d(d+1)/2,)
+    moment: jax.Array    # (d,)
+    count: jax.Array
+    dim: int
+
+    @classmethod
+    def pack(cls, stats: SuffStats) -> "PackedStats":
+        return cls(kernel_ops.pack_lower(stats.gram), stats.moment,
+                   stats.count, stats.dim)
+
+    def unpack(self) -> SuffStats:
+        return SuffStats(kernel_ops.unpack_lower(self.tri, self.dim),
+                         self.moment, self.count)
+
+    @property
+    def wire_floats(self) -> int:
+        """Floats on the wire for this upload (what the ledger measures)."""
+        return int(self.tri.size + self.moment.size)
 
 
 @dataclasses.dataclass
@@ -45,24 +84,27 @@ def client_phase(
     dp_clip: tuple[float, float] | None = None,
     dp_key: jax.Array | None = None,
     client_stats: Sequence[SuffStats] | None = None,
-) -> dict[int, SuffStats]:
+) -> dict[int, PackedStats]:
     """Phase 1 on every participating client: what each one uploads.
 
-    ``client_stats`` short-circuits the (deterministic) local computation with
-    already-computed statistics — e.g. the ones a LOCO CV pass just used —
-    but never the DP pipeline, whose clipping must see the raw rows.
+    Returns the *wire payloads* — each client's statistics already in the
+    :class:`PackedStats` triangular encoding (Thm 4's d(d+1)/2 + d floats);
+    the server side unpacks. ``client_stats`` short-circuits the
+    (deterministic) local computation with already-computed statistics —
+    e.g. the ones a LOCO CV pass just used — but never the DP pipeline,
+    whose clipping must see the raw rows.
     """
     keys = (jax.random.split(dp_key, ds.num_clients)
             if dp is not None else [None] * ds.num_clients)
     if dp is not None and dp_clip is None:
         dp_clip = (1.2 * ds.dim ** 0.5, 4.0)
 
-    uploads: dict[int, SuffStats] = {}
+    uploads: dict[int, PackedStats] = {}
     for k, (A_k, b_k) in enumerate(ds.clients):
         if participating is not None and not participating[k]:
             continue
         if dp is None and client_stats is not None:
-            uploads[k] = client_stats[k]
+            uploads[k] = PackedStats.pack(client_stats[k])
             continue
         s_g, s_h = (1.0, 1.0)
         if dp is not None:
@@ -73,7 +115,7 @@ def client_phase(
         if dp is not None:
             s = privacy.privatize_stats(keys[k], s, *dp,
                                         sensitivity_g=s_g, sensitivity_h=s_h)
-        uploads[k] = s
+        uploads[k] = PackedStats.pack(s)
     return uploads
 
 
@@ -104,16 +146,25 @@ def run_one_shot(
       backend: linalg backend for the engine; defaults to dense. With a
         sharded backend, ``extras["engine"]`` is mesh-backed — the fused
         Gram lives block-sharded and the solve runs on-mesh — and the
-        CommRecord gains the cross-shard psum ledger.
-      mesh: shorthand for ``backend=ShardedBackend(ds.dim, mesh)``.
+        CommRecord gains the cross-shard psum ledger. ``backend="auto"``
+        picks dense vs sharded(``mesh``) from the measured crossover
+        threshold (``server.select``).
+      mesh: shorthand for ``backend=ShardedBackend(ds.dim, mesh)`` (or the
+        candidate mesh under ``backend="auto"``).
     """
     t0 = time.perf_counter()
-    if backend is None and mesh is not None:
+    if backend == "auto":
+        from repro.server import auto_backend
+
+        backend = auto_backend(ds.dim, mesh)
+    elif backend is None and mesh is not None:
         backend = ShardedBackend(ds.dim, mesh)
     uploads = client_phase(ds, participating=participating, dp=dp,
                            dp_clip=dp_clip, dp_key=dp_key,
                            client_stats=client_stats)
-    engine = FusionEngine.from_clients(uploads, backend=backend)
+    # Server side: decode each Thm-4 wire payload, then fuse.
+    engine = FusionEngine.from_clients(
+        {k: p.unpack() for k, p in uploads.items()}, backend=backend)
     if psd_repair:
         engine.apply(privacy.psd_repair)
     w = engine.solve(sigma)
@@ -130,7 +181,8 @@ def run_one_shot(
         record = comm.sharded_oneshot_record(
             ds.dim, len(uploads), backend.fusion_axis_sizes)
     else:
-        record = comm.one_shot_comm(ds.dim, len(uploads))
+        record = comm.measured_one_shot(list(uploads.values()),
+                                        download_floats=ds.dim)
         extras["fused_stats"] = engine.stats
     return RunResult(
         weights=w,
@@ -151,13 +203,14 @@ def run_one_shot_projected(
     """§IV-F random-projection protocol; returns the lifted w~ = R v."""
     t0 = time.perf_counter()
     R = projection.make_projection(key, ds.dim, m)
-    engine = FusionEngine.from_clients(
-        [projection.projected_stats(A_k, b_k, R) for A_k, b_k in ds.clients])
+    payloads = [PackedStats.pack(projection.projected_stats(A_k, b_k, R))
+                for A_k, b_k in ds.clients]    # m(m+1)/2 + m floats each
+    engine = FusionEngine.from_clients([p.unpack() for p in payloads])
     w = projection.lift(engine.solve(sigma), R)
     w.block_until_ready()
     return RunResult(
         weights=w,
-        comm=comm.one_shot_comm(ds.dim, ds.num_clients, projected_m=m),
+        comm=comm.measured_one_shot(payloads, download_floats=m),
         wall_time_s=time.perf_counter() - t0,
         rounds=1,
         # The engine lives in projected space (dim m): solve() yields v, and

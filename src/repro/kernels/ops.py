@@ -5,11 +5,19 @@ body runs in Python for correctness validation; on a real TPU backend
 ``interpret=False`` compiles to Mosaic. ``use_pallas`` config flags route the
 model/core code here; the default XLA paths in core/ and models/ are the
 numerical references.
+
+``pack_lower``/``unpack_lower`` (the Theorem-4 triangular wire codec for
+client Gram uploads) also live here: they are jitted static-index
+gather/scatter ops rather than Pallas bodies — a data-movement pattern XLA
+already emits optimally on every backend.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import gram as gram_kernel
 from repro.kernels import swa_flash as swa_kernel
@@ -68,6 +76,45 @@ def gemm_nt(C: jax.Array, A: jax.Array, B: jax.Array, *, alpha: float = -1.0,
                                      block_m=block_m, block_n=block_n,
                                      interpret=interpret)
     return out[:m, :n]
+
+
+_TRIL_IDX: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+
+def _tril(d: int) -> tuple[np.ndarray, np.ndarray]:
+    """Static lower-triangle index pair for dimension d (host-side, cached)."""
+    if d not in _TRIL_IDX:
+        _TRIL_IDX[d] = np.tril_indices(d)
+    return _TRIL_IDX[d]
+
+
+@jax.jit
+def pack_lower(G: jax.Array) -> jax.Array:
+    """(d, d) symmetric -> (d(d+1)/2,) row-major lower triangle.
+
+    The Theorem-4 wire encoding of a client Gram: symmetry makes the strict
+    upper triangle redundant, so uploads ship exactly d(d+1)/2 floats. One
+    fused gather over static indices — the inverse of :func:`unpack_lower`.
+    """
+    i, j = _tril(G.shape[-1])
+    return G[..., i, j]
+
+
+@partial(jax.jit, static_argnames=("d",))
+def unpack_lower(tri: jax.Array, d: int) -> jax.Array:
+    """(d(d+1)/2,) packed lower triangle -> full symmetric (d, d).
+
+    Exact roundtrip with :func:`pack_lower` for symmetric input: scatter the
+    triangle, then mirror the strict lower part — no arithmetic touches the
+    stored values, so pack/unpack is bit-identical on the kept entries.
+    """
+    if tri.shape[-1] != d * (d + 1) // 2:
+        raise ValueError(f"packed length {tri.shape[-1]} != d(d+1)/2 "
+                         f"for d={d}")
+    i, j = _tril(d)
+    low = jnp.zeros((*tri.shape[:-1], d, d), tri.dtype).at[..., i, j].set(tri)
+    strict = jnp.tril(low, -1)
+    return low + jnp.swapaxes(strict, -1, -2)
 
 
 def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

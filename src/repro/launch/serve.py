@@ -83,7 +83,8 @@ def serve_fusion(*, num_clients: int = 16, samples_per_client: int = 256,
                  dim: int = 128, tenants: int = 8, sigmas_per_tenant: int = 4,
                  queries: int = 256, query_rows: int = 8,
                  sharded_tenants: int = 0, mesh=None,
-                 seed: int = 0) -> dict:
+                 stream_deltas: int = 0, query_every: int = 8,
+                 coalesce_rank: int = 32, seed: int = 0) -> dict:
     """Serve many tenants' ridge queries through per-backend FusionEngines.
 
     Each tenant owns a sigma grid (its own bias/variance tradeoff over the
@@ -94,12 +95,21 @@ def serve_fusion(*, num_clients: int = 16, samples_per_client: int = 256,
     X @ w_sigma. Each engine warms every distinct sigma its tenants use with
     one ``solve_batch`` and serves all queries off cached factors; the naive
     baseline re-factorizes per query (what the per-table scripts used to do).
+
+    With ``stream_deltas > 0`` the loop also absorbs §VI-C streaming traffic
+    between queries: ``stream_deltas`` single-row deltas arrive with one
+    predict every ``query_every`` deltas. The per-request path mutates every
+    cached factor per delta (``ingest_rows``); the production path queues
+    through the engine's coalescer (``ingest_rows_async``, flush rank
+    ``coalesce_rank``) so each flush applies one blocked rank-r update —
+    factor mutations drop by ~``min(coalesce_rank, query_every)``x at
+    identical solve results (reads drain the queue).
     """
     from repro.core import fusion
     from repro.core.sufficient_stats import compute_stats
     from repro.data import synthetic
     from repro.launch import mesh as mesh_lib
-    from repro.server import FusionEngine, ShardedBackend
+    from repro.server import CoalescerPolicy, FusionEngine, ShardedBackend
 
     ds = synthetic.generate(jax.random.PRNGKey(seed), num_clients=num_clients,
                             samples_per_client=samples_per_client, dim=dim)
@@ -146,6 +156,47 @@ def serve_fusion(*, num_clients: int = 16, samples_per_client: int = 256,
         jax.block_until_ready(engines[backend_of[t]].predict(X, sigma))
     t_batched = time.perf_counter() - t0
 
+    streaming = None
+    if stream_deltas:
+        sig = sorted(grids[0])
+        Xq = jnp.asarray(rng.standard_normal((query_rows, dim)), jnp.float32)
+        deltas = [
+            (jnp.asarray(rng.standard_normal((1, dim)), jnp.float32),
+             jnp.asarray(rng.standard_normal((1,)), jnp.float32))
+            for _ in range(stream_deltas)]
+
+        def absorb(eng, ingest):
+            eng.solve_batch(sig, method="chol")       # warm every factor
+            m0 = eng.incremental_updates + eng.cold_factorizations
+            t0 = time.perf_counter()
+            for i, (dA, db) in enumerate(deltas):
+                ingest(eng, dA, db)
+                if (i + 1) % query_every == 0:
+                    jax.block_until_ready(eng.predict(Xq, sig[0]))
+            w = eng.solve(sig[-1])                    # drains any remainder
+            jax.block_until_ready(w)
+            dt = time.perf_counter() - t0
+            return w, dt, eng.incremental_updates + eng.cold_factorizations - m0
+
+        policy = CoalescerPolicy(max_rank=coalesce_rank)
+        w_sync, t_sync, m_sync = absorb(
+            FusionEngine.from_clients(stats),
+            lambda e, dA, db: e.ingest_rows(dA, db))
+        w_coal, t_coal, m_coal = absorb(
+            FusionEngine.from_clients(stats, coalesce=policy),
+            lambda e, dA, db: e.ingest_rows_async(dA, db))
+        streaming = {
+            "deltas": stream_deltas,
+            "query_every": query_every,
+            "coalesce_rank": coalesce_rank,
+            "mutations_per_delta": m_sync / stream_deltas,
+            "mutations_per_delta_coalesced": m_coal / stream_deltas,
+            "mutation_reduction": m_sync / max(m_coal, 1),
+            "sync_s": t_sync,
+            "coalesced_s": t_coal,
+            "max_weight_delta": float(jnp.abs(w_sync - w_coal).max()),
+        }
+
     return {
         "tenants": tenants,
         "sharded_tenants": sharded_tenants,
@@ -154,6 +205,7 @@ def serve_fusion(*, num_clients: int = 16, samples_per_client: int = 256,
         "naive_qps": queries / t_naive,
         "batched_qps": queries / t_batched,
         "speedup": t_naive / t_batched,
+        "streaming": streaming,
         "engines": {name: eng.summary() for name, eng in engines.items()},
     }
 
@@ -172,16 +224,30 @@ def main() -> None:
     ap.add_argument("--sharded-tenants", type=int, default=0,
                     help="serve the first N tenants off a mesh-sharded "
                          "backend (host CPU mesh; degrades to 1 device)")
+    ap.add_argument("--stream-deltas", type=int, default=0,
+                    help="absorb N streaming row deltas between queries, "
+                         "per-request vs coalesced (§VI-C ingest path)")
+    ap.add_argument("--coalesce-rank", type=int, default=32,
+                    help="coalescer flush threshold (update rank per flush)")
     args = ap.parse_args()
     if args.mode == "fusion":
         res = serve_fusion(dim=args.dim, tenants=args.tenants,
                            queries=args.queries,
-                           sharded_tenants=args.sharded_tenants)
+                           sharded_tenants=args.sharded_tenants,
+                           stream_deltas=args.stream_deltas,
+                           coalesce_rank=args.coalesce_rank)
         print(f"[serve_fusion] {res['queries']} queries, {res['tenants']} "
               f"tenants ({res['sharded_tenants']} sharded), "
               f"{res['distinct_sigmas']} distinct sigmas")
         print(f"[serve_fusion] naive {res['naive_qps']:.0f} qps -> batched "
               f"{res['batched_qps']:.0f} qps ({res['speedup']:.1f}x)")
+        if res["streaming"] is not None:
+            s = res["streaming"]
+            print(f"[serve_fusion] streaming {s['deltas']} deltas: "
+                  f"{s['mutations_per_delta']:.1f} -> "
+                  f"{s['mutations_per_delta_coalesced']:.2f} factor "
+                  f"mutations/delta ({s['mutation_reduction']:.1f}x fewer), "
+                  f"max|dw|={s['max_weight_delta']:.1e}")
         for name, summary in res["engines"].items():
             print(f"[serve_fusion] {name} engine: {summary}")
         return

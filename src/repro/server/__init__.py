@@ -16,9 +16,14 @@ lives behind a pluggable ``LinalgBackend``:
 backends are tested against.
 """
 from repro.server.backends import DenseBackend, LinalgBackend
-from repro.server.cholesky import chol_rank1, chol_update, psd_update_vectors
+from repro.server.cholesky import (chol_rank1, chol_update,
+                                   chol_update_blocked, panel_transform,
+                                   psd_update_vectors)
 from repro.server.distributed import ShardedBackend, ShardedFactor
-from repro.server.engine import FusionEngine
+from repro.server.engine import CoalescerPolicy, FusionEngine
+from repro.server.select import auto_backend, backend_threshold
 
-__all__ = ["FusionEngine", "LinalgBackend", "DenseBackend", "ShardedBackend",
-           "ShardedFactor", "chol_rank1", "chol_update", "psd_update_vectors"]
+__all__ = ["FusionEngine", "CoalescerPolicy", "LinalgBackend", "DenseBackend",
+           "ShardedBackend", "ShardedFactor", "auto_backend",
+           "backend_threshold", "chol_rank1", "chol_update",
+           "chol_update_blocked", "panel_transform", "psd_update_vectors"]

@@ -33,9 +33,18 @@ never materializing the fused Gram on one device:
 
 The engine treats factors as opaque: a :class:`ShardedFactor` wraps either
 the block-sharded lower factor (reused across solves at the same sigma) or a
-CG marker (re-solved per call). ``supports_update`` is False — PSD deltas
-evict cached factors and the next solve refactorizes on-mesh, which keeps
-the staleness policy in the engine and exactness trivially intact.
+CG marker (re-solved per call). ``block_chol`` factors support *incremental*
+rank-r mutation (``update``): the same blocked up/downdate the dense backend
+runs (server.cholesky.panel_transform) executed over the existing block
+layout — per block column, the bs x bs diagonal tile is psum-replicated,
+every device computes the panel transform T redundantly (O((bs+r)^2 bs r)
+scalar work, tiny), and the trailing application ``[L21 | X2^T] @ T`` is a
+LOCAL GEMM on each shard's rows of that block column (Pallas ``gemm_nt``
+tile under ``use_pallas``), with one (dp, r) all-gather re-replicating the
+transformed update vectors. Mutations therefore cost O(dp (bs + r) r) comm
+and O(dp^2 (bs+r)^2 / (bs * shards)) local flops instead of the O(d^3/3)
+on-mesh refactorization they used to trigger. CG factors decline (return
+``None``): they hold no L to update, and the engine evicts as before.
 """
 from __future__ import annotations
 
@@ -51,6 +60,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.sufficient_stats import SuffStats, compute_stats
 from repro.launch.sharding import FUSION_RULES, GRAM_AXES, ShardingRules
+from repro.server.cholesky import panel_transform
 
 
 @dataclasses.dataclass
@@ -89,7 +99,7 @@ class ShardedBackend:
     """Mesh-sharded linalg backend for :class:`~repro.server.FusionEngine`."""
 
     name = "sharded"
-    supports_update = False
+    supports_update = True
 
     def __init__(self, dim: int, mesh: Mesh, *, dtype=jnp.float32,
                  block_size: int | None = None, method: str = "auto",
@@ -223,8 +233,36 @@ class ShardedBackend:
         self._count = jnp.asarray(stats.count, jnp.int32)
         self._diag = None
 
-    def update(self, factor, update_vectors, sign):
-        return None   # no incremental path: engine evicts, next solve refactors
+    def update(self, factor: ShardedFactor, update_vectors: jax.Array,
+               sign: float) -> ShardedFactor | None:
+        """Blocked rank-r up/downdate of a block-sharded factor, on-mesh.
+
+        Returns a fresh :class:`ShardedFactor` whose L absorbed
+        ``sign * U^T U`` without leaving the block layout; ``None`` for CG
+        factors (nothing to update — the engine evicts and re-solves).
+        """
+        r = int(update_vectors.shape[0])
+        if factor.kind != "block_chol":
+            return None
+        if r == 0:
+            return factor
+        # Bucket the rank to the next power of two: coalescer flush ranks are
+        # timing-dependent, and a shard_map retrace per distinct r would grow
+        # the jit cache without bound on the hot mutation path. Zero rows are
+        # exact identities in the recurrence (x_k = 0 -> rho = L_kk, c = 1,
+        # s = 0), so rank padding costs some flops but no accuracy.
+        bucket = 1 << (r - 1).bit_length()
+        key = ("update", bucket, sign > 0)
+        fn = self._jitted.get(key)
+        if fn is None:
+            fn = jax.jit(shard_map(
+                partial(self._local_update, sign=1.0 if sign > 0 else -1.0),
+                mesh=self.mesh, in_specs=(self.spec, P()),
+                out_specs=self.spec, check_rep=False))
+            self._jitted[key] = fn
+        U = jnp.pad(update_vectors.astype(self._dtype),
+                    ((0, bucket - r), (0, self.padded - self._dim)))
+        return ShardedFactor("block_chol", factor.sigma, fn(factor.L, U))
 
     def spectral(self, sigmas):
         return None   # no on-mesh eigh: engine falls back to the Cholesky sweep
@@ -385,6 +423,61 @@ class ShardedBackend:
             # do get clobbered but are never read again.
             lc = jax.lax.dynamic_slice(Lcol, (co, 0), (cl, bs))
             Gl = self._syrk(Gl, mine, lc)
+        return Ll
+
+    def _local_update(self, Ll, X, *, sign):
+        """Blocked rank-r up/downdate over the block layout.
+
+        Ll is this shard's (rl, cl) block of the factor; X the replicated
+        (r, dp) update vectors (zero on pad columns, so pad stays exactly
+        sqrt(sigma) I). Per block column: the bs x bs diagonal tile is
+        psum-replicated, :func:`~repro.server.cholesky.panel_transform`
+        runs redundantly everywhere (panel-local scalar work), and each
+        shard applies the trailing transformation to ITS rows of the block
+        column in one local GEMM — the only collectives are the bs-wide
+        strip psum, the bs^2 tile psum, and the (dp, r) gather that
+        re-replicates the transformed update vectors.
+        """
+        bs, nb, rl, cl = self.block_size, self._nb, self._rl, self._cl
+        row_axes, col_axes = self._row_axes, self._col_axes
+        r = X.shape[0]
+        ri = _flat_index(row_axes)
+        ci = _flat_index(col_axes)
+        ro = ri * rl
+        g = ro + jnp.arange(rl)                    # global row ids of my rows
+
+        for k in range(nb):
+            c0 = k * bs
+            qk, lc0 = c0 // cl, c0 % cl
+            pk, lr0 = c0 // rl, c0 % rl
+            # My rows of the block column, replicated across device columns.
+            contrib = jnp.where(ci == qk, Ll[:, lc0:lc0 + bs], 0.0)
+            strip = _psum(contrib, col_axes)                  # (rl, bs)
+            # Diagonal tile, replicated everywhere (one bs^2 psum).
+            tile = _psum(jnp.where(ri == pk, strip[lr0:lr0 + bs], 0.0),
+                         row_axes)
+            Lkk_new, T = panel_transform(tile, X[:, c0:c0 + bs], sign=sign)
+
+            # Trailing application on MY rows only (local GEMM).
+            Xloc = jax.lax.dynamic_slice(X, (0, ro), (r, rl)).T   # (rl, r)
+            Z = jnp.concatenate([strip, Xloc], axis=1)            # (rl, bs+r)
+            if self.use_pallas:
+                from repro.kernels import ops as kernel_ops
+
+                Zn = kernel_ops.gemm_nt(jnp.zeros_like(Z), Z, T.T, alpha=1.0)
+            else:
+                Zn = Z @ T
+            below = (g >= c0 + bs)[:, None]
+            new_strip = jnp.where(below, Zn[:, :bs], strip)
+            new_strip = new_strip.at[lr0:lr0 + bs].set(
+                jnp.where(ri == pk, Lkk_new, new_strip[lr0:lr0 + bs]))
+            Ll = Ll.at[:, lc0:lc0 + bs].set(
+                jnp.where(ci == qk, new_strip, Ll[:, lc0:lc0 + bs]))
+
+            # Re-replicate the transformed update vectors (consumed rows of
+            # X are frozen; only rows below the panel changed).
+            Xloc_new = jnp.where(below, Zn[:, bs:], Xloc)
+            X = _gather(Xloc_new, row_axes).T
         return Ll
 
     def _trsm(self, Lkk, below):

@@ -10,6 +10,8 @@ method              paper surface
 ==================  =======================================================
 ``ingest``          Phase 2 aggregation (Thm 1) / streaming updates (§VI-C)
 ``ingest_rows``     §VI-C with row-level deltas (incremental factor update)
+``ingest_async``    queued §VI-C deltas, coalesced into one rank-r mutation
+``flush``           apply the async queue as ONE fused delta (Thm 1 batching)
 ``ingest_distributed``  Phases 1+2 on-mesh: psum of shard-local stats
 ``drop/restore``    client dropout and rejoin (Thm 8) — exact on the subset
 ``solve``           Phase 3 ridge solve (Thm 3), factor cached per sigma
@@ -26,6 +28,11 @@ runs — is delegated to a :class:`~repro.server.backends.LinalgBackend`
 ``G`` block-sharded across a mesh end to end). What stays here is policy:
 
   * the per-client ledger behind ``drop``/``restore`` and LOCO;
+  * the async ingest coalescer (:class:`CoalescerPolicy`): queued deltas
+    are folded into the server state as one fused delta per flush, so a
+    stream of rank-1 §VI-C updates costs one rank-r factor mutation per
+    flush instead of one per delta — every read drains the queue first, so
+    solves are always exact on everything ingested;
   * per-sigma factor caching with staleness-bounded incremental updates —
     PSD low-rank mutations up/down-date every cached factor in O(r d^2)
     (when the backend supports it) instead of refactorizing at O(d^3/3);
@@ -40,12 +47,14 @@ authoritative for correctness; tests pin the engine against them.
 from __future__ import annotations
 
 import dataclasses
+import math
+import time
 from typing import Any, Callable, Hashable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.sufficient_stats import SuffStats, compute_stats
+from repro.core.sufficient_stats import SuffStats, compute_stats, fuse_stats
 from repro.server.backends import DenseBackend, LinalgBackend
 from repro.server.cholesky import psd_update_vectors
 
@@ -54,6 +63,33 @@ from repro.server.cholesky import psd_update_vectors
 class _CachedFactor:
     factor: Any       # backend-opaque factor of G + sigma I
     stale_rank: int   # update vectors absorbed since the last full factorization
+
+
+@dataclasses.dataclass(frozen=True)
+class CoalescerPolicy:
+    """When the async ingest queue folds itself into the factors.
+
+    ``ingest_async``/``ingest_rows_async`` only queue; a flush applies the
+    whole queue as ONE fused delta — one backend ``fuse`` and one rank-r
+    factor mutation instead of one per delta. Auto-flush triggers when the
+    queued update rank reaches ``max_rank`` (keep it <= the engine's
+    ``max_update_rank`` so a flush stays on the incremental path) or when
+    the oldest queued delta is older than ``max_staleness_s`` — checked on
+    every queue/read operation; there is no background thread, the serving
+    loop drives the clock.
+    """
+
+    max_rank: int = 64
+    max_staleness_s: float = math.inf
+
+
+@dataclasses.dataclass
+class _PendingDelta:
+    stats: SuffStats
+    client_id: Hashable | None
+    update_vectors: jax.Array | None
+    rank_bound: int           # conservative rank if vectors are unknown
+    queued_at: float
 
 
 @jax.jit
@@ -78,7 +114,8 @@ class FusionEngine:
 
     def __init__(self, dim: int, *, dtype=None,
                  backend: LinalgBackend | None = None,
-                 max_update_rank: int | None = None, rank_tol: float = 1e-7):
+                 max_update_rank: int | None = None, rank_tol: float = 1e-7,
+                 coalesce: CoalescerPolicy | None = None):
         if backend is None:
             backend = DenseBackend(dim, dtype=dtype if dtype is not None
                                    else jnp.float32)
@@ -101,16 +138,27 @@ class FusionEngine:
                                 else max_update_rank)
         self.rank_tol = rank_tol
         self.dtype = self.backend.dtype
+        self.coalesce = (CoalescerPolicy(max_rank=self.max_update_rank)
+                         if coalesce is None else coalesce)
+        self._pending: list[_PendingDelta] = []
         # Observability counters (surfaced by benchmarks and serve_fusion).
         self.stats_version = 0
         self.cold_factorizations = 0
         self.incremental_updates = 0
+        self.flushes = 0
+        self.coalesced_deltas = 0
 
     # -- construction -------------------------------------------------------
 
     @classmethod
     def from_clients(cls, stats: Mapping[Hashable, SuffStats] | Sequence[SuffStats],
                      **kwargs) -> "FusionEngine":
+        """Engine over per-client stats; retains each for drop/restore/LOCO.
+
+        ``backend="auto"`` (with optional ``mesh=`` and ``threshold=``)
+        picks dense vs sharded from the measured crossover table — see
+        :mod:`repro.server.select`.
+        """
         items = (stats.items() if isinstance(stats, Mapping)
                  else enumerate(stats))
         items = list(items)
@@ -118,6 +166,13 @@ class FusionEngine:
             raise ValueError("need at least one client's statistics")
         d = items[0][1].dim
         kwargs.setdefault("dtype", items[0][1].gram.dtype)
+        if kwargs.get("backend") == "auto":
+            from repro.server.select import auto_backend
+
+            kwargs["backend"] = auto_backend(
+                d, kwargs.pop("mesh", None),
+                threshold=kwargs.pop("threshold", None),
+                dtype=kwargs["dtype"])
         backend = kwargs.get("backend")
         if backend is not None and int(backend.count) != 0:
             # Reusing a populated backend would silently fuse ON TOP of its
@@ -145,6 +200,7 @@ class FusionEngine:
     @property
     def stats(self) -> SuffStats:
         """Dense view of the fused statistics (gathers on a sharded backend)."""
+        self.flush()
         return self.backend.stats()
 
     @property
@@ -162,6 +218,7 @@ class FusionEngine:
     @property
     def count(self) -> int:
         """Effective sample size currently fused (Thm 8 reporting)."""
+        self.flush()
         return int(self.backend.count)
 
     def summary(self) -> dict:
@@ -170,12 +227,17 @@ class FusionEngine:
             "backend": self.backend.name,
             "clients": len(self._clients),
             "dropped": len(self._dropped),
-            "rows": self.count,
+            # backend count read directly: summary is pure observability and
+            # must not drain the coalescer queue the way ``self.count`` does.
+            "rows": int(self.backend.count),
             "cached_sigmas": sorted(self._factors),
             "spectral_cached": self.backend.spectral_ready,
             "stats_version": self.stats_version,
             "cold_factorizations": self.cold_factorizations,
             "incremental_updates": self.incremental_updates,
+            "flushes": self.flushes,
+            "coalesced_deltas": self.coalesced_deltas,
+            "pending_deltas": self.pending_deltas,
         }
 
     # -- mutation (Thm 1 / Thm 8 / §VI-C) -----------------------------------
@@ -193,6 +255,7 @@ class FusionEngine:
         """
         if stats.dim != self.dim:
             raise ValueError(f"stats dim {stats.dim} != engine dim {self.dim}")
+        self.flush()
         self.backend.fuse(stats, 1.0)
         if client_id is not None:
             prev = self._clients.get(client_id)
@@ -207,6 +270,81 @@ class FusionEngine:
                     update_vectors=A.astype(self.dtype))
         return s
 
+    # -- async ingest (coalescing queue) -------------------------------------
+
+    @property
+    def pending_deltas(self) -> int:
+        return len(self._pending)
+
+    @property
+    def pending_rank(self) -> int:
+        """Conservative update rank the queue would apply when flushed."""
+        return sum(p.rank_bound for p in self._pending)
+
+    def ingest_async(self, stats: SuffStats,
+                     client_id: Hashable | None = None, *,
+                     update_vectors: jax.Array | None = None) -> None:
+        """Queue a statistics delta; visible only after the next flush.
+
+        Many queued deltas are folded into the server state as ONE fused
+        delta (Thm 1 makes the batching exact), so a stream of small §VI-C
+        updates costs one rank-r factor mutation per flush instead of one
+        per delta. Flushing happens on :meth:`flush`, on any read of the
+        fused state (``solve``/``predict``/``stats``/...), before any
+        synchronous mutation, or automatically per :class:`CoalescerPolicy`.
+        """
+        if stats.dim != self.dim:
+            raise ValueError(f"stats dim {stats.dim} != engine dim {self.dim}")
+        bound = (int(update_vectors.shape[0]) if update_vectors is not None
+                 else min(int(stats.count), self.dim))
+        self._pending.append(_PendingDelta(stats, client_id, update_vectors,
+                                           bound, time.monotonic()))
+        self._autoflush()
+
+    def ingest_rows_async(self, A: jax.Array, b: jax.Array,
+                          client_id: Hashable | None = None) -> SuffStats:
+        """§VI-C streaming through the coalescer: queue rows, flush later."""
+        s = compute_stats(A, b)
+        self.ingest_async(s, client_id=client_id,
+                          update_vectors=A.astype(self.dtype))
+        return s
+
+    def flush(self) -> int:
+        """Apply the whole queue as one fused delta; returns #deltas folded.
+
+        One backend ``fuse`` and ONE ``_touch_factors`` mutation: queued
+        update vectors are stacked into a single (sum r_i, d) block so every
+        cached factor absorbs the batch in one blocked rank-r update (when
+        any queued delta lacks explicit vectors the combined delta falls
+        back to the usual derive-or-evict path — still a single mutation).
+        """
+        if not self._pending:
+            return 0
+        pending, self._pending = self._pending, []
+        combined = fuse_stats([p.stats for p in pending])
+        vectors = None
+        if all(p.update_vectors is not None for p in pending):
+            vectors = jnp.concatenate([p.update_vectors for p in pending])
+        self.backend.fuse(combined, 1.0)
+        for p in pending:
+            if p.client_id is not None:
+                prev = self._clients.get(p.client_id)
+                self._clients[p.client_id] = (p.stats if prev is None
+                                              else prev + p.stats)
+        self._touch_factors(combined, vectors, sign=1.0)
+        self.flushes += 1
+        self.coalesced_deltas += len(pending)
+        return len(pending)
+
+    def _autoflush(self) -> None:
+        if not self._pending:
+            return
+        over_rank = self.pending_rank >= self.coalesce.max_rank
+        stale = (time.monotonic() - self._pending[0].queued_at
+                 >= self.coalesce.max_staleness_s)
+        if over_rank or stale:
+            self.flush()
+
     def ingest_distributed(self, A: jax.Array, b: jax.Array, **kwargs) -> None:
         """Phases 1+2 on-mesh: each shard's stats are psum'd straight into the
         backend-held (sharded) state — the fused Gram never lands replicated.
@@ -215,6 +353,7 @@ class FusionEngine:
         Mesh shards are not ledger clients: dropout on this path is the
         ``participation`` mask (Thm 8), not ``drop``/``restore``.
         """
+        self.flush()
         fuse = getattr(self.backend, "fuse_distributed", None)
         if fuse is None:
             raise NotImplementedError(
@@ -226,6 +365,7 @@ class FusionEngine:
 
     def drop(self, client_id: Hashable) -> None:
         """Thm 8: remove a client; state becomes exact on the remaining subset."""
+        self.flush()   # the client's queued deltas must be in the ledger first
         s = self._clients.pop(client_id)  # KeyError for unknown/already-dropped
         vectors = self._touch_factors(s, None, sign=-1.0)
         self.backend.fuse(s, -1.0)
@@ -233,9 +373,15 @@ class FusionEngine:
 
     def restore(self, client_id: Hashable) -> None:
         """Thm 8 rejoin: add a dropped client back, exactly."""
+        self.flush()
         s, vectors = self._dropped.pop(client_id)
         self.backend.fuse(s, 1.0)
-        self._clients[client_id] = s
+        # Accumulate, never overwrite: deltas ingested under this id between
+        # drop and restore (e.g. queued async rows the flush above just
+        # registered) are already in the backend state — clobbering the
+        # ledger entry would orphan them for any later drop.
+        prev = self._clients.get(client_id)
+        self._clients[client_id] = s if prev is None else prev + s
         self._touch_factors(s, vectors, sign=1.0)
 
     def apply(self, fn: Callable[[SuffStats], SuffStats]) -> None:
@@ -245,6 +391,7 @@ class FusionEngine:
         after an ``apply`` mixes repaired and raw statistics — acceptable for
         PSD repair (a projection), but the caller owns that judgement.
         """
+        self.flush()
         self.backend.set_stats(fn(self.backend.stats()))
         self._factors.clear()
         self.stats_version += 1
@@ -269,10 +416,12 @@ class FusionEngine:
         fresh: dict[float, _CachedFactor] = {}
         for sigma, f in self._factors.items():
             if rank is not None and f.stale_rank + rank <= self.max_update_rank:
-                fresh[sigma] = _CachedFactor(
-                    self.backend.update(f.factor, update_vectors, sign),
-                    f.stale_rank + rank)
-                self.incremental_updates += 1
+                updated = self.backend.update(f.factor, update_vectors, sign)
+                if updated is not None:
+                    fresh[sigma] = _CachedFactor(updated, f.stale_rank + rank)
+                    self.incremental_updates += 1
+                # None: the backend declined THIS factor (e.g. a sharded CG
+                # marker holds no L) — evict it like any other stale factor.
             # else: evict; next solve at this sigma refactorizes from scratch.
         self._factors = fresh
         return update_vectors
@@ -281,6 +430,7 @@ class FusionEngine:
 
     def factor(self, sigma: float):
         """Cached (or freshly computed) factor of G + sigma I (backend-opaque)."""
+        self.flush()
         key = float(sigma)
         f = self._factors.get(key)
         if f is None:
@@ -310,6 +460,7 @@ class FusionEngine:
         ``"auto"`` picks spectral when its eigh is already cached or the
         grid is large enough (>= 16) to amortize it.
         """
+        self.flush()
         keys = [float(s) for s in sigmas]
         if method == "auto":
             method = ("spectral" if self.backend.spectral_ready
@@ -340,6 +491,7 @@ class FusionEngine:
         it subtracts are retained densely regardless of backend, so LOCO is
         only meaningful at dimensions where K dense Grams fit anyway.
         """
+        self.flush()
         if not self._clients:
             raise ValueError("no retained per-client statistics")
         ids = list(self._clients)

@@ -1,13 +1,14 @@
 """Property tests: random engine mutation interleavings vs cold references.
 
-Drives arbitrary ``ingest`` / ``drop`` / ``restore`` / ``ingest_rows``
-sequences against a FusionEngine (on BOTH backends) while mirroring the
-state in plain python, and asserts after EVERY prefix that the engine's
-solve matches a cold ``core.fusion.solve_ridge`` over exactly the rows the
-mirror says are active. This is the Thm 1 / Thm 8 / §VI-C algebra under
-adversarial interleaving — including the incremental up/downdate path on
-the dense backend (factor kept warm across mutations) and the
-evict-and-refactorize path on the sharded one.
+Drives arbitrary ``ingest`` / ``drop`` / ``restore`` / ``ingest_rows`` /
+``ingest_rows_async`` / ``flush`` sequences against a FusionEngine (on BOTH
+backends) while mirroring the state in plain python, and asserts after EVERY
+prefix that the engine's solve matches a cold ``core.fusion.solve_ridge``
+over exactly the rows the mirror says are active (the solve itself drains
+any queued async deltas, so the coalescer must be exactly transparent to
+reads). This is the Thm 1 / Thm 8 / §VI-C algebra under adversarial
+interleaving — including the incremental (blocked) up/downdate path on both
+backends and flushes that batch several queued deltas into one mutation.
 
 Runs through the ``_hypo`` shim, so environments without hypothesis skip
 these and keep the rest of the module.
@@ -21,14 +22,16 @@ from _hypo import hypothesis, st
 from repro import core
 from repro.core import fusion
 from repro.launch import mesh as mesh_lib
-from repro.server import FusionEngine, ShardedBackend
+from repro.server import CoalescerPolicy, FusionEngine, ShardedBackend
 
 D = 6
 SIGMA = 0.1
 
 # (kind, client slot, data seed); the interpreter below resolves slots
 # against whatever clients currently exist, so any sequence is valid.
-_OP = st.tuples(st.integers(0, 3), st.integers(0, 7), st.integers(0, 2**16))
+# Kinds: 0 ingest, 1 drop, 2 restore, 3 ingest_rows, 4 ingest_rows_async,
+# 5 explicit flush.
+_OP = st.tuples(st.integers(0, 5), st.integers(0, 7), st.integers(0, 2**16))
 
 
 def _rows(seed, n=10):
@@ -37,6 +40,9 @@ def _rows(seed, n=10):
 
 
 def _make_engine(backend_kind: str) -> FusionEngine:
+    # max_rank=7 so some interleavings auto-flush mid-sequence and others
+    # only drain at the solve — both flush paths get exercised.
+    policy = CoalescerPolicy(max_rank=7)
     if backend_kind == "sharded":
         # Degrades to a 1x1 mesh on a single-device platform; the full-mesh
         # equivalence lives in test_sharded_backend's 8-device child.
@@ -46,8 +52,8 @@ def _make_engine(backend_kind: str) -> FusionEngine:
             warnings.simplefilter("ignore")
             mesh = mesh_lib.make_cpu_mesh(8)
         return FusionEngine(D, backend=ShardedBackend(D, mesh, block_size=8),
-                            max_update_rank=100)
-    return FusionEngine(D, max_update_rank=100)
+                            max_update_rank=100, coalesce=policy)
+    return FusionEngine(D, max_update_rank=100, coalesce=policy)
 
 
 @pytest.mark.parametrize("backend_kind", ["dense", "sharded"])
@@ -78,6 +84,12 @@ def test_mutation_interleavings_match_cold_solve(backend_kind, ops):
             A, b = _rows(seed, n=4)
             eng.ingest_rows(A, b)
             anon.append((A, b))
+        elif kind == 4:                             # queued streaming rows
+            A, b = _rows(seed, n=4)
+            eng.ingest_rows_async(A, b)
+            anon.append((A, b))
+        elif kind == 5:                             # explicit flush
+            eng.flush()
         else:
             continue  # drop/restore with nothing to act on: no-op
 

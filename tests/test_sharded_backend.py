@@ -98,6 +98,95 @@ class TestShardedSolves:
             eng.solve(0.0)
 
 
+class TestShardedIncrementalUpdate:
+    def test_low_rank_mutation_skips_refactorization(self, mesh):
+        """The factorization-count probe: rank <= max_update_rank mutations
+        ride the distributed blocked up/downdate — NO cold refactorization,
+        and the solve still matches a cold reference."""
+        A, b, stats = _problem(n=200, d=21)
+        eng = FusionEngine.from_stats(
+            stats, backend=ShardedBackend(21, mesh, block_size=8),
+            max_update_rank=40)
+        eng.solve(0.1)                       # warm the sharded factor
+        cold0 = eng.cold_factorizations
+        eA, eb, _ = _problem(seed=5, n=6)
+        eng.ingest_rows(eA, eb)              # rank 6 <= 40 -> incremental
+        w = eng.solve(0.1)
+        assert eng.cold_factorizations == cold0, "mutation refactorized"
+        assert eng.incremental_updates == 1
+        ref = fusion.solve_ridge(
+            core.compute_stats(jnp.concatenate([A, eA]),
+                               jnp.concatenate([b, eb])), 0.1)
+        np.testing.assert_allclose(eng.solve(0.1), ref, rtol=RTOL, atol=ATOL)
+
+    def test_incremental_downdate_on_drop(self, mesh):
+        A, b, _ = _problem(n=240)
+        parts = [(A[i * 60:(i + 1) * 60], b[i * 60:(i + 1) * 60])
+                 for i in range(4)]
+        stats = {i: core.compute_stats(a, bb)
+                 for i, (a, bb) in enumerate(parts)}
+        eng = FusionEngine.from_clients(
+            stats, backend=ShardedBackend(21, mesh, block_size=8),
+            max_update_rank=100)
+        eng.solve(0.1)
+        cold0 = eng.cold_factorizations
+        eng.drop(1)                          # rank(G_1) = 21 <= 100
+        w = eng.solve(0.1)
+        assert eng.cold_factorizations == cold0
+        w_ref = fusion.dropout_fusion(list(stats.values()),
+                                      [True, False, True, True], 0.1)
+        np.testing.assert_allclose(w, w_ref, rtol=RTOL, atol=ATOL)
+
+    def test_update_ranks_bucket_compiled_programs(self, mesh):
+        """Distinct flush ranks within one power-of-two bucket reuse ONE
+        compiled shard_map program (zero-row rank padding is exact)."""
+        A, b, stats = _problem(n=200, d=21)
+        be = ShardedBackend(21, mesh, block_size=8)
+        eng = FusionEngine.from_stats(stats, backend=be, max_update_rank=40)
+        eng.solve(0.1)
+        rows = []
+        for i, r in enumerate((5, 6, 8)):           # all bucket to 8
+            eA, eb, _ = _problem(seed=20 + i, n=r)
+            eng.ingest_rows(eA, eb)
+            rows.append((eA, eb))
+        update_keys = [k for k in be._jitted
+                       if isinstance(k, tuple) and k[0] == "update"]
+        assert update_keys == [("update", 8, True)]
+        A_all = jnp.concatenate([A] + [a for a, _ in rows])
+        b_all = jnp.concatenate([b] + [bb for _, bb in rows])
+        ref = fusion.solve_ridge(core.compute_stats(A_all, b_all), 0.1)
+        np.testing.assert_allclose(eng.solve(0.1), ref, rtol=RTOL, atol=ATOL)
+
+    def test_high_rank_mutation_still_evicts(self, mesh):
+        """Past the staleness budget the engine falls back to evict +
+        on-mesh refactorize (exactness over incrementality)."""
+        A, b, stats = _problem(n=200, d=21)
+        eng = FusionEngine.from_stats(
+            stats, backend=ShardedBackend(21, mesh, block_size=8),
+            max_update_rank=4)
+        eng.solve(0.1)
+        cold0 = eng.cold_factorizations
+        eA, eb, _ = _problem(seed=6, n=30)
+        eng.ingest_rows(eA, eb)              # rank 30 > 4 -> evict
+        eng.solve(0.1)
+        assert eng.cold_factorizations == cold0 + 1
+        assert eng.incremental_updates == 0
+
+    def test_cg_factor_declines_update(self, mesh):
+        _, _, stats = _problem()
+        be = ShardedBackend(21, mesh, method="cg")
+        eng = FusionEngine.from_stats(stats, backend=be, max_update_rank=40)
+        eng.solve(0.1)
+        eA, eb, _ = _problem(seed=8, n=4)
+        eng.ingest_rows(eA, eb)              # CG marker: evicted, re-solved
+        assert eng.incremental_updates == 0
+        A, b, _ = _problem()
+        ref = fusion.solve_ridge(
+            core.compute_stats(jnp.concatenate([A, eA]),
+                               jnp.concatenate([b, eb])), 0.1)
+        np.testing.assert_allclose(eng.solve(0.1), ref, rtol=1e-3, atol=1e-3)
+
+
 class TestShardedEngineIntegration:
     def test_drop_restore_streaming(self, mesh):
         A, b, _ = _problem(n=240)
@@ -269,6 +358,28 @@ ref_s = fusion.solve_ridge(core.compute_stats(
     jnp.concatenate([A, eA]), jnp.concatenate([b, eb])), 0.1)
 np.testing.assert_allclose(np.asarray(eng.solve(0.1)), np.asarray(ref_s),
                            rtol=3e-4, atol=3e-4)
+
+# 4b) low-rank mutation on the full mesh: the distributed blocked up/downdate
+#     absorbs it — no cold refactorization, factor stays block-sharded, and
+#     the coalescer batches queued deltas into one mutation.
+eng4 = FusionEngine.from_stats(core.compute_stats(A, b),
+                               backend=ShardedBackend(d, mesh),
+                               max_update_rank=64)
+eng4.solve(0.1)
+cold0 = eng4.cold_factorizations
+for i in range(8):
+    dA = jax.random.normal(jax.random.PRNGKey(20 + i), (2, d))
+    db = jax.random.normal(jax.random.PRNGKey(60 + i), (2,))
+    eng4.ingest_rows_async(dA, db)
+w4 = eng4.solve(0.1)   # drains: ONE rank-16 distributed update
+assert eng4.cold_factorizations == cold0, "sharded mutation refactorized"
+assert eng4.incremental_updates == 1 and eng4.coalesced_deltas == 8
+allA = jnp.concatenate([A] + [jax.random.normal(jax.random.PRNGKey(20 + i), (2, d)) for i in range(8)])
+allb = jnp.concatenate([b] + [jax.random.normal(jax.random.PRNGKey(60 + i), (2,)) for i in range(8)])
+np.testing.assert_allclose(np.asarray(w4),
+                           np.asarray(fusion.solve_ridge(core.compute_stats(allA, allb), 0.1)),
+                           rtol=3e-4, atol=3e-4)
+assert eng4._factors[0.1].factor.L.sharding.spec == blocked
 
 # 5) on-mesh fusion (psum-scattered into the block layout) is exact and the
 #    delta path keeps the block sharding
