@@ -3,19 +3,32 @@ PY ?= python
 # Tier-1 gate: the full test suite (which already includes the sharded
 # equivalence tests and their 8-device child), a fast fusion-engine perf
 # smoke (writes experiments/repro/fusion_engine_bench.json, exits nonzero if
-# any perf claim fails), one dense-vs-sharded crossover measurement, and the
+# any perf claim fails), one dense-vs-sharded crossover measurement, the
 # mutation-path smoke (blocked rank-r update / ingest coalescer / packed
-# payload ledger) so experiments/repro/ tracks write-path perf per PR.
+# payload ledger), and the engine-pool smoke (tenant-count scaling +
+# background-flusher staleness bound) so experiments/repro/ tracks serving
+# and write-path perf per PR.
 .PHONY: tier1
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 	PYTHONPATH=src $(PY) benchmarks/fusion_engine_bench.py --smoke
 	PYTHONPATH=src $(PY) benchmarks/sharded_fusion_bench.py --smoke
 	PYTHONPATH=src $(PY) benchmarks/mutation_bench.py --smoke
+	PYTHONPATH=src $(PY) benchmarks/pool_bench.py --smoke
 
 .PHONY: bench-mutation
 bench-mutation:
 	PYTHONPATH=src $(PY) benchmarks/mutation_bench.py --smoke
+
+# Standalone pool gate: the multi-tenant pool tests (property interleavings,
+# flusher thread-safety/staleness, DP-through-engine, serve CLI smokes) plus
+# the pool bench smoke.
+.PHONY: pool-smoke
+pool-smoke:
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_pool_properties.py \
+		tests/test_pool_stress.py tests/test_dp_engine_path.py \
+		tests/test_serve_cli.py
+	PYTHONPATH=src $(PY) benchmarks/pool_bench.py --smoke
 
 # Standalone sharded gate: just the sharded-backend equivalence tests (they
 # spawn their own 8-device host-platform child; jax locks the device count

@@ -1,0 +1,252 @@
+"""EnginePool benchmark: tenant-count scaling for multi-tenant serving.
+
+One-shot aggregation only pays for its communication savings if the server
+side scales to many concurrent models, so this bench measures what happens
+to the serving hot path as the tenant count grows:
+
+  * scaling      — for T in {2, 8, 32} tenants (smoke: {2, 8}) on one pool:
+                   warm-cache solve latency p50/p99, first in a pure-serving
+                   phase and then under interleaved §VI-C async ingest (a
+                   row delta queued into a random tenant every few solves,
+                   background flusher running). The cold per-query
+                   ``core.fusion.solve_ridge`` is timed as the baseline.
+                   Every tenant's final weights are checked against a cold
+                   reference over exactly its own rows (tenant isolation +
+                   coalescer transparency, measured — not assumed).
+  * flusher      — a burst of deltas queued with NO reads: the background
+                   flusher must drain every queue on its own clock. Records
+                   how many background flushes ran and the worst delta age
+                   it observed vs the policy's ``max_staleness_s`` budget.
+
+Claims gate on exactness, warm-beats-cold at the largest tenant count, and
+the flusher draining without reads inside a slack-padded staleness bound
+(the mutation path is warmed first so compile time doesn't masquerade as
+staleness). Timings are recorded honestly whatever they are.
+
+Usage: PYTHONPATH=src:. python benchmarks/pool_bench.py [--smoke]
+Emits a CSV + BENCH JSON under experiments/repro/ and prints a BENCH line.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/pool_bench.py`
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import common
+from repro import core
+from repro.core import fusion
+from repro.server import CoalescerPolicy, EnginePool
+
+STALENESS_S = 0.1
+# Generous CI slack on top of the staleness budget: the flusher polls at
+# budget/4 and a warm rank-r flush is O(ms), but shared CI hosts stall.
+STALENESS_SLACK_S = 1.0
+
+
+def _pctl(ts: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(ts), q))
+
+
+def _make_pool(T: int, dim: int, clients: int, rows_per: int, seed: int):
+    """Pool with T tenants (auto placement -> dense on a null-crossover
+    host), plus each tenant's raw rows for cold references."""
+    pool = EnginePool(default_coalesce=CoalescerPolicy(
+        max_rank=16, max_staleness_s=STALENESS_S))
+    tenant_rows: dict[str, list[tuple[jax.Array, jax.Array]]] = {}
+    for t in range(T):
+        name = f"t{t}"
+        chunks = []
+        for c in range(clients):
+            k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 101 * t + c))
+            chunks.append((jax.random.normal(k1, (rows_per, dim)),
+                           jax.random.normal(k2, (rows_per,))))
+        pool.create_tenant(name, clients=[core.compute_stats(a, b)
+                                          for a, b in chunks],
+                           placement="auto")
+        tenant_rows[name] = chunks
+    return pool, tenant_rows
+
+
+def _cold_ref(tenant_rows, name: str, sigma: float) -> jax.Array:
+    A = jnp.concatenate([a for a, _ in tenant_rows[name]])
+    b = jnp.concatenate([b for _, b in tenant_rows[name]])
+    return fusion.solve_ridge(core.compute_stats(A, b), sigma)
+
+
+def _bench_scaling(claims: common.Claims, rows: list, smoke: bool) -> None:
+    dim = 48 if smoke else 96
+    clients, rows_per = 2, 2 * (48 if smoke else 96)
+    sigmas = [0.05, 0.5]
+    tenant_counts = [2, 8] if smoke else [2, 8, 32]
+    solves = 48 if smoke else 128
+
+    for T in tenant_counts:
+        pool, tenant_rows = _make_pool(T, dim, clients, rows_per, seed=T)
+        names = pool.tenant_names
+        rng = np.random.default_rng(T)
+
+        # Warm every tenant's factors AND the mutation/flush path (compiles
+        # the rank-bucketed update programs) before anything is timed.
+        for i, name in enumerate(names):
+            pool.solve_batch(name, sigmas, method="chol")
+            dA = jax.random.normal(jax.random.PRNGKey(10_000 + i), (1, dim))
+            pool.ingest_rows_async(name, dA, jnp.zeros((1,)))
+            tenant_rows[name].append((dA, jnp.zeros((1,))))
+        pool.flush()
+
+        # Cold baseline: per-query solve_ridge on one tenant's fused stats.
+        fused0 = pool.stats(names[0])
+        cold_ts = []
+        for _ in range(min(solves, 32)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fusion.solve_ridge(fused0, sigmas[0]))
+            cold_ts.append(time.perf_counter() - t0)
+
+        # Phase A: pure serving off warm caches.
+        serve_ts = []
+        for _ in range(solves):
+            name = names[int(rng.integers(T))]
+            sigma = sigmas[int(rng.integers(len(sigmas)))]
+            t0 = time.perf_counter()
+            jax.block_until_ready(pool.solve(name, sigma))
+            serve_ts.append(time.perf_counter() - t0)
+
+        # Phase B: same stream with interleaved async ingest, flusher on.
+        pool.start_flusher()
+        mixed_ts = []
+        for i in range(solves):
+            if i % 4 == 0:
+                tgt = names[int(rng.integers(T))]
+                dA = jnp.asarray(rng.standard_normal((1, dim)), jnp.float32)
+                db = jnp.asarray(rng.standard_normal((1,)), jnp.float32)
+                pool.ingest_rows_async(tgt, dA, db)
+                tenant_rows[tgt].append((dA, db))
+            name = names[int(rng.integers(T))]
+            sigma = sigmas[int(rng.integers(len(sigmas)))]
+            t0 = time.perf_counter()
+            jax.block_until_ready(pool.solve(name, sigma))
+            mixed_ts.append(time.perf_counter() - t0)
+        pool.flush()
+        pool.stop_flusher()
+
+        err = max(float(jnp.abs(pool.solve(n, sigmas[0])
+                                - _cold_ref(tenant_rows, n, sigmas[0])).max())
+                  for n in names)
+        rows.append({
+            "name": f"scaling_T{T}_d{dim}",
+            "tenants": T,
+            "cold_p50_ms": _pctl(cold_ts, 50) * 1e3,
+            "serve_p50_ms": _pctl(serve_ts, 50) * 1e3,
+            "serve_p99_ms": _pctl(serve_ts, 99) * 1e3,
+            "mixed_p50_ms": _pctl(mixed_ts, 50) * 1e3,
+            "mixed_p99_ms": _pctl(mixed_ts, 99) * 1e3,
+            "speedup_p50": _pctl(cold_ts, 50) / _pctl(serve_ts, 50),
+            "max_abs_err": err,
+        })
+        claims.check(f"pool_exact_T{T}", err < 5e-4, f"max|dw|={err:.1e}")
+        if T == tenant_counts[-1]:
+            claims.check(
+                "warm_pool_solve_beats_cold",
+                _pctl(serve_ts, 50) < _pctl(cold_ts, 50),
+                f"{_pctl(cold_ts, 50) * 1e3:.2f}ms -> "
+                f"{_pctl(serve_ts, 50) * 1e3:.2f}ms p50 at T={T}")
+
+
+def _bench_flusher(claims: common.Claims, rows: list, smoke: bool) -> None:
+    dim = 32
+    T = 3
+    deltas = 12 if smoke else 48
+    pool, tenant_rows = _make_pool(T, dim, 2, 2 * dim, seed=7)
+    names = pool.tenant_names
+    rng = np.random.default_rng(7)
+
+    # Warm factors + the flush/update programs so the staleness measurement
+    # below is about the flusher's clock, not about XLA compiles. Flush
+    # ranks in the live phase depend on flusher timing (1..4 rows per
+    # flush), and each rank compiles its own update program — warm them all.
+    for name in names:
+        pool.solve_batch(name, [0.1], method="chol")
+    for r in range(1, 5):   # r queued singletons -> len-r fuse/concat + rank-r
+        for _ in range(r):
+            pool.ingest_rows_async(names[0], jnp.zeros((1, dim)),
+                                   jnp.zeros((1,)))
+        pool.flush(names[0])
+    base_flushes = pool.summary()["background_flushes"]
+
+    pool.start_flusher()
+    t0 = time.perf_counter()
+    for i in range(deltas):
+        name = names[i % T]
+        dA = jnp.asarray(rng.standard_normal((1, dim)), jnp.float32)
+        db = jnp.asarray(rng.standard_normal((1,)), jnp.float32)
+        pool.ingest_rows_async(name, dA, db)
+        tenant_rows[name].append((dA, db))
+    # NO reads: only the background thread may drain from here.
+    deadline = time.monotonic() + 20 * (STALENESS_S + STALENESS_SLACK_S)
+    while pool.pending_deltas and time.monotonic() < deadline:
+        time.sleep(STALENESS_S / 10)
+    drain_s = time.perf_counter() - t0
+    summary = pool.summary()
+    pending = pool.pending_deltas
+    pool.stop_flusher()
+
+    err = max(float(jnp.abs(pool.solve(n, 0.1)
+                            - _cold_ref(tenant_rows, n, 0.1)).max())
+              for n in names)
+    bg = summary["background_flushes"] - base_flushes
+    age = summary["max_flush_age_s"]
+    rows.append({
+        "name": f"flusher_T{T}_deltas{deltas}",
+        "deltas": deltas,
+        "background_flushes": bg,
+        "pending_after": pending,
+        "max_flush_age_s": age,
+        "staleness_budget_s": STALENESS_S,
+        "drain_s": drain_s,
+        "max_abs_err": err,
+    })
+    claims.check("flusher_drains_without_reads", pending == 0 and bg >= 1,
+                 f"{bg} background flushes, {pending} pending")
+    claims.check("flusher_bounds_staleness",
+                 age <= STALENESS_S + STALENESS_SLACK_S,
+                 f"worst age {age:.3f}s vs budget {STALENESS_S:.3f}s "
+                 f"(+{STALENESS_SLACK_S:.1f}s CI slack)")
+    claims.check("flusher_state_exact", err < 5e-4, f"max|dw|={err:.1e}")
+
+
+def run(smoke: bool = False) -> list[dict]:
+    claims = common.Claims("pool")
+    rows: list[dict] = []
+    _bench_scaling(claims, rows, smoke)
+    _bench_flusher(claims, rows, smoke)
+
+    common.write_csv("pool_bench", rows)
+    bench = {"smoke": smoke, "rows": rows, "claims": claims.rows()}
+    common.OUT_DIR.mkdir(parents=True, exist_ok=True)
+    (common.OUT_DIR / "pool_bench.json").write_text(json.dumps(bench, indent=2))
+    print("BENCH " + json.dumps({
+        r["name"]: round(r.get("serve_p50_ms", r.get("max_flush_age_s", 0.0)),
+                         3)
+        for r in rows}))
+    return claims.rows()
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few reps for CI")
+    args = ap.parse_args()
+    failed = [c for c in run(smoke=args.smoke) if not c["pass"]]
+    sys.exit(1 if failed else 0)

@@ -21,7 +21,7 @@ import time
 
 def main(smoke: bool = False) -> None:
     from benchmarks import (extensions, fig_3, fusion_engine_bench,
-                            kernels_bench, mutation_bench,
+                            kernels_bench, mutation_bench, pool_bench,
                             sharded_fusion_bench, table_ii, table_iii,
                             table_iv, table_v, table_vi, table_vii)
 
@@ -33,6 +33,7 @@ def main(smoke: bool = False) -> None:
         ("fusion_engine", fusion_engine_bench),
         ("sharded_fusion", sharded_fusion_bench),
         ("mutation", mutation_bench),
+        ("pool", pool_bench),
     ]
     all_claims = []
     for name, mod in modules:

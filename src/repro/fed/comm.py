@@ -135,6 +135,35 @@ def sharded_oneshot_record(d: int, num_clients: int,
     )
 
 
+def aggregate_records(records: Mapping[str, CommRecord]) -> dict:
+    """Roll a set of per-tenant CommRecords up into one pool-level ledger.
+
+    Tenants are independent fusion problems, so bytes simply add; the rollup
+    also keeps the per-tenant breakdown so a pool operator can see which
+    tenant's uploads dominate. Cross-shard psum traffic (ShardedCommRecord)
+    is reported separately from client-upload bytes — they move on different
+    networks (DCN uploads vs ICI collectives) and adding them would hide
+    exactly the distinction Thm 4 is about.
+    """
+    per_tenant = {}
+    upload_bytes = cross_shard = 0
+    for name, rec in records.items():
+        entry = {"upload_download_bytes": rec.total_bytes,
+                 "num_clients": rec.num_clients, "rounds": rec.rounds}
+        upload_bytes += rec.total_bytes
+        if isinstance(rec, ShardedCommRecord):
+            entry["cross_shard_bytes"] = rec.cross_shard_bytes
+            cross_shard += rec.cross_shard_bytes
+        per_tenant[name] = entry
+    return {
+        "tenants": len(per_tenant),
+        "upload_download_bytes": upload_bytes,
+        "cross_shard_bytes": cross_shard,
+        "total_mb": upload_bytes / 2**20,
+        "per_tenant": per_tenant,
+    }
+
+
 def fedavg_comm(d: int, num_clients: int, rounds: int) -> CommRecord:
     """Thm 4 row 2: R*d up, R*d down per client."""
     return CommRecord(

@@ -5,15 +5,19 @@ Two modes:
     path is the same ``model.decode_step`` the dry-run lowers for
     decode_32k / long_500k; here it actually executes (reduced configs on
     CPU, full configs on a TPU slice).
-  * ``fusion`` — ridge-serving: ``FusionEngine``s own the fused (G, h) and
-    answer a stream of concurrent queries from many tenants, each with its
-    own sigma grid. Queries are batched through ``solve_batch`` (one
-    factorization sweep warms the factor cache) and then served off cached
-    factors — versus the naive per-query cold solve. Tenants choose their
-    backend: dense single-device (default) or mesh-sharded
-    (``--sharded-tenants N`` routes the first N tenants through a
-    ``ShardedBackend`` over a host CPU mesh); both kinds coexist in one
-    serving loop, sharing the same fused statistics.
+  * ``fusion`` — ridge-serving on an ``EnginePool``: every tenant is an
+    independent fusion problem (its own clients, fused (G, h), sigma grid)
+    admitted into one ``server.pool.EnginePool`` from Thm-4 packed payloads.
+    Placement is per tenant — ``--sharded-tenants N`` pins the first N to
+    the pool's one shared mesh, ``--auto-tenants M`` lets the next M follow
+    the measured ``crossover_d`` (``server/select.py``), the rest are dense
+    — and queries are served off each tenant's cached factors (one
+    ``solve_batch`` warm sweep per tenant) versus the naive per-query cold
+    solve. With ``--stream-deltas`` the loop also queues §VI-C row deltas
+    through each tenant's coalescer WITHOUT issuing reads: the pool's
+    background flusher is the only staleness clock, and the loop verifies
+    every tenant's served weights still match its cold ``core.fusion``
+    reference afterwards.
 """
 from __future__ import annotations
 
@@ -79,134 +83,162 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
     }
 
 
-def serve_fusion(*, num_clients: int = 16, samples_per_client: int = 256,
+def serve_fusion(*, num_clients: int = 4, samples_per_client: int = 128,
                  dim: int = 128, tenants: int = 8, sigmas_per_tenant: int = 4,
                  queries: int = 256, query_rows: int = 8,
-                 sharded_tenants: int = 0, mesh=None,
-                 stream_deltas: int = 0, query_every: int = 8,
-                 coalesce_rank: int = 32, seed: int = 0) -> dict:
-    """Serve many tenants' ridge queries through per-backend FusionEngines.
+                 sharded_tenants: int = 0, auto_tenants: int = 0, mesh=None,
+                 stream_deltas: int = 0, coalesce_rank: int = 32,
+                 flush_staleness_s: float = 0.05, max_warm: int | None = None,
+                 seed: int = 0) -> dict:
+    """Serve many independent tenants' ridge queries off ONE EnginePool.
 
-    Each tenant owns a sigma grid (its own bias/variance tradeoff over the
-    shared fused model) and a backend: the first ``sharded_tenants`` tenants
-    are served by an engine whose fused Gram lives block-sharded on a mesh
-    (``launch.mesh.make_cpu_mesh`` host mesh unless one is passed), the rest
-    by the dense single-device engine. A query is (tenant, sigma, X) ->
-    X @ w_sigma. Each engine warms every distinct sigma its tenants use with
-    one ``solve_batch`` and serves all queries off cached factors; the naive
-    baseline re-factorizes per query (what the per-table scripts used to do).
+    Each of the ``tenants`` tenants is its own fusion problem: its own
+    synthetic client set, uploaded as Thm-4 :class:`fed.PackedStats`
+    payloads (the pool ledger records the measured bytes), its own sigma
+    grid, and its own placement — the first ``sharded_tenants`` pinned to
+    the pool's shared mesh, the next ``auto_tenants`` placed by the measured
+    ``crossover_d``, the rest dense. A query is (tenant, sigma, X) ->
+    X @ w_sigma: one ``solve_batch`` per tenant warms its factor cache, then
+    all queries run off cached factors; the naive baseline cold-factorizes
+    per query. Every tenant's served weights are checked against a cold
+    ``core.fusion.solve_ridge`` over exactly its own rows
+    (``exact_max_abs_err``) — tenant isolation is an output, not a hope.
 
-    With ``stream_deltas > 0`` the loop also absorbs §VI-C streaming traffic
-    between queries: ``stream_deltas`` single-row deltas arrive with one
-    predict every ``query_every`` deltas. The per-request path mutates every
-    cached factor per delta (``ingest_rows``); the production path queues
-    through the engine's coalescer (``ingest_rows_async``, flush rank
-    ``coalesce_rank``) so each flush applies one blocked rank-r update —
-    factor mutations drop by ~``min(coalesce_rank, query_every)``x at
-    identical solve results (reads drain the queue).
+    With ``stream_deltas > 0`` the loop then queues that many §VI-C row
+    deltas round-robin across tenants through ``ingest_rows_async`` and
+    issues NO reads: the pool's background flusher (started for the duration)
+    is the only thing driving the staleness clock
+    (``CoalescerPolicy.max_staleness_s = flush_staleness_s``). The loop
+    waits for the queues to drain, records how many flushes the background
+    thread performed and the worst delta age it observed, and re-verifies
+    every tenant against its cold reference including the streamed rows.
     """
     from repro.core import fusion
     from repro.core.sufficient_stats import compute_stats
     from repro.data import synthetic
-    from repro.launch import mesh as mesh_lib
-    from repro.server import CoalescerPolicy, FusionEngine, ShardedBackend
+    from repro.fed.protocol import PackedStats
+    from repro.server import CoalescerPolicy, EnginePool
 
-    ds = synthetic.generate(jax.random.PRNGKey(seed), num_clients=num_clients,
-                            samples_per_client=samples_per_client, dim=dim)
-    stats = {k: compute_stats(A_k, b_k)
-             for k, (A_k, b_k) in enumerate(ds.clients)}
-    engines = {"dense": FusionEngine.from_clients(stats)}
     sharded_tenants = min(sharded_tenants, tenants)
-    if sharded_tenants:
-        if mesh is None:
-            mesh = mesh_lib.make_cpu_mesh(8)
-        engines["sharded"] = FusionEngine.from_clients(
-            stats, backend=ShardedBackend(dim, mesh))
-    backend_of = ["sharded" if t < sharded_tenants else "dense"
-                  for t in range(tenants)]
+    auto_tenants = min(auto_tenants, tenants - sharded_tenants)
+    policy = CoalescerPolicy(max_rank=coalesce_rank,
+                             max_staleness_s=flush_staleness_s)
+    pool = EnginePool(mesh=mesh, max_warm=max_warm, default_coalesce=policy)
+
+    # Admit every tenant from packed payloads; keep its raw rows so the
+    # exactness check below can rebuild the cold reference.
+    tenant_rows: dict[str, list[tuple[jax.Array, jax.Array]]] = {}
+    for t in range(tenants):
+        name = f"tenant{t}"
+        ds_t = synthetic.generate(jax.random.PRNGKey(seed + 7919 * t),
+                                  num_clients=num_clients,
+                                  samples_per_client=samples_per_client,
+                                  dim=dim)
+        payloads = {k: PackedStats.pack(compute_stats(A_k, b_k))
+                    for k, (A_k, b_k) in enumerate(ds_t.clients)}
+        placement = ("sharded" if t < sharded_tenants
+                     else "auto" if t < sharded_tenants + auto_tenants
+                     else "dense")
+        pool.create_tenant(name, payloads=payloads, placement=placement)
+        tenant_rows[name] = list(ds_t.clients)
 
     # Tenant t's grid: sigmas_per_tenant points on a per-tenant log range.
     rng = np.random.default_rng(seed)
-    grids = [sorted(10.0 ** rng.uniform(-3, 1, sigmas_per_tenant))
-             for _ in range(tenants)]
+    grids = {f"tenant{t}": sorted(10.0 ** rng.uniform(-3, 1, sigmas_per_tenant))
+             for t in range(tenants)}
     stream = []
-    for q in range(queries):
-        t = int(rng.integers(tenants))
-        sigma = grids[t][int(rng.integers(sigmas_per_tenant))]
-        X = jnp.asarray(rng.standard_normal((query_rows, dim)),
-                        jnp.float32)
-        stream.append((t, sigma, X))
+    for _ in range(queries):
+        name = f"tenant{int(rng.integers(tenants))}"
+        sigma = grids[name][int(rng.integers(sigmas_per_tenant))]
+        X = jnp.asarray(rng.standard_normal((query_rows, dim)), jnp.float32)
+        stream.append((name, sigma, X))
 
-    # Naive: cold factorization per query.
-    fused = engines["dense"].stats
+    def cold_ref(name: str, sigma: float) -> jax.Array:
+        A_all = jnp.concatenate([a for a, _ in tenant_rows[name]])
+        b_all = jnp.concatenate([b for _, b in tenant_rows[name]])
+        return fusion.solve_ridge(compute_stats(A_all, b_all), sigma)
+
+    # Naive: cold factorization per query, per tenant.
+    fused = {name: pool.stats(name) for name in pool.tenant_names}
     t0 = time.perf_counter()
-    for _, sigma, X in stream:
-        jax.block_until_ready(X @ fusion.solve_ridge(fused, sigma))
+    for name, sigma, X in stream:
+        jax.block_until_ready(X @ fusion.solve_ridge(fused[name], sigma))
     t_naive = time.perf_counter() - t0
 
-    # Batched: per engine, one sweep over its tenants' distinct sigmas, then
-    # every query served off that engine's cached factors.
+    # Pooled: one warm sweep per tenant, then queries off cached factors.
     t0 = time.perf_counter()
-    for name, eng in engines.items():
-        distinct = sorted({sigma for t, sigma, _ in stream
-                           if backend_of[t] == name})
-        if distinct:
-            eng.solve_batch(distinct, method="chol")  # warm the factor cache
-    for t, sigma, X in stream:
-        jax.block_until_ready(engines[backend_of[t]].predict(X, sigma))
-    t_batched = time.perf_counter() - t0
+    for name, grid in grids.items():
+        pool.solve_batch(name, grid, method="chol")
+    for name, sigma, X in stream:
+        jax.block_until_ready(pool.predict(name, X, sigma))
+    t_pool = time.perf_counter() - t0
+
+    def max_err() -> float:
+        worst = 0.0
+        for name, grid in grids.items():
+            w = pool.solve(name, grid[0])
+            worst = max(worst, float(jnp.abs(w - cold_ref(name, grid[0])).max()))
+        return worst
+
+    exact_err = max_err()
 
     streaming = None
     if stream_deltas:
-        sig = sorted(grids[0])
-        Xq = jnp.asarray(rng.standard_normal((query_rows, dim)), jnp.float32)
+        names = list(pool.tenant_names)
         deltas = [
-            (jnp.asarray(rng.standard_normal((1, dim)), jnp.float32),
+            (names[i % len(names)],
+             jnp.asarray(rng.standard_normal((1, dim)), jnp.float32),
              jnp.asarray(rng.standard_normal((1,)), jnp.float32))
-            for _ in range(stream_deltas)]
-
-        def absorb(eng, ingest):
-            eng.solve_batch(sig, method="chol")       # warm every factor
-            m0 = eng.incremental_updates + eng.cold_factorizations
+            for i in range(stream_deltas)]
+        m0 = sum(e.incremental_updates + e.cold_factorizations
+                 for e in (pool.get(n) for n in names))
+        pool.start_flusher()
+        try:
             t0 = time.perf_counter()
-            for i, (dA, db) in enumerate(deltas):
-                ingest(eng, dA, db)
-                if (i + 1) % query_every == 0:
-                    jax.block_until_ready(eng.predict(Xq, sig[0]))
-            w = eng.solve(sig[-1])                    # drains any remainder
-            jax.block_until_ready(w)
-            dt = time.perf_counter() - t0
-            return w, dt, eng.incremental_updates + eng.cold_factorizations - m0
-
-        policy = CoalescerPolicy(max_rank=coalesce_rank)
-        w_sync, t_sync, m_sync = absorb(
-            FusionEngine.from_clients(stats),
-            lambda e, dA, db: e.ingest_rows(dA, db))
-        w_coal, t_coal, m_coal = absorb(
-            FusionEngine.from_clients(stats, coalesce=policy),
-            lambda e, dA, db: e.ingest_rows_async(dA, db))
+            for name, dA, db in deltas:
+                pool.ingest_rows_async(name, dA, db)
+                tenant_rows[name].append((dA, db))
+            # NO reads from here on: only the background flusher drains.
+            deadline = time.monotonic() + max(10.0, 100 * flush_staleness_s)
+            while pool.pending_deltas and time.monotonic() < deadline:
+                time.sleep(flush_staleness_s / 5)
+            t_stream = time.perf_counter() - t0
+            pending_after = pool.pending_deltas
+        finally:
+            # The daemon must not outlive this block on any path — an
+            # exception here would otherwise leak a thread that keeps
+            # polling the pool for the rest of the process.
+            pool.stop_flusher()
+        summary = pool.summary()
+        mutations = sum(e.incremental_updates + e.cold_factorizations
+                        for e in (pool.get(n) for n in names)) - m0
         streaming = {
             "deltas": stream_deltas,
-            "query_every": query_every,
             "coalesce_rank": coalesce_rank,
-            "mutations_per_delta": m_sync / stream_deltas,
-            "mutations_per_delta_coalesced": m_coal / stream_deltas,
-            "mutation_reduction": m_sync / max(m_coal, 1),
-            "sync_s": t_sync,
-            "coalesced_s": t_coal,
-            "max_weight_delta": float(jnp.abs(w_sync - w_coal).max()),
+            "flush_staleness_s": flush_staleness_s,
+            "pending_after": pending_after,
+            "background_flushes": summary["background_flushes"],
+            "max_flush_age_s": summary["max_flush_age_s"],
+            "mutations_per_delta": mutations / stream_deltas,
+            "stream_s": t_stream,
+            "exact_max_abs_err": max_err(),
         }
+    pool.close()
 
     return {
         "tenants": tenants,
+        "placements": pool.summary()["placements"],
         "sharded_tenants": sharded_tenants,
+        "auto_tenants": auto_tenants,
         "queries": queries,
         "distinct_sigmas": len({sigma for _, sigma, _ in stream}),
         "naive_qps": queries / t_naive,
-        "batched_qps": queries / t_batched,
-        "speedup": t_naive / t_batched,
+        "pool_qps": queries / t_pool,
+        "speedup": t_naive / t_pool,
+        "exact_max_abs_err": exact_err,
         "streaming": streaming,
-        "engines": {name: eng.summary() for name, eng in engines.items()},
+        "ledger": pool.ledger(),
+        "pool": pool.summary(),
     }
 
 
@@ -220,36 +252,68 @@ def main() -> None:
     ap.add_argument("--gen-tokens", type=int, default=32)
     ap.add_argument("--dim", type=int, default=128)
     ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=4,
+                    help="clients per tenant (each tenant is its own "
+                         "fusion problem)")
+    ap.add_argument("--samples", type=int, default=128,
+                    help="samples per client per tenant")
     ap.add_argument("--queries", type=int, default=256)
-    ap.add_argument("--sharded-tenants", type=int, default=0,
-                    help="serve the first N tenants off a mesh-sharded "
-                         "backend (host CPU mesh; degrades to 1 device)")
+    ap.add_argument("--sharded-tenants", type=int, default=2,
+                    help="pin the first N tenants to the pool's shared mesh "
+                         "(host CPU mesh; degrades to 1 device)")
+    ap.add_argument("--auto-tenants", type=int, default=2,
+                    help="place the next M tenants by the measured "
+                         "crossover_d (server/select.py)")
     ap.add_argument("--stream-deltas", type=int, default=0,
-                    help="absorb N streaming row deltas between queries, "
-                         "per-request vs coalesced (§VI-C ingest path)")
+                    help="queue N §VI-C row deltas through the coalescers "
+                         "with NO reads; the pool's background flusher is "
+                         "the only staleness clock")
     ap.add_argument("--coalesce-rank", type=int, default=32,
                     help="coalescer flush threshold (update rank per flush)")
+    ap.add_argument("--flush-staleness", type=float, default=0.05,
+                    help="per-tenant max_staleness_s the background "
+                         "flusher enforces")
+    ap.add_argument("--max-warm", type=int, default=None,
+                    help="LRU bound on tenants with resident factor caches")
     args = ap.parse_args()
     if args.mode == "fusion":
         res = serve_fusion(dim=args.dim, tenants=args.tenants,
+                           num_clients=args.clients,
+                           samples_per_client=args.samples,
                            queries=args.queries,
                            sharded_tenants=args.sharded_tenants,
+                           auto_tenants=args.auto_tenants,
                            stream_deltas=args.stream_deltas,
-                           coalesce_rank=args.coalesce_rank)
+                           coalesce_rank=args.coalesce_rank,
+                           flush_staleness_s=args.flush_staleness,
+                           max_warm=args.max_warm)
         print(f"[serve_fusion] {res['queries']} queries, {res['tenants']} "
-              f"tenants ({res['sharded_tenants']} sharded), "
+              f"tenants on one pool, placements {res['placements']} "
+              f"({res['sharded_tenants']} pinned sharded, "
+              f"{res['auto_tenants']} auto), "
               f"{res['distinct_sigmas']} distinct sigmas")
-        print(f"[serve_fusion] naive {res['naive_qps']:.0f} qps -> batched "
-              f"{res['batched_qps']:.0f} qps ({res['speedup']:.1f}x)")
+        print(f"[serve_fusion] naive {res['naive_qps']:.0f} qps -> pooled "
+              f"{res['pool_qps']:.0f} qps ({res['speedup']:.1f}x)")
+        print(f"[serve_fusion] exact: max|dw|={res['exact_max_abs_err']:.2e} "
+              f"vs cold per-tenant references")
         if res["streaming"] is not None:
             s = res["streaming"]
-            print(f"[serve_fusion] streaming {s['deltas']} deltas: "
-                  f"{s['mutations_per_delta']:.1f} -> "
-                  f"{s['mutations_per_delta_coalesced']:.2f} factor "
-                  f"mutations/delta ({s['mutation_reduction']:.1f}x fewer), "
-                  f"max|dw|={s['max_weight_delta']:.1e}")
-        for name, summary in res["engines"].items():
-            print(f"[serve_fusion] {name} engine: {summary}")
+            print(f"[serve_fusion] streaming {s['deltas']} deltas, no reads: "
+                  f"{s['background_flushes']} background flushes, "
+                  f"{s['pending_after']} left pending, worst delta age "
+                  f"{s['max_flush_age_s']:.3f}s "
+                  f"(budget {s['flush_staleness_s']:.3f}s), "
+                  f"{s['mutations_per_delta']:.2f} mutations/delta, "
+                  f"max|dw|={s['exact_max_abs_err']:.2e}")
+        led = res["ledger"]
+        print(f"[serve_fusion] ledger: {led['upload_download_bytes']} upload "
+              f"bytes + {led['streamed_bytes']} streamed + "
+              f"{led['cross_shard_bytes']} cross-shard over "
+              f"{led['tenants']} tenants")
+        print(f"[serve_fusion] pool: meshes_built="
+              f"{res['pool']['meshes_built']} "
+              f"warm_tenants={res['pool']['warm_tenants']} "
+              f"factor_evictions={res['pool']['factor_evictions']}")
         return
     if args.arch is None:
         ap.error("--arch is required for --mode model")

@@ -12,6 +12,12 @@ lives behind a pluggable ``LinalgBackend``:
                          fusion and a shard_map block-Cholesky / CG solve;
                          G never materializes on one device.
 
+``EnginePool`` scales the same surface to many tenants: a registry of named
+engines with per-tenant backend placement (dense / sharded / measured-auto
+over one shared mesh), per-tenant coalescer policies with a background
+staleness-enforcing flusher, LRU eviction of cold tenants' factor caches,
+and a pool-level ``fed.comm`` byte ledger.
+
 ``core.fusion`` keeps the pure-function reference implementations both
 backends are tested against.
 """
@@ -21,9 +27,11 @@ from repro.server.cholesky import (chol_rank1, chol_update,
                                    psd_update_vectors)
 from repro.server.distributed import ShardedBackend, ShardedFactor
 from repro.server.engine import CoalescerPolicy, FusionEngine
-from repro.server.select import auto_backend, backend_threshold
+from repro.server.pool import EnginePool, Tenant
+from repro.server.select import auto_backend, backend_threshold, prefer_sharded
 
-__all__ = ["FusionEngine", "CoalescerPolicy", "LinalgBackend", "DenseBackend",
+__all__ = ["FusionEngine", "CoalescerPolicy", "EnginePool", "Tenant",
+           "LinalgBackend", "DenseBackend",
            "ShardedBackend", "ShardedFactor", "auto_backend",
-           "backend_threshold", "chol_rank1", "chol_update",
+           "backend_threshold", "prefer_sharded", "chol_rank1", "chol_update",
            "chol_update_blocked", "panel_transform", "psd_update_vectors"]

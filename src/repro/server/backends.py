@@ -177,6 +177,10 @@ class DenseBackend:
         self._stats = stats
         self._eigh = None
 
+    def release(self) -> None:
+        """Drop derived caches (the spectral eigh); (G, h) stay intact."""
+        self._eigh = None
+
     def factor(self, sigma: float) -> jax.Array:
         return _cold_factor(self._stats.gram,
                             jnp.asarray(sigma, self._stats.gram.dtype))

@@ -233,6 +233,12 @@ class ShardedBackend:
         self._count = jnp.asarray(stats.count, jnp.int32)
         self._diag = None
 
+    def release(self) -> None:
+        """Drop derived caches (the CG diag preconditioner); (G, h) and the
+        compiled shard_map programs stay — eviction reclaims factor memory,
+        not compilation work."""
+        self._diag = None
+
     def update(self, factor: ShardedFactor, update_vectors: jax.Array,
                sign: float) -> ShardedFactor | None:
         """Blocked rank-r up/downdate of a block-sharded factor, on-mesh.

@@ -75,8 +75,9 @@ class CoalescerPolicy:
     queued update rank reaches ``max_rank`` (keep it <= the engine's
     ``max_update_rank`` so a flush stays on the incremental path) or when
     the oldest queued delta is older than ``max_staleness_s`` — checked on
-    every queue/read operation; there is no background thread, the serving
-    loop drives the clock.
+    every queue/read operation. The engine itself has no background thread
+    (the serving loop drives its clock); ``server.pool.EnginePool`` adds one
+    that enforces ``max_staleness_s`` even when no reads arrive.
     """
 
     max_rank: int = 64
@@ -277,6 +278,18 @@ class FusionEngine:
         return len(self._pending)
 
     @property
+    def oldest_pending_age_s(self) -> float:
+        """Age of the oldest queued delta (0 when the queue is empty).
+
+        Pure observability — unlike ``count``/``stats`` it never drains the
+        queue, so a background flusher can poll it to decide *whether* to
+        flush without perturbing the thing it is measuring.
+        """
+        if not self._pending:
+            return 0.0
+        return time.monotonic() - self._pending[0].queued_at
+
+    @property
     def pending_rank(self) -> int:
         """Conservative update rank the queue would apply when flushed."""
         return sum(p.rank_bound for p in self._pending)
@@ -425,6 +438,26 @@ class FusionEngine:
             # else: evict; next solve at this sigma refactorizes from scratch.
         self._factors = fresh
         return update_vectors
+
+    def release_factors(self) -> int:
+        """Drop every cached factor (and the backend's spectral cache).
+
+        The fused ``(G, h)`` and the client ledger are untouched — the next
+        solve at any sigma simply refactorizes cold. This is the eviction
+        hook a multi-tenant pool uses to reclaim a cold tenant's O(S d^2)
+        factor memory without evicting the tenant itself.
+        """
+        n = len(self._factors) + (1 if self.backend.spectral_ready else 0)
+        self._factors.clear()
+        release = getattr(self.backend, "release", None)
+        if release is not None:
+            release()
+        return n
+
+    @property
+    def cached_factor_count(self) -> int:
+        """Cached per-sigma factors currently held (LRU accounting)."""
+        return len(self._factors)
 
     # -- solving (Thm 3 / Prop 5) -------------------------------------------
 

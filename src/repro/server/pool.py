@@ -1,0 +1,561 @@
+"""EnginePool — multi-tenant one-shot fusion serving.
+
+The paper's server is a pure statistic store (Thm 1: the fused ``(G, h)``
+plus algebra on it), which is exactly what lets ONE process serve MANY
+independent fusion problems: tenants share nothing but hardware. This module
+is the registry + scheduling layer that makes that real:
+
+  * **Admission** — ``create_tenant`` builds a named ``FusionEngine`` from
+    per-client :class:`SuffStats`, from Thm-4 wire payloads
+    (``fed.PackedStats``-shaped objects; the pool unpacks and the ledger
+    records measured bytes), or from pre-fused statistics. An optional
+    Remark-4 guard checks the admitted Gram for indefiniteness (DP noise can
+    push eigenvalues below zero) and applies ``privacy.psd_repair`` when it
+    fires.
+  * **Placement** — each tenant picks ``"dense"``, ``"sharded"``, or
+    ``"auto"`` (``server/select.py``: the measured ``crossover_d`` decides,
+    explicit ``threshold=`` overrides). All sharded tenants share ONE mesh —
+    the pool builds it lazily on first need, so K sharded tenants cost one
+    mesh, and a pool that places everything dense never builds one.
+  * **Locking** — every tenant op goes through a per-tenant re-entrant lock,
+    so producers (async ingest), the background flusher, and readers can hit
+    one tenant concurrently and reads always observe fully-drained exact
+    state (engine reads drain the coalescer queue under the same lock).
+  * **Background flusher** — a daemon thread that enforces each tenant's
+    ``CoalescerPolicy.max_staleness_s`` even when no reads arrive. The
+    engine's own staleness clock only ticks on queue/read operations; the
+    pool's thread polls ``oldest_pending_age_s`` and drives ``flush()``
+    itself, so §VI-C delta streams get absorbed on idle tenants too.
+  * **LRU factor eviction** — with ``max_warm=N`` the pool keeps at most N
+    tenants' factor caches resident; colder tenants keep their fused
+    ``(G, h)`` and client ledger (cheap, O(d^2) per tenant) but drop their
+    per-sigma factors (``engine.release_factors``) until next touched.
+  * **Ledger** — ``pool.ledger()`` rolls per-tenant ``fed.comm`` records
+    (admission uploads, measured when payloads were given, plus streamed
+    §VI-C bytes) into one pool-level byte account.
+
+Thread-safety contract: the pool's own wrappers are safe for concurrent use
+across threads. ``get()`` hands back the raw engine for single-threaded
+convenience — callers mixing that with concurrent pool use own the races.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Hashable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.privacy import psd_repair
+from repro.core.sufficient_stats import SuffStats
+from repro.server.engine import CoalescerPolicy, FusionEngine
+from repro.server.select import prefer_sharded
+
+PLACEMENTS = ("dense", "sharded", "auto")
+
+
+@dataclasses.dataclass
+class Tenant:
+    """Registry entry: one named engine plus its lock and observability."""
+
+    name: str
+    engine: FusionEngine
+    placement: str                 # what was requested ("auto" stays "auto")
+    lock: threading.RLock = dataclasses.field(default_factory=threading.RLock)
+    created_at: float = dataclasses.field(default_factory=time.monotonic)
+    last_used: float = dataclasses.field(default_factory=time.monotonic)
+    comm: Any = None               # fed.comm.CommRecord from admission
+    streamed_floats: int = 0       # §VI-C bytes ingested after admission
+    background_flushes: int = 0    # flushes driven by the pool's thread
+    max_flush_age_s: float = 0.0   # oldest delta age ever seen at a drain
+    factor_evictions: int = 0      # LRU evictions of this tenant's factors
+    psd_repairs: int = 0           # Remark-4 guard firings
+    guard_min_eig: float | None = None   # min eig seen by the last guard check
+
+    @property
+    def backend_name(self) -> str:
+        return self.engine.backend.name
+
+    def summary(self) -> dict:
+        with self.lock:
+            return {
+                "placement": self.placement,
+                "backend": self.backend_name,
+                "streamed_floats": self.streamed_floats,
+                "background_flushes": self.background_flushes,
+                "max_flush_age_s": self.max_flush_age_s,
+                "factor_evictions": self.factor_evictions,
+                "psd_repairs": self.psd_repairs,
+                "engine": self.engine.summary(),
+            }
+
+
+class EnginePool:
+    """Named multi-tenant registry of :class:`FusionEngine` servers."""
+
+    def __init__(self, *, mesh=None, mesh_devices: int = 8,
+                 threshold: float | None = None, table=None,
+                 max_warm: int | None = None,
+                 default_coalesce: CoalescerPolicy | None = None):
+        """Args:
+          mesh: mesh shared by every sharded tenant; built lazily
+            (``launch.mesh.make_cpu_mesh(mesh_devices)``) when omitted and a
+            tenant actually places sharded.
+          threshold / table: forwarded to ``server.select`` for ``"auto"``
+            placement (explicit threshold beats the measured crossover).
+          max_warm: LRU bound on tenants with resident factor caches
+            (``None``: never evict).
+          default_coalesce: coalescer policy for tenants that don't pass
+            their own.
+        """
+        self._tenants: dict[str, Tenant] = {}
+        self._reg_lock = threading.RLock()
+        self._mesh = mesh
+        self._mesh_devices = mesh_devices
+        self._threshold = threshold
+        self._table = table
+        self.max_warm = max_warm
+        self._default_coalesce = default_coalesce
+        self.meshes_built = 0
+        self._flusher: threading.Thread | None = None
+        self._stop = threading.Event()
+
+    # -- registry ------------------------------------------------------------
+
+    def __len__(self) -> int:
+        with self._reg_lock:
+            return len(self._tenants)
+
+    def __contains__(self, name: str) -> bool:
+        with self._reg_lock:
+            return name in self._tenants
+
+    @property
+    def tenant_names(self) -> tuple[str, ...]:
+        with self._reg_lock:
+            return tuple(self._tenants)
+
+    def tenant(self, name: str) -> Tenant:
+        """The registry record (observability; engine access via ``get``)."""
+        with self._reg_lock:
+            return self._tenants[name]
+
+    def get(self, name: str) -> FusionEngine:
+        """The tenant's engine (touches the LRU clock)."""
+        t = self.tenant(name)
+        with t.lock:
+            t.last_used = time.monotonic()
+        return t.engine
+
+    def _snapshot(self) -> list[Tenant]:
+        with self._reg_lock:
+            return list(self._tenants.values())
+
+    def shared_mesh(self):
+        """The one mesh every sharded tenant is placed on (built lazily)."""
+        with self._reg_lock:
+            if self._mesh is None:
+                from repro.launch import mesh as mesh_lib
+
+                self._mesh = mesh_lib.make_cpu_mesh(self._mesh_devices)
+                self.meshes_built += 1
+            return self._mesh
+
+    # -- admission -----------------------------------------------------------
+
+    def create_tenant(self, name: str,
+                      clients: Mapping[Hashable, SuffStats]
+                      | Sequence[SuffStats] | None = None, *,
+                      payloads: Mapping[Hashable, Any] | Sequence[Any]
+                      | None = None,
+                      stats: SuffStats | None = None,
+                      dim: int | None = None,
+                      placement: str = "auto",
+                      dtype=None,
+                      coalesce: CoalescerPolicy | None = None,
+                      max_update_rank: int | None = None,
+                      psd_guard: bool = False,
+                      backend_kwargs: dict | None = None) -> FusionEngine:
+        """Admit a tenant from exactly one of ``clients`` / ``payloads`` /
+        ``stats`` (or none, with ``dim``, for an empty engine fed later).
+
+        ``payloads`` are Thm-4 wire objects (anything with ``unpack()`` and
+        ``wire_floats``, e.g. ``fed.PackedStats``); the pool unpacks them and
+        the admission ledger records the bytes they measured. ``psd_guard``
+        runs the Remark-4 check on the admitted Gram: if DP noise made it
+        indefinite, ``privacy.psd_repair`` is applied (DP post-processing,
+        free) and the firing is counted in the tenant record.
+        """
+        if placement not in PLACEMENTS:
+            raise ValueError(f"placement must be one of {PLACEMENTS}, "
+                             f"got {placement!r}")
+        given = [x is not None for x in (clients, payloads, stats)]
+        if sum(given) > 1:
+            raise ValueError("pass at most one of clients/payloads/stats")
+        with self._reg_lock:
+            if name in self._tenants:
+                raise ValueError(f"tenant {name!r} already exists")
+
+        unpacked: Mapping[Hashable, SuffStats] | None = None
+        if payloads is not None:
+            items = (payloads.items() if isinstance(payloads, Mapping)
+                     else enumerate(payloads))
+            items = list(items)
+            if not items:
+                raise ValueError("need at least one client's payload")
+            unpacked = {cid: p.unpack() for cid, p in items}
+            dim = next(iter(unpacked.values())).dim
+        elif clients is not None:
+            cl = (clients if isinstance(clients, Mapping)
+                  else dict(enumerate(clients)))
+            if not cl:
+                raise ValueError("need at least one client's statistics")
+            unpacked = cl
+            dim = next(iter(cl.values())).dim
+        elif stats is not None:
+            dim = stats.dim
+        elif dim is None:
+            raise ValueError("need clients, payloads, stats, or dim")
+
+        # The backend must be built with the dtype the engine will infer
+        # from the admitted statistics, or FusionEngine's dtype consistency
+        # check rejects the pairing (e.g. float64 stats on a default-float32
+        # sharded backend).
+        eff_dtype = dtype
+        if eff_dtype is None:
+            if unpacked is not None:
+                eff_dtype = next(iter(unpacked.values())).gram.dtype
+            elif stats is not None:
+                eff_dtype = stats.gram.dtype
+        backend = self._place(dim, placement, eff_dtype, backend_kwargs or {})
+        kwargs: dict = {"coalesce": coalesce if coalesce is not None
+                        else self._default_coalesce}
+        if max_update_rank is not None:
+            kwargs["max_update_rank"] = max_update_rank
+        if backend is not None:
+            kwargs["backend"] = backend
+        elif dtype is not None:
+            kwargs["dtype"] = dtype
+        if unpacked is not None:
+            engine = FusionEngine.from_clients(unpacked, **kwargs)
+        elif stats is not None:
+            engine = FusionEngine.from_stats(stats, **kwargs)
+        else:
+            engine = FusionEngine(dim, **kwargs)
+
+        t = Tenant(name, engine, placement)
+        if unpacked is not None:
+            # Uploads actually happened (per-client stats or wire payloads);
+            # stats=/dim= admissions shipped nothing and record nothing.
+            t.comm = self._admission_record(
+                engine, dim,
+                payloads=[p for _, p in items] if payloads is not None
+                else None)
+        if psd_guard:
+            self._run_psd_guard(t)
+
+        with self._reg_lock:
+            if name in self._tenants:   # lost a create/create race
+                raise ValueError(f"tenant {name!r} already exists")
+            self._tenants[name] = t
+        return engine
+
+    def _place(self, dim: int, placement: str, dtype, backend_kwargs):
+        """Resolve a placement request to a backend (None = default dense)."""
+        if placement == "auto":
+            placement = ("sharded"
+                         if prefer_sharded(dim, threshold=self._threshold,
+                                           table=self._table) else "dense")
+        if placement == "dense":
+            return None
+        from repro.server.distributed import ShardedBackend
+
+        kw = dict(backend_kwargs)
+        if dtype is not None:
+            kw.setdefault("dtype", dtype)
+        return ShardedBackend(dim, self.shared_mesh(), **kw)
+
+    def _admission_record(self, engine: FusionEngine, dim: int, *, payloads):
+        from repro.fed import comm as fed_comm
+
+        if payloads is not None:
+            base = fed_comm.measured_one_shot(payloads, download_floats=dim)
+        else:
+            base = fed_comm.one_shot_comm(dim, max(len(engine.client_ids), 1))
+        axis_sizes = getattr(engine.backend, "fusion_axis_sizes", None)
+        if axis_sizes:
+            # Sharded tenants additionally pay the one on-mesh fusion psum.
+            base = fed_comm.ShardedCommRecord(
+                upload_floats_per_client=base.upload_floats_per_client,
+                download_floats_per_client=base.download_floats_per_client,
+                num_clients=base.num_clients,
+                rounds=base.rounds,
+                psum_floats_per_axis=fed_comm.sharded_oneshot_record(
+                    dim, base.num_clients, axis_sizes).psum_floats_per_axis)
+        return base
+
+    def _run_psd_guard(self, t: Tenant) -> bool:
+        """Remark 4: repair the admitted Gram if noise made it indefinite."""
+        with t.lock:
+            min_eig = float(jnp.linalg.eigvalsh(t.engine.stats.gram)[0])
+            t.guard_min_eig = min_eig
+            if min_eig < 0.0:
+                t.engine.apply(psd_repair)
+                t.psd_repairs += 1
+                return True
+        return False
+
+    def drop_tenant(self, name: str) -> FusionEngine:
+        """Remove a tenant entirely; returns its engine (caller may archive)."""
+        with self._reg_lock:
+            t = self._tenants.pop(name)
+        with t.lock:
+            return t.engine
+
+    # -- locked per-tenant operations ----------------------------------------
+
+    def _locked(self, name: str, fn: Callable[[FusionEngine], Any], *,
+                drains: bool = True, floats: int = 0,
+                warms: bool = False) -> Any:
+        t = self.tenant(name)
+        with t.lock:
+            if drains:
+                # Any queued delta is about to be folded in (engine reads and
+                # sync mutations drain) — record the staleness it reached.
+                age = t.engine.oldest_pending_age_s
+                if age > 0.0:
+                    t.max_flush_age_s = max(t.max_flush_age_s, age)
+            t.last_used = time.monotonic()
+            t.streamed_floats += floats
+            out = fn(t.engine)
+        if warms:
+            self._maybe_evict()
+        return out
+
+    @staticmethod
+    def _delta_floats(stats: SuffStats) -> int:
+        """Thm-4 wire floats a statistics delta would cost (packed Gram)."""
+        d = stats.dim
+        return d * (d + 1) // 2 + d
+
+    def ingest(self, name: str, stats: SuffStats,
+               client_id: Hashable | None = None, **kw) -> None:
+        self._locked(name, lambda e: e.ingest(stats, client_id=client_id, **kw),
+                     floats=self._delta_floats(stats))
+
+    def ingest_async(self, name: str, stats: SuffStats,
+                     client_id: Hashable | None = None, **kw) -> None:
+        self._locked(name,
+                     lambda e: e.ingest_async(stats, client_id=client_id, **kw),
+                     drains=False, floats=self._delta_floats(stats))
+
+    def ingest_rows(self, name: str, A: jax.Array, b: jax.Array,
+                    client_id: Hashable | None = None) -> SuffStats:
+        return self._locked(
+            name, lambda e: e.ingest_rows(A, b, client_id=client_id),
+            floats=A.shape[0] * (A.shape[1] + 1))
+
+    def ingest_rows_async(self, name: str, A: jax.Array, b: jax.Array,
+                          client_id: Hashable | None = None) -> SuffStats:
+        return self._locked(
+            name, lambda e: e.ingest_rows_async(A, b, client_id=client_id),
+            drains=False, floats=A.shape[0] * (A.shape[1] + 1))
+
+    def drop(self, name: str, client_id: Hashable) -> None:
+        self._locked(name, lambda e: e.drop(client_id))
+
+    def restore(self, name: str, client_id: Hashable) -> None:
+        self._locked(name, lambda e: e.restore(client_id))
+
+    def apply(self, name: str, fn: Callable[[SuffStats], SuffStats]) -> None:
+        self._locked(name, lambda e: e.apply(fn))
+
+    def stats(self, name: str) -> SuffStats:
+        return self._locked(name, lambda e: e.stats)
+
+    def solve(self, name: str, sigma: float) -> jax.Array:
+        return self._locked(name, lambda e: e.solve(sigma), warms=True)
+
+    def solve_batch(self, name: str, sigmas: Sequence[float], *,
+                    method: str = "auto") -> jax.Array:
+        return self._locked(name, lambda e: e.solve_batch(sigmas, method=method),
+                            warms=True)
+
+    def predict(self, name: str, A: jax.Array, sigma: float) -> jax.Array:
+        return self._locked(name, lambda e: e.predict(A, sigma), warms=True)
+
+    def predict_batch(self, name: str, A: jax.Array,
+                      sigmas: Sequence[float]) -> jax.Array:
+        return self._locked(name, lambda e: e.predict_batch(A, sigmas),
+                            warms=True)
+
+    def flush(self, name: str | None = None) -> int:
+        """Drain one tenant's queue (or every tenant's); returns #deltas."""
+        if name is not None:
+            return self._locked(name, lambda e: e.flush())
+        # Work on the snapshot's Tenant objects directly: re-resolving by
+        # name would KeyError on tenants dropped concurrently.
+        folded = 0
+        for t in self._snapshot():
+            with t.lock:
+                age = t.engine.oldest_pending_age_s
+                if age > 0.0:
+                    t.max_flush_age_s = max(t.max_flush_age_s, age)
+                folded += t.engine.flush()
+        return folded
+
+    @property
+    def pending_deltas(self) -> int:
+        """Queued-but-unapplied deltas across all tenants (monitoring)."""
+        return sum(t.engine.pending_deltas for t in self._snapshot())
+
+    # -- LRU factor eviction --------------------------------------------------
+
+    def _maybe_evict(self) -> None:
+        """Keep at most ``max_warm`` tenants' factor caches resident.
+
+        Called with NO tenant lock held; eviction uses non-blocking acquires
+        (a tenant busy enough to hold its lock is warm by definition), so
+        there is no lock-ordering deadlock with concurrent wrappers.
+        """
+        if self.max_warm is None:
+            return
+        warm = [t for t in self._snapshot()
+                if t.engine.cached_factor_count
+                or t.engine.backend.spectral_ready]
+        if len(warm) <= self.max_warm:
+            return
+        warm.sort(key=lambda t: t.last_used)        # coldest first
+        for t in warm[:len(warm) - self.max_warm]:
+            if not t.lock.acquire(blocking=False):
+                continue
+            try:
+                if t.engine.release_factors():
+                    t.factor_evictions += 1
+            finally:
+                t.lock.release()
+
+    def warm_tenants(self) -> tuple[str, ...]:
+        return tuple(t.name for t in self._snapshot()
+                     if t.engine.cached_factor_count
+                     or t.engine.backend.spectral_ready)
+
+    # -- background flusher ---------------------------------------------------
+
+    def flush_stale(self) -> int:
+        """One flusher sweep: flush every tenant whose oldest queued delta
+        outlived its policy's ``max_staleness_s``. Returns #deltas folded.
+
+        Synchronously callable (tests drive it directly); the background
+        thread just calls it on a timer.
+        """
+        folded = 0
+        for t in self._snapshot():
+            if not t.lock.acquire(blocking=False):
+                continue   # a producer/reader holds it; their ops tick the clock
+            try:
+                age = t.engine.oldest_pending_age_s
+                if (t.engine.pending_deltas
+                        and age >= t.engine.coalesce.max_staleness_s):
+                    # The queue is non-empty (we hold the lock), so the
+                    # flush below folds >= 1 delta; count it BEFORE the jax
+                    # work so lock-free monitors that observe pending == 0
+                    # also observe the flush that caused it.
+                    t.max_flush_age_s = max(t.max_flush_age_s, age)
+                    t.background_flushes += 1
+                    folded += t.engine.flush()
+            finally:
+                t.lock.release()
+        return folded
+
+    def _derive_interval(self) -> float:
+        finite = [t.engine.coalesce.max_staleness_s for t in self._snapshot()
+                  if t.engine.coalesce.max_staleness_s != float("inf")]
+        if not finite:
+            return 0.05
+        return min(max(min(finite) / 4.0, 0.005), 0.25)
+
+    def start_flusher(self, interval_s: float | None = None) -> threading.Thread:
+        """Start the staleness-enforcing daemon (idempotent while running).
+
+        ``interval_s`` defaults to a quarter of the tightest finite
+        ``max_staleness_s`` across tenants (clamped to [5ms, 250ms]), so the
+        bound each policy asks for is honored to within one poll period.
+        """
+        if self._flusher is not None and self._flusher.is_alive():
+            return self._flusher
+        interval = self._derive_interval() if interval_s is None else interval_s
+        self._stop = threading.Event()
+        stop = self._stop
+
+        def loop():
+            while not stop.wait(interval):
+                self.flush_stale()
+
+        self._flusher = threading.Thread(
+            target=loop, name=f"EnginePool-flusher-{id(self):x}", daemon=True)
+        self._flusher.start()
+        return self._flusher
+
+    @property
+    def flusher_alive(self) -> bool:
+        return self._flusher is not None and self._flusher.is_alive()
+
+    def stop_flusher(self, timeout: float = 5.0) -> None:
+        """Stop and join the flusher thread (no daemon leak across tests)."""
+        if self._flusher is None:
+            return
+        self._stop.set()
+        self._flusher.join(timeout=timeout)
+        if self._flusher.is_alive():   # pragma: no cover - join timed out
+            raise RuntimeError("EnginePool flusher failed to stop")
+        self._flusher = None
+
+    def close(self) -> None:
+        self.stop_flusher()
+
+    def __enter__(self) -> "EnginePool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- observability --------------------------------------------------------
+
+    def ledger(self) -> dict:
+        """Pool-level ``fed.comm`` rollup: admission uploads (measured where
+        payloads were given) plus streamed §VI-C bytes, per tenant and total."""
+        from repro.fed import comm as fed_comm
+
+        snapshot = self._snapshot()
+        out = fed_comm.aggregate_records(
+            {t.name: t.comm for t in snapshot if t.comm is not None})
+        streamed = 0
+        for t in snapshot:
+            entry = out["per_tenant"].setdefault(t.name, {})
+            entry["streamed_bytes"] = t.streamed_floats * fed_comm.FLOAT_BYTES
+            streamed += entry["streamed_bytes"]
+        out["streamed_bytes"] = streamed
+        out["total_bytes"] = out["upload_download_bytes"] + streamed
+        return out
+
+    def summary(self) -> dict:
+        snapshot = self._snapshot()
+        placements: dict[str, int] = {}
+        for t in snapshot:
+            placements[t.backend_name] = placements.get(t.backend_name, 0) + 1
+        return {
+            "tenants": len(snapshot),
+            "placements": placements,
+            "meshes_built": self.meshes_built,
+            "flusher_alive": self.flusher_alive,
+            "background_flushes": sum(t.background_flushes for t in snapshot),
+            "max_flush_age_s": max(
+                (t.max_flush_age_s for t in snapshot), default=0.0),
+            "factor_evictions": sum(t.factor_evictions for t in snapshot),
+            "psd_repairs": sum(t.psd_repairs for t in snapshot),
+            "warm_tenants": len(self.warm_tenants()),
+            "per_tenant": {t.name: t.summary() for t in snapshot},
+        }

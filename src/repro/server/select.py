@@ -47,6 +47,17 @@ def backend_threshold(threshold: float | None = None,
     return float(crossover) if crossover is not None else math.inf
 
 
+def prefer_sharded(dim: int, *, threshold: float | None = None,
+                   table: pathlib.Path | str | None = None) -> bool:
+    """Would ``auto`` place this dimension on the sharded backend?
+
+    The mesh-free half of :func:`auto_backend`: a multi-tenant pool asks this
+    *before* deciding whether to build (or reuse) its shared mesh, so dense
+    pools never pay mesh construction at all.
+    """
+    return dim >= backend_threshold(threshold, table)
+
+
 def auto_backend(dim: int, mesh=None, *, threshold: float | None = None,
                  table: pathlib.Path | str | None = None,
                  dtype=jnp.float32, **sharded_kwargs):
@@ -55,6 +66,7 @@ def auto_backend(dim: int, mesh=None, *, threshold: float | None = None,
     from repro.server.backends import DenseBackend
     from repro.server.distributed import ShardedBackend
 
-    if mesh is not None and dim >= backend_threshold(threshold, table):
+    if mesh is not None and prefer_sharded(dim, threshold=threshold,
+                                           table=table):
         return ShardedBackend(dim, mesh, dtype=dtype, **sharded_kwargs)
     return DenseBackend(dim, dtype=dtype)

@@ -1,0 +1,219 @@
+"""Thread-safety stress tests for the EnginePool background flusher.
+
+Three contracts, each probed rather than assumed:
+
+  * **Reads see fully-drained exact state.** A producer thread streams
+    §VI-C row deltas through ``ingest_rows_async`` while the background
+    flusher runs; every concurrent read (under the tenant lock) must observe
+    a state that is exact for some *prefix* of the delta stream — the row
+    count names the prefix, and a cold ``core.fusion`` solve over exactly
+    those rows must match. Nothing half-applied is ever visible.
+  * **Staleness is actually bounded without reads.** After a burst of
+    queued deltas and NO reads, the flusher alone must drain every queue;
+    a monotonic-clock probe checks the queue emptied within the policy's
+    ``max_staleness_s`` plus slack, and that the flusher never fired
+    *early* (the recorded age at flush is >= the budget).
+  * **Clean shutdown.** ``close()`` joins the daemon; no flusher thread
+    survives a test (leaked daemons would poison every later timing test in
+    the suite).
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import fusion
+from repro.server import CoalescerPolicy, EnginePool
+
+D = 12
+SIGMA = 0.1
+STALENESS = 0.1
+
+
+def _rows(seed, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(k1, (n, D)), jax.random.normal(k2, (n,)))
+
+
+def _flusher_threads():
+    return [t for t in threading.enumerate()
+            if t.name.startswith("EnginePool-flusher")]
+
+
+@pytest.fixture(autouse=True)
+def no_flusher_leak():
+    assert not _flusher_threads(), "flusher leaked into this test"
+    yield
+    assert not _flusher_threads(), "flusher leaked out of this test"
+
+
+def _make_pool(**kwargs) -> EnginePool:
+    pool = EnginePool(default_coalesce=CoalescerPolicy(
+        max_rank=10**6, max_staleness_s=STALENESS), **kwargs)
+    A, b = _rows(0, 24)
+    pool.create_tenant("t", clients={0: core.compute_stats(A, b)},
+                       placement="dense", max_update_rank=10**6)
+    return pool, (A, b)
+
+
+def _warm(pool, deltas):
+    """Compile the factor + flush programs before anything is timed."""
+    pool.solve("t", SIGMA)
+    for r in (1, 2, 4):
+        for _ in range(r):
+            pool.ingest_rows_async("t", jnp.zeros((1, D)), jnp.zeros((1,)))
+        pool.flush("t")
+    del deltas
+
+
+class TestConcurrentProducer:
+    N_DELTAS = 32
+
+    def test_reads_always_see_exact_prefix_state(self):
+        pool, (A0, b0) = _make_pool()
+        deltas = [_rows(100 + i, 1) for i in range(self.N_DELTAS)]
+        _warm(pool, deltas)
+        base_rows = int(pool.get("t").count)
+
+        def prefix_ref(n_extra: int) -> jax.Array:
+            A = jnp.concatenate([A0] + [a for a, _ in deltas[:n_extra]])
+            b = jnp.concatenate([b0] + [b for _, b in deltas[:n_extra]])
+            return fusion.solve_ridge(core.compute_stats(A, b), SIGMA)
+
+        stop = threading.Event()
+        errors: list[str] = []
+
+        def produce():
+            try:
+                for dA, db in deltas:
+                    pool.ingest_rows_async("t", dA, db)
+                    time.sleep(0.003)
+            except Exception as e:   # pragma: no cover - surfaced below
+                errors.append(f"producer: {e!r}")
+            finally:
+                stop.set()
+
+        pool.start_flusher()
+        try:
+            producer = threading.Thread(target=produce)
+            producer.start()
+            checked = 0
+            t_rec = pool.tenant("t")
+            while not stop.is_set() or checked == 0:
+                # Read count and weights under ONE lock hold so they name
+                # the same state; the solve itself drains the queue, so
+                # pending must be zero while we still hold the lock.
+                with t_rec.lock:
+                    w = t_rec.engine.solve(SIGMA)
+                    n_extra = int(t_rec.engine.backend.count) - base_rows
+                    assert t_rec.engine.pending_deltas == 0
+                assert 0 <= n_extra <= self.N_DELTAS
+                np.testing.assert_allclose(
+                    np.asarray(w), np.asarray(prefix_ref(n_extra)),
+                    rtol=5e-4, atol=5e-4,
+                    err_msg=f"read at prefix {n_extra} not exact")
+                checked += 1
+                time.sleep(0.01)
+            producer.join(timeout=10)
+            assert not producer.is_alive()
+        finally:
+            pool.close()
+        assert not errors, errors
+        assert checked >= 1
+        # Final state: the full stream, exactly.
+        np.testing.assert_allclose(
+            np.asarray(pool.solve("t", SIGMA)),
+            np.asarray(prefix_ref(self.N_DELTAS)), rtol=5e-4, atol=5e-4)
+
+
+class TestStalenessBound:
+    def test_background_flush_drains_without_reads(self):
+        pool, _ = _make_pool()
+        _warm(pool, None)
+        pool.start_flusher()
+        try:
+            queued_at = time.monotonic()
+            for i in range(6):
+                dA, db = _rows(200 + i, 1)
+                pool.ingest_rows_async("t", dA, db)
+            # NO reads from here: the flusher is the only staleness clock.
+            deadline = queued_at + STALENESS + 3.0
+            while pool.pending_deltas and time.monotonic() < deadline:
+                time.sleep(STALENESS / 10)
+            drained_at = time.monotonic()
+            assert pool.pending_deltas == 0, \
+                "background flusher never drained the queue"
+            t = pool.tenant("t")
+            assert t.background_flushes >= 1
+            # Monotonic probe: drained within budget + slack, and the age
+            # the flusher recorded shows it did not fire early (>= budget,
+            # up to scheduler granularity) nor late beyond slack.
+            assert drained_at - queued_at <= STALENESS + 3.0
+            assert t.max_flush_age_s >= 0.9 * STALENESS
+            assert t.max_flush_age_s <= STALENESS + 3.0
+        finally:
+            pool.close()
+
+    def test_zero_staleness_policy_no_phantom_flushes(self):
+        # max_staleness_s=0 means "flush immediately on queue", and an empty
+        # queue must never read as stale (age 0.0 >= 0.0): sweeps over idle
+        # tenants must not inflate background_flushes with no-op flushes.
+        pool = EnginePool(default_coalesce=CoalescerPolicy(
+            max_rank=10**6, max_staleness_s=0.0))
+        A, b = _rows(0, 24)
+        pool.create_tenant("t", clients={0: core.compute_stats(A, b)},
+                           placement="dense")
+        for _ in range(5):
+            assert pool.flush_stale() == 0
+        assert pool.tenant("t").background_flushes == 0
+        pool.ingest_rows_async("t", *_rows(1, 1))   # autoflushes at once
+        assert pool.pending_deltas == 0
+        assert pool.flush_stale() == 0
+        assert pool.tenant("t").background_flushes == 0
+        pool.close()
+
+    def test_no_flush_before_staleness_when_rank_unbounded(self):
+        pool, _ = _make_pool()
+        _warm(pool, None)
+        pool.ingest_rows_async("t", *_rows(300, 1))
+        # Synchronous sweep well before the budget: must be a no-op.
+        assert pool.flush_stale() == 0
+        assert pool.pending_deltas == 1
+        time.sleep(STALENESS * 1.5)
+        assert pool.flush_stale() == 1
+        assert pool.pending_deltas == 0
+        pool.close()
+
+
+class TestShutdown:
+    def test_close_joins_daemon(self):
+        pool, _ = _make_pool()
+        thread = pool.start_flusher()
+        assert thread.daemon and thread.is_alive()
+        assert pool.flusher_alive
+        pool.close()
+        assert not pool.flusher_alive
+        assert not thread.is_alive()
+
+    def test_close_is_idempotent_and_restartable(self):
+        pool, _ = _make_pool()
+        pool.close()                      # never started: no-op
+        pool.start_flusher()
+        first = pool._flusher
+        assert pool.start_flusher() is first   # idempotent while running
+        pool.close()
+        pool.close()
+        pool.start_flusher()              # restart after close works
+        assert pool.flusher_alive
+        pool.close()
+
+    def test_context_manager_stops_flusher(self):
+        pool, _ = _make_pool()
+        with pool:
+            pool.start_flusher()
+            assert pool.flusher_alive
+        assert not pool.flusher_alive
