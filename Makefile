@@ -5,9 +5,10 @@ PY ?= python
 # smoke (writes experiments/repro/fusion_engine_bench.json, exits nonzero if
 # any perf claim fails), one dense-vs-sharded crossover measurement, the
 # mutation-path smoke (blocked rank-r update / ingest coalescer / packed
-# payload ledger), and the engine-pool smoke (tenant-count scaling +
-# background-flusher staleness bound) so experiments/repro/ tracks serving
-# and write-path perf per PR.
+# payload ledger), the engine-pool smoke (tenant-count scaling +
+# background-flusher staleness bound), and the wire-codec smoke
+# (bytes-on-wire vs the Thm-4/§IV-F formulas + loopback admission path) so
+# experiments/repro/ tracks serving, write-path, and wire perf per PR.
 .PHONY: tier1
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -15,6 +16,16 @@ tier1:
 	PYTHONPATH=src $(PY) benchmarks/sharded_fusion_bench.py --smoke
 	PYTHONPATH=src $(PY) benchmarks/mutation_bench.py --smoke
 	PYTHONPATH=src $(PY) benchmarks/pool_bench.py --smoke
+	PYTHONPATH=src $(PY) benchmarks/wire_bench.py --smoke
+
+# Standalone wire gate: the codec suite (golden frames, roundtrip fuzz,
+# mutation fuzz) plus the out-of-process federation e2e (loopback, TCP,
+# subprocess launch/client.py clients against serve.py --listen) and the
+# codec bench smoke.
+.PHONY: wire-smoke
+wire-smoke:
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_wire.py tests/test_wire_e2e.py
+	PYTHONPATH=src $(PY) benchmarks/wire_bench.py --smoke
 
 .PHONY: bench-mutation
 bench-mutation:

@@ -25,7 +25,10 @@ def _trial(key) -> dict:
     one = fed.run_one_shot(ds, RC.sigma)
     cen = fed.run_centralized(ds, RC.sigma)
     rows["oneshot_mse"] = float(core.mse(ds.test_A, ds.test_b, one.weights))
-    rows["oneshot_comm_mb"] = one.comm.total_mb
+    # Paper column = analytic Thm-4 bytes (FedAvg rows are analytic too);
+    # the measured wire-frame bytes are reported alongside.
+    rows["oneshot_comm_mb"] = one.comm.analytic_total_mb
+    rows["oneshot_wire_mb"] = one.comm.total_mb
     rows["oneshot_time_s"] = one.wall_time_s
     rows["central_mse"] = float(core.mse(ds.test_A, ds.test_b, cen.weights))
     rows["central_time_s"] = cen.wall_time_s

@@ -28,9 +28,13 @@ def run() -> list[dict]:
                 sigma=RC.sigma))
             return {
                 "d": d,
-                "oneshot_mb": one.comm.total_mb,
+                # Paper column: the Thm-4 analytic bytes (comparable with the
+                # analytic FedAvg row); the measured wire column — actual
+                # encoded frame lengths, fed.wire — rides alongside.
+                "oneshot_mb": one.comm.analytic_total_mb,
+                "oneshot_wire_mb": one.comm.total_mb,
                 "fedavg_mb": fa.comm.total_mb,
-                "ratio": fa.comm.total_mb / one.comm.total_mb,
+                "ratio": fa.comm.total_mb / one.comm.analytic_total_mb,
                 "oneshot_time_s": one.wall_time_s,
                 "fedavg_time_s": fa.wall_time_s,
                 "oneshot_mse": float(core.mse(ds.test_A, ds.test_b, one.weights)),

@@ -55,9 +55,13 @@ def _sweep(rank):
                 "mse": float(core.mse(ds.test_A, ds.test_b, w)),
                 "exact_mse": float(core.mse(ds.test_A, ds.test_b, exact.weights)),
                 "w_rel_err": w_err,
-                "comm_mb": res.comm.total_mb,
-                "vs_fedavg": fa_comm.total_mb / res.comm.total_mb,
-                "vs_exact": exact.comm.total_mb / res.comm.total_mb,
+                # Analytic Thm-4/§IV-F columns (comparable across rows);
+                # measured wire-frame bytes alongside.
+                "comm_mb": res.comm.analytic_total_mb,
+                "wire_mb": res.comm.total_mb,
+                "vs_fedavg": fa_comm.total_mb / res.comm.analytic_total_mb,
+                "vs_exact": (exact.comm.analytic_total_mb
+                             / res.comm.analytic_total_mb),
                 "jl_bound": math.sqrt(D / m),
             }
 

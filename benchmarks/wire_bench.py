@@ -1,0 +1,190 @@
+"""Wire-protocol benchmark: codec throughput + bytes-on-wire vs the formulas.
+
+Two measurement axes for ``fed.wire``:
+
+  * **bytes-on-wire** — for a d/m/dtype grid, the actual encoded frame
+    length vs the analytic Thm-4 (d(d+1)/2 + d floats) and §IV-F
+    (m(m+1)/2 + m) payload formulas. Claims gate that the measured length
+    is EXACTLY payload + the fixed frame overhead (header + metadata + CRC,
+    a closed form — the wire adds framing, never hidden padding), and that
+    the overhead fraction is negligible (< 1%) at production d.
+  * **codec throughput** — encode and decode MB/s over the same grid
+    (recorded honestly; CPU-host numbers, no claim), plus the loopback
+    round-trip: uploads through the full dispatcher -> EnginePool admission
+    path, the per-frame cost a serving deployment pays before linear
+    algebra starts.
+
+Usage: PYTHONPATH=src python benchmarks/wire_bench.py [--smoke]
+Emits a CSV + BENCH JSON under experiments/repro/ and prints a BENCH line.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/wire_bench.py`
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import common
+from repro.fed import wire
+
+SIGMA = 0.1
+
+
+def _stats_frame(rng, d, dtype):
+    A = rng.standard_normal((2 * d, d))
+    return wire.StatsFrame(tri=(A.T @ A)[np.tril_indices(d)],
+                           moment=rng.standard_normal(d), count=2 * d,
+                           dim=d, client_id="bench", wire_dtype=dtype)
+
+
+def _bench_codec(claims: common.Claims, rows: list, smoke: bool) -> None:
+    dims = [64, 256] if smoke else [64, 256, 1024]
+    reps = 20 if smoke else 100
+    rng = np.random.default_rng(0)
+
+    for d in dims:
+        for dtype in ("f32", "f64", "bf16"):
+            frame = _stats_frame(rng, d, dtype)
+            data = wire.encode_frame(frame, dtype=dtype)
+
+            # Exactness: measured == analytic payload + fixed overhead.
+            floats = d * (d + 1) // 2 + d
+            payload_bytes = floats * wire.wire_itemsize(dtype)
+            expected = wire.stats_frame_nbytes(d, dtype, client_id="bench")
+            meta = expected - payload_bytes - wire.OVERHEAD_BYTES
+
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                data = wire.encode_frame(frame, dtype=dtype)
+            enc_s = (time.perf_counter() - t0) / reps
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                decoded = wire.decode_frame(data)
+            dec_s = (time.perf_counter() - t0) / reps
+
+            mb = len(data) / 2**20
+            rows.append({
+                "name": f"stats_d{d}_{dtype}",
+                "d": d, "dtype": dtype,
+                "wire_bytes": len(data),
+                "thm4_floats": floats,
+                "payload_bytes": payload_bytes,
+                "overhead_bytes": len(data) - payload_bytes,
+                "overhead_frac": (len(data) - payload_bytes) / len(data),
+                "encode_mb_s": mb / enc_s,
+                "decode_mb_s": mb / dec_s,
+            })
+            claims.check(
+                f"measured_is_formula_plus_overhead_d{d}_{dtype}",
+                len(data) == expected
+                and len(data) == payload_bytes + wire.OVERHEAD_BYTES + meta,
+                f"{len(data)} bytes = {payload_bytes} payload "
+                f"+ {wire.OVERHEAD_BYTES} envelope + {meta} metadata")
+            # Paranoia worth one claim: the roundtrip is the identity.
+            claims.check(f"roundtrip_identity_d{d}_{dtype}",
+                         wire.encode_frame(decoded) == data, "")
+
+    big = [r for r in rows if r["d"] == max(dims) and r["dtype"] == "f32"]
+    claims.check("overhead_negligible_at_scale",
+                 all(r["overhead_frac"] < 0.01 for r in big),
+                 f"frac={big[0]['overhead_frac']:.2e} at d={max(dims)}")
+
+    # §IV-F: the projected frame's wire cost tracks m, not d.
+    d_orig = max(dims)
+    for m in ([16, 64] if smoke else [16, 64, 256]):
+        frame = wire.ProjectedFrame(
+            tri=_stats_frame(rng, m, "f32").tri,
+            moment=rng.standard_normal(m), count=64, dim=m, d_orig=d_orig,
+            seed=7, rhash=1, client_id="bench", wire_dtype="f32")
+        data = wire.encode_frame(frame, dtype="f32")
+        floats = m * (m + 1) // 2 + m
+        rows.append({
+            "name": f"proj_m{m}_of_d{d_orig}", "d": d_orig, "m": m,
+            "dtype": "f32", "wire_bytes": len(data),
+            "ivf_floats": floats,
+            "vs_full_ratio": (d_orig * (d_orig + 1) // 2 + d_orig) / floats,
+        })
+        claims.check(
+            f"proj_measured_is_formula_m{m}",
+            len(data) == wire.projected_frame_nbytes(m, "f32",
+                                                     client_id="bench"),
+            f"{len(data)} bytes for m={m} (vs d={d_orig} full: "
+            f"{rows[-1]['vs_full_ratio']:.0f}x)")
+
+
+def _bench_loopback(claims: common.Claims, rows: list, smoke: bool) -> None:
+    """Full-path cost: frame bytes -> dispatcher -> pool admission."""
+    import jax
+
+    from repro.core.sufficient_stats import compute_stats
+    from repro.fed import transport
+    from repro.server import EnginePool
+
+    d = 64 if smoke else 256
+    uploads = 8 if smoke else 32
+    rng = np.random.default_rng(1)
+    with EnginePool() as pool:
+        disp = transport.WireDispatcher(pool)
+        client = transport.FrameClient(transport.LoopbackChannel(disp))
+        client.hello("bench", ("f32",))
+        stats = [compute_stats(
+            jax.numpy.asarray(rng.standard_normal((2 * d, d)),
+                              jax.numpy.float32),
+            jax.numpy.asarray(rng.standard_normal(2 * d), jax.numpy.float32))
+            for _ in range(uploads)]
+        client.upload_stats(stats[0], client_id="warm")   # compile paths
+        t0 = time.perf_counter()
+        for i, s in enumerate(stats[1:], 1):
+            client.upload_stats(s, client_id=f"c{i}")
+        per_upload_ms = (time.perf_counter() - t0) / (uploads - 1) * 1e3
+        jax.block_until_ready(pool.solve("bench", SIGMA))
+
+        led = pool.ledger()
+        rows.append({
+            "name": f"loopback_d{d}", "d": d, "uploads": uploads,
+            "upload_ms": per_upload_ms,
+            "wire_upload_bytes": led["wire_upload_bytes"],
+        })
+        claims.check(
+            "loopback_ledger_measures_frames",
+            led["wire_upload_bytes"] == client.bytes_uploaded ==
+            sum(wire.stats_frame_nbytes(d, "f32", client_id=c)
+                for c in ["warm"] + [f"c{i}" for i in range(1, uploads)]),
+            f"{led['wire_upload_bytes']} bytes over {uploads} frames, "
+            f"{per_upload_ms:.2f} ms/upload")
+
+
+def run(smoke: bool = False) -> list[dict]:
+    claims = common.Claims("wire")
+    rows: list[dict] = []
+    _bench_codec(claims, rows, smoke)
+    _bench_loopback(claims, rows, smoke)
+
+    common.write_csv("wire_bench", rows)
+    bench = {"smoke": smoke, "rows": rows, "claims": claims.rows()}
+    common.OUT_DIR.mkdir(parents=True, exist_ok=True)
+    (common.OUT_DIR / "wire_bench.json").write_text(json.dumps(bench,
+                                                               indent=2))
+    print("BENCH " + json.dumps({
+        r["name"]: r["wire_bytes"] if "wire_bytes" in r
+        else round(r["upload_ms"], 3)
+        for r in rows}))
+    return claims.rows()
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few reps for CI")
+    args = ap.parse_args()
+    failed = [c for c in run(smoke=args.smoke) if not c["pass"]]
+    sys.exit(1 if failed else 0)

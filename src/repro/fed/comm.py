@@ -1,14 +1,18 @@
 """Communication accounting (paper Theorem 4 / Corollary 2).
 
-Counts are in *floats per client*; ``bytes`` helpers assume fp32 (4 bytes) as
-the paper's MB figures do. Upload for One-Shot exploits Gram symmetry:
-d(d+1)/2 + d floats up, d down. FedAvg: R*d up and R*d down.
+Counts are in *floats per client*; the analytic ``bytes`` columns assume
+fp32 (4 bytes) as the paper's MB figures do. Upload for One-Shot exploits
+Gram symmetry: d(d+1)/2 + d floats up, d down. FedAvg: R*d up and R*d down.
 
 Since the protocol runs actually ship :class:`~repro.fed.protocol.PackedStats`
 payloads (the Gram's d(d+1)/2 lower triangle, not the full square),
-``measured_one_shot`` builds the record from the *payload arrays themselves*
-— the ledger reports bytes that moved, and a test pins measured == Thm 4's
-formula so the two can never drift apart silently.
+``measured_one_shot`` builds the record from the *payload arrays themselves* —
+and its byte column is the **encoded frame length** (``fed.wire``: 16-byte
+header+CRC envelope, frame metadata, scalars at the negotiated dtype's
+width), not float-count x 4. The Thm-4 analytic column stays alongside
+(``analytic_total_bytes``) for the paper tables, and a test pins
+measured-floats == Thm 4's formula and measured-bytes == the exact encoded
+frame size, so neither can drift silently.
 
 The sharded serving path (server.distributed.ShardedBackend) adds a second
 ledger axis: beyond the client->server uploads Theorem 4 counts, the on-mesh
@@ -28,16 +32,50 @@ FLOAT_BYTES = 4
 
 @dataclasses.dataclass(frozen=True)
 class CommRecord:
-    """Byte ledger for one protocol execution (per-client and total)."""
+    """Byte ledger for one protocol execution (per-client and total).
+
+    The float columns are the paper's Thm-4 accounting. When the record was
+    measured from actual wire payloads, ``upload_wire_bytes_per_client`` /
+    ``download_wire_bytes_per_client`` hold the *encoded frame lengths*
+    (header + metadata + scalars at the negotiated dtype) and the byte
+    properties report those; otherwise the bytes fall back to the analytic
+    floats x 4 column. ``analytic_*`` always gives the formula column, so
+    tables can show both side by side.
+    """
 
     upload_floats_per_client: int
     download_floats_per_client: int
     num_clients: int
     rounds: int
+    upload_wire_bytes_per_client: int | None = None
+    download_wire_bytes_per_client: int | None = None
+
+    @property
+    def analytic_per_client_bytes(self) -> int:
+        """The Thm-4 column: floats x 4, no framing, no dtype negotiation."""
+        return (self.upload_floats_per_client
+                + self.download_floats_per_client) * FLOAT_BYTES
+
+    @property
+    def analytic_total_bytes(self) -> int:
+        return self.analytic_per_client_bytes * self.num_clients
+
+    @property
+    def analytic_total_mb(self) -> float:
+        """The paper-table MB column (Thm-4 formula; comparable with the
+        FedAvg rows, which are always analytic)."""
+        return self.analytic_total_bytes / 2**20
 
     @property
     def per_client_bytes(self) -> int:
-        return (self.upload_floats_per_client + self.download_floats_per_client) * FLOAT_BYTES
+        up, down = (self.upload_wire_bytes_per_client,
+                    self.download_wire_bytes_per_client)
+        if up is None and down is None:
+            return self.analytic_per_client_bytes
+        return ((up if up is not None
+                 else self.upload_floats_per_client * FLOAT_BYTES)
+                + (down if down is not None
+                   else self.download_floats_per_client * FLOAT_BYTES))
 
     @property
     def total_bytes(self) -> int:
@@ -59,23 +97,45 @@ def one_shot_comm(d: int, num_clients: int, *, projected_m: int | None = None) -
     )
 
 
-def measured_one_shot(payloads, download_floats: int) -> CommRecord:
+def measured_one_shot(payloads, download_floats: int, *,
+                      frame: str = "tri") -> CommRecord:
     """Ledger from actual wire payloads, not the Thm 4 formula.
 
     ``payloads`` is the per-client upload collection (anything with a
-    ``wire_floats`` property, e.g. ``fed.protocol.PackedStats``); the upload
-    count is the *maximum* over clients (Thm 4 is a per-client bound and
-    every client ships the same shapes, so max == the common size — asserted
-    here so a heterogeneous bug is loud rather than averaged away).
+    ``wire_floats`` property and ``tri``/``dim`` arrays, e.g.
+    ``fed.protocol.PackedStats``); the upload count must be *common* across
+    clients (Thm 4 is a per-client bound and every client ships the same
+    shapes — a heterogeneous collection is a bug made loud here, not
+    averaged away).
+
+    The byte column is the exact **encoded frame length** each upload costs
+    on the wire (``fed.wire``; ``frame`` picks the Thm-4 "tri" or §IV-F
+    "proj" layout, per the payload's own dtype). Payloads whose dtype has no
+    wire encoding fall back to the analytic floats x 4 column.
     """
+    payloads = list(payloads)
     sizes = {int(p.wire_floats) for p in payloads}
     if len(sizes) > 1:
         raise ValueError(f"heterogeneous upload payloads: {sorted(sizes)}")
+    upload_wire_bytes = None
+    if payloads:
+        from repro.fed import wire
+
+        try:
+            encoded = {wire.encoded_nbytes(p, frame=frame) for p in payloads}
+        except wire.WireError:
+            encoded = set()    # no wire encoding for this dtype: analytic only
+        if len(encoded) > 1:
+            raise ValueError(
+                f"heterogeneous encoded frame sizes: {sorted(encoded)}")
+        if encoded:
+            upload_wire_bytes = encoded.pop()
     return CommRecord(
         upload_floats_per_client=max(sizes) if sizes else 0,
         download_floats_per_client=download_floats,
         num_clients=len(payloads),
         rounds=1,
+        upload_wire_bytes_per_client=upload_wire_bytes,
     )
 
 
@@ -149,6 +209,7 @@ def aggregate_records(records: Mapping[str, CommRecord]) -> dict:
     upload_bytes = cross_shard = 0
     for name, rec in records.items():
         entry = {"upload_download_bytes": rec.total_bytes,
+                 "analytic_bytes": rec.analytic_total_bytes,
                  "num_clients": rec.num_clients, "rounds": rec.rounds}
         upload_bytes += rec.total_bytes
         if isinstance(rec, ShardedCommRecord):

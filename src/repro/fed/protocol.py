@@ -210,7 +210,7 @@ def run_one_shot_projected(
     w.block_until_ready()
     return RunResult(
         weights=w,
-        comm=comm.measured_one_shot(payloads, download_floats=m),
+        comm=comm.measured_one_shot(payloads, download_floats=m, frame="proj"),
         wall_time_s=time.perf_counter() - t0,
         rounds=1,
         # The engine lives in projected space (dim m): solve() yields v, and
@@ -249,8 +249,13 @@ def run_loco_cv(ds: FederatedDataset, sigmas: Sequence[float]) -> tuple[float, R
     res.extras["cv_losses"] = losses
     res.extras["sigma_grid"] = list(sigmas)
     # Prop 5 overhead: K * |Sigma| scalars on top of the one-shot payload.
-    res.comm = dataclasses.replace(
-        res.comm,
-        upload_floats_per_client=res.comm.upload_floats_per_client + len(sigmas),
-    )
+    rep = {"upload_floats_per_client":
+           res.comm.upload_floats_per_client + len(sigmas)}
+    if res.comm.upload_wire_bytes_per_client is not None:
+        # Keep the measured column consistent: the CV losses ride unframed
+        # at the ledger's fp32 width.
+        rep["upload_wire_bytes_per_client"] = (
+            res.comm.upload_wire_bytes_per_client
+            + len(sigmas) * comm.FLOAT_BYTES)
+    res.comm = dataclasses.replace(res.comm, **rep)
     return best, res

@@ -1,0 +1,466 @@
+"""Transports for the wire protocol: in-proc loopback + length-prefixed TCP.
+
+The protocol is strict request/reply: every frame a client sends gets exactly
+one reply frame (ACK, negotiated HELLO, or WEIGHTS), so one abstraction
+covers both transports — a *channel* with ``request(bytes) -> bytes``:
+
+  * :class:`LoopbackChannel` — no sockets, no threads: the dispatcher's
+    session handles the bytes in-process. Same codec, same validation, same
+    ledger accounting as TCP; what it removes is only the kernel.
+  * :class:`TCPChannel` / :class:`FrameServer` — real sockets over a
+    length-prefixed stream. Frames are self-delimiting (the 12-byte header
+    carries the payload length), so the server reads exactly one frame's
+    bytes, dispatches, and writes exactly one reply; a connection is a
+    session (tenant + negotiated dtype live for its duration).
+
+Server-side state machine (:class:`WireDispatcher` -> per-connection
+``_Session``): HELLO fixes the session's tenant and negotiates the dtype
+(``wire.negotiate``); every other frame is handed to
+``EnginePool.admit_frame``, which creates the tenant lazily, ingests
+uploads, applies Thm-8 control, and answers SOLVE with a WEIGHTS frame.
+Malformed bytes are answered with a typed-error ACK — a hostile or buggy
+client cannot take the server down, and (for TCP) a frame whose *header*
+cannot be trusted ends the connection, because stream resync is impossible.
+
+``FrameClient`` is the client half used by ``launch/client.py`` and the
+tests: negotiate, upload (Thm-4 packed / §IV-F projected / §VI-C rows),
+drop/rejoin, solve. It counts its own bytes per direction, so end-to-end
+tests can pin the server's ledger against what clients actually sent.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from typing import Sequence
+
+import numpy as np
+
+from repro.fed import wire
+
+
+class TransportError(RuntimeError):
+    """A reply the protocol does not allow (rejection where success was
+    required, or an unexpected frame type)."""
+
+
+# ACK messages can embed client-controlled text (a 64KB client id inside an
+# "unknown client ..." rejection would overflow the codec's u16 string field
+# and the encode failure would kill the session). Bound them server-side.
+MAX_ACK_MESSAGE_BYTES = 1024
+
+
+def _bounded_ack(frame):
+    if isinstance(frame, wire.AckFrame):
+        raw = frame.message.encode("utf-8")
+        if len(raw) > MAX_ACK_MESSAGE_BYTES:
+            msg = raw[:MAX_ACK_MESSAGE_BYTES].decode("utf-8", "ignore")
+            return wire.AckFrame(frame.ok, msg + "...[truncated]")
+    return frame
+
+
+# -- server side -------------------------------------------------------------
+
+def default_dtype_preference() -> tuple[str, ...]:
+    """The server-side negotiation order for THIS process's container.
+
+    The pool fuses in jax's default float width: with x64 off (the default)
+    every admitted array lands in float32, so negotiating f64 would make
+    clients ship 2x the bytes for zero retained precision — the policy
+    prefers f32 and keeps f64 as a fallback for f64-only clients. With x64
+    enabled the container really holds f64 and widest-first applies.
+    """
+    import jax
+
+    if jax.config.jax_enable_x64:
+        return wire.DEFAULT_PREFERENCE          # ("f64", "f32", "bf16")
+    return ("f32", "f64", "bf16")
+
+
+class WireDispatcher:
+    """Shared server state: the pool, admission policy, and counters.
+
+    Counter semantics: ``frames_handled``/``frames_rejected`` count frames
+    (every handled-and-rejected frame is also handled); ``bytes_in`` counts
+    the bytes of *complete* frames received (a corrupt header that aborts
+    mid-read is counted as a rejected frame but its partial bytes are not),
+    ``bytes_out`` every reply byte sent.
+    """
+
+    def __init__(self, pool, *, default_tenant: str = "default",
+                 placement: str = "dense",
+                 dtype_preference: Sequence[str] | None = None):
+        self.pool = pool
+        self.default_tenant = default_tenant
+        self.placement = placement
+        self.dtype_preference = (tuple(dtype_preference)
+                                 if dtype_preference is not None
+                                 else default_dtype_preference())
+        self._lock = threading.Lock()
+        self.frames_handled = 0
+        self.frames_rejected = 0
+        self.uploads_admitted = 0
+        self.bytes_in = 0
+        self.bytes_out = 0
+
+    def _count(self, **deltas: int) -> None:
+        with self._lock:
+            for k, v in deltas.items():
+                setattr(self, k, getattr(self, k) + v)
+
+    def session(self) -> "_Session":
+        return _Session(self)
+
+    def summary(self) -> dict:
+        with self._lock:
+            return {
+                "frames_handled": self.frames_handled,
+                "frames_rejected": self.frames_rejected,
+                "uploads_admitted": self.uploads_admitted,
+                "bytes_in": self.bytes_in,
+                "bytes_out": self.bytes_out,
+            }
+
+
+class _Session:
+    """Per-connection protocol state: tenant binding + negotiated dtype."""
+
+    def __init__(self, dispatcher: WireDispatcher):
+        self.dispatcher = dispatcher
+        self.tenant = dispatcher.default_tenant
+        self.dtype = "f32"
+
+    def handle(self, data: bytes) -> bytes:
+        """One request frame in, one reply frame out. Never raises for
+        malformed input — typed rejections come back as error ACKs."""
+        d = self.dispatcher
+        d._count(frames_handled=1, bytes_in=len(data))
+        try:
+            frame = wire.decode_frame(data)
+        except wire.WireError as e:
+            d._count(frames_rejected=1)
+            return self._reply(wire.AckFrame(
+                False, f"{type(e).__name__}: {e}"))
+        if isinstance(frame, wire.Hello):
+            self.tenant = frame.tenant or self.tenant
+            try:
+                self.dtype = wire.negotiate(
+                    frame.offers, preference=d.dtype_preference)
+            except wire.NegotiationError as e:
+                d._count(frames_rejected=1)
+                return self._reply(wire.AckFrame(False, str(e)))
+            return self._reply(wire.Hello(self.tenant, (self.dtype,)))
+        if not isinstance(frame, (wire.StatsFrame, wire.ProjectedFrame,
+                                  wire.DeltaRowsFrame, wire.ControlFrame,
+                                  wire.SolveFrame)):
+            # Well-formed but server-bound-only frame (WEIGHTS/ACK): a typed
+            # protocol rejection, not a thread-killing dispatch error.
+            d._count(frames_rejected=1)
+            return self._reply(wire.AckFrame(
+                False, f"unexpected {type(frame).__name__} from client"))
+        try:
+            reply = d.pool.admit_frame(self.tenant, frame,
+                                       encoded_len=len(data),
+                                       placement=d.placement)
+        except Exception as e:  # noqa: BLE001 - a frame must never kill the
+            # session thread; the protocol contract is a typed-error ACK.
+            d._count(frames_rejected=1)
+            return self._reply(wire.AckFrame(
+                False, f"internal error: {type(e).__name__}: {e}"))
+        if isinstance(reply, wire.AckFrame) and not reply.ok:
+            d._count(frames_rejected=1)
+        elif isinstance(frame, (wire.StatsFrame, wire.ProjectedFrame,
+                                wire.DeltaRowsFrame)):
+            d._count(uploads_admitted=1)
+        out = wire.encode_frame(_bounded_ack(reply))
+        d.pool.record_wire_reply(self.tenant, len(out))
+        d._count(bytes_out=len(out))
+        return out
+
+    def _reply(self, frame) -> bytes:
+        out = wire.encode_frame(_bounded_ack(frame))
+        self.dispatcher._count(bytes_out=len(out))
+        return out
+
+
+class LoopbackChannel:
+    """In-process transport: one session over direct byte hand-off."""
+
+    def __init__(self, dispatcher: WireDispatcher):
+        self._session = dispatcher.session()
+        self.bytes_sent = 0
+        self.bytes_received = 0
+
+    def request(self, data: bytes) -> bytes:
+        self.bytes_sent += len(data)
+        out = self._session.handle(data)
+        self.bytes_received += len(out)
+        return out
+
+    def close(self) -> None:
+        pass
+
+
+# -- TCP ---------------------------------------------------------------------
+
+def _read_exact(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    while n:
+        chunk = sock.recv(n)
+        if not chunk:
+            raise ConnectionError("peer closed mid-frame"
+                                  if chunks or n else "peer closed")
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks)
+
+
+def read_frame(sock: socket.socket) -> bytes:
+    """Read exactly one frame off a stream socket.
+
+    The header's length field is validated (magic, version, payload cap)
+    *before* the payload read, so a length-prefix lie cannot make the
+    reader allocate or block for gigabytes.
+    """
+    header = _read_exact(sock, wire.HEADER_BYTES)
+    total = wire.frame_total_length(header)   # raises WireError on bad header
+    return header + _read_exact(sock, total - wire.HEADER_BYTES)
+
+
+class TCPChannel:
+    """Client side of the length-prefixed TCP transport."""
+
+    def __init__(self, host: str, port: int, *, timeout_s: float = 30.0):
+        self.sock = socket.create_connection((host, port), timeout=timeout_s)
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.bytes_sent = 0
+        self.bytes_received = 0
+
+    def request(self, data: bytes) -> bytes:
+        self.sock.sendall(data)
+        self.bytes_sent += len(data)
+        out = read_frame(self.sock)
+        self.bytes_received += len(out)
+        return out
+
+    def close(self) -> None:
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self.sock.close()
+
+    def __enter__(self) -> "TCPChannel":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class FrameServer:
+    """Threaded TCP frame server feeding an ``EnginePool``.
+
+    One accept thread; one daemon thread per connection, each owning a
+    ``_Session`` (tenant + negotiated dtype are connection-scoped). ``port=0``
+    binds an ephemeral port (``self.port`` is the bound one). Use as a
+    context manager or call ``start()``/``stop()``.
+    """
+
+    def __init__(self, pool, *, host: str = "127.0.0.1", port: int = 0,
+                 conn_timeout_s: float = 120.0, **dispatcher_kwargs):
+        self.dispatcher = WireDispatcher(pool, **dispatcher_kwargs)
+        # Per-connection idle budget: generous, because a client may spend
+        # tens of seconds of *local* jax compile time between two frames of
+        # one session (the e2e clients are whole processes on a shared CPU).
+        self.conn_timeout_s = conn_timeout_s
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(32)
+        self.host, self.port = self._listener.getsockname()[:2]
+        self._accept_thread: threading.Thread | None = None
+        self._stop = threading.Event()
+        self._conn_lock = threading.Lock()
+        self._active = 0
+        self.connections_total = 0
+
+    @property
+    def active_connections(self) -> int:
+        with self._conn_lock:
+            return self._active
+
+    def start(self) -> "FrameServer":
+        if self._accept_thread is not None:
+            return self
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name=f"FrameServer-{self.port}",
+            daemon=True)
+        self._accept_thread.start()
+        return self
+
+    def _accept_loop(self) -> None:
+        self._listener.settimeout(0.1)
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            with self._conn_lock:
+                self._active += 1
+                self.connections_total += 1
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True).start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        session = self.dispatcher.session()
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        conn.settimeout(self.conn_timeout_s)
+        try:
+            while not self._stop.is_set():
+                try:
+                    data = read_frame(conn)
+                except (ConnectionError, OSError, socket.timeout):
+                    break
+                except wire.WireError as e:
+                    # The stream cannot be re-synchronized past a corrupt
+                    # header: report the typed error, then hang up. Counted
+                    # like any other rejected frame (handled + rejected +
+                    # reply bytes) so the dispatcher summary stays
+                    # consistent with what clients observed.
+                    self.dispatcher._count(frames_handled=1,
+                                           frames_rejected=1)
+                    ack = wire.encode_frame(_bounded_ack(wire.AckFrame(
+                        False, f"{type(e).__name__}: {e}")))
+                    self.dispatcher._count(bytes_out=len(ack))
+                    try:
+                        conn.sendall(ack)
+                    except OSError:
+                        pass
+                    break
+                try:
+                    conn.sendall(session.handle(data))
+                except OSError:
+                    break
+        finally:
+            try:
+                conn.close()
+            finally:
+                with self._conn_lock:
+                    self._active -= 1
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5.0)
+            self._accept_thread = None
+
+    def __enter__(self) -> "FrameServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+# -- client ------------------------------------------------------------------
+
+class FrameClient:
+    """One federated participant over any request/reply channel.
+
+    Tracks bytes per direction AND per role: ``bytes_uploaded`` counts only
+    the statistic-bearing frames (STATS / PROJ / DELTA) — the quantity Thm 4
+    budgets — while ``bytes_sent``/``bytes_received`` include the control
+    plane (HELLO, CONTROL, SOLVE) and downloads.
+    """
+
+    def __init__(self, channel):
+        self.channel = channel
+        self.dtype = "f32"
+        self.tenant = "default"
+        self.bytes_uploaded = 0
+        self.frames_sent = 0
+
+    # -- protocol ------------------------------------------------------------
+
+    def hello(self, tenant: str = "default",
+              offers: Sequence[str] = ("f32",)) -> str:
+        """Open the session: bind the tenant, negotiate the wire dtype."""
+        reply = self._roundtrip(wire.Hello(tenant, tuple(offers)))
+        if not isinstance(reply, wire.Hello) or len(reply.offers) != 1:
+            raise TransportError(f"bad HELLO reply: {reply}")
+        chosen = reply.offers[0]
+        if chosen not in offers:
+            raise TransportError(
+                f"server chose {chosen!r}, not among offers {tuple(offers)}")
+        self.tenant, self.dtype = reply.tenant, chosen
+        return chosen
+
+    def upload_stats(self, stats, client_id: str = "") -> wire.AckFrame:
+        """Thm-4 upload of one client's ``SuffStats`` (packed triangle)."""
+        frame = wire.StatsFrame.from_stats(stats, client_id=client_id)
+        return self._expect_ack(frame, upload=True)
+
+    def upload_packed(self, packed, client_id: str = "") -> wire.AckFrame:
+        """Thm-4 upload of an already-packed ``fed.PackedStats``."""
+        frame = wire.StatsFrame.from_packed(packed, client_id=client_id)
+        return self._expect_ack(frame, upload=True)
+
+    def upload_projected(self, packed, *, d_orig: int, seed: int, rhash: int,
+                         client_id: str = "") -> wire.AckFrame:
+        """§IV-F upload: m-dim packed stats plus the sketch's identity."""
+        frame = wire.ProjectedFrame(
+            tri=np.asarray(packed.tri), moment=np.asarray(packed.moment),
+            count=int(packed.count), dim=int(packed.dim), d_orig=d_orig,
+            seed=seed, rhash=rhash, client_id=client_id)
+        return self._expect_ack(frame, upload=True)
+
+    def stream_rows(self, A, b, client_id: str = "") -> wire.AckFrame:
+        """§VI-C delta: ship a raw row batch."""
+        frame = wire.DeltaRowsFrame(A=np.asarray(A), b=np.asarray(b),
+                                    client_id=client_id)
+        return self._expect_ack(frame, upload=True)
+
+    def control(self, op: str, client_id: str) -> wire.AckFrame:
+        """Thm-8 control: ``op`` is "drop" or "restore"."""
+        return self._expect_ack(wire.ControlFrame(op, client_id))
+
+    def solve(self, sigma: float) -> np.ndarray:
+        """Phase-3 query: the fused ridge weights at ``sigma``."""
+        reply = self._roundtrip(wire.SolveFrame(float(sigma)))
+        if isinstance(reply, wire.AckFrame):
+            raise TransportError(f"solve rejected: {reply.message}")
+        if not isinstance(reply, wire.WeightsFrame):
+            raise TransportError(f"bad SOLVE reply: {type(reply).__name__}")
+        return reply.w
+
+    def close(self) -> None:
+        self.channel.close()
+
+    @property
+    def bytes_sent(self) -> int:
+        return self.channel.bytes_sent
+
+    @property
+    def bytes_received(self) -> int:
+        return self.channel.bytes_received
+
+    # -- plumbing ------------------------------------------------------------
+
+    def _roundtrip(self, frame, *, upload: bool = False):
+        data = wire.encode_frame(frame, dtype=self.dtype)
+        if upload:
+            self.bytes_uploaded += len(data)
+        self.frames_sent += 1
+        return wire.decode_frame(self.channel.request(data))
+
+    def _expect_ack(self, frame, *, upload: bool = False) -> wire.AckFrame:
+        reply = self._roundtrip(frame, upload=upload)
+        if not isinstance(reply, wire.AckFrame):
+            raise TransportError(f"expected ACK, got {type(reply).__name__}")
+        if not reply.ok:
+            raise TransportError(f"rejected: {reply.message}")
+        return reply

@@ -1,0 +1,654 @@
+"""Versioned binary wire protocol for one-shot uploads (the Theorem-4 bytes).
+
+Until statistics cross a process boundary as *bytes*, the paper's whole
+communication story (Thm 4's d(d+1)/2 + d floats, §IV-F's O(m^2) projected
+payloads, the one-shot-vs-FedAvg ledger) is an in-memory fiction. This module
+is the byte layer: a fixed little-endian frame codec with strict validation,
+so two processes that only share this file agree bit-for-bit on what an
+upload means.
+
+Frame layout (all integers little-endian)::
+
+    offset  size  field
+    ------  ----  -----------------------------------------------
+    0       4     magic  b"OSRR"
+    4       1     protocol version (currently 1)
+    5       1     frame type (FT_*)
+    6       1     dtype tag (DT_*; scalar encoding of array fields)
+    7       1     flags (reserved, must be 0)
+    8       4     payload length N (u32)
+    12      N     payload (frame-type specific, see the frame classes)
+    12+N    4     CRC32 of bytes [0, 12+N)
+
+Frame types:
+
+======================  ====  ==================================================
+frame                   type  paper surface
+======================  ====  ==================================================
+:class:`Hello`          0x01  session open: tenant + client dtype offer; the
+                              server replies with the one dtype its policy picks
+:class:`StatsFrame`     0x02  Thm-4 upload: packed lower-triangular Gram + moment
+:class:`ProjectedFrame` 0x03  §IV-F sketched upload: m-dim stats + (R-seed, R-hash)
+:class:`DeltaRowsFrame` 0x04  §VI-C streaming delta: a batch of raw rows
+:class:`ControlFrame`   0x05  Thm-8 control plane: client drop / rejoin
+:class:`SolveFrame`     0x06  Phase-3 query: weights at sigma
+:class:`WeightsFrame`   0x07  server download: the fused ridge solution
+:class:`AckFrame`       0x08  server status reply
+======================  ====  ==================================================
+
+Dtype negotiation: a client *offers* a set of scalar encodings (f32 / f64 /
+bf16) in its HELLO; the server picks one by policy (:func:`negotiate`) and
+every array field on that session is encoded with it. :func:`decode_frame`
+upcasts deterministically (bf16 -> f32, f32/f64 identity); server-side
+fusion is then bit-exact with respect to the dtype-quantized statistics
+that were actually on the wire whenever the negotiated dtype embeds in the
+server's container dtype — bf16 and f32 on the default float32 container,
+all three under ``jax_enable_x64``. The server's default policy
+(``transport.default_dtype_preference``) therefore never *prefers* a wire
+dtype wider than its container (an f64 session against an f32 container is
+only negotiated for f64-only clients, and is truncated at admission).
+WEIGHTS downloads are encoded at the solve's own dtype, not the session's.
+
+Validation is strict and *typed*: truncated, corrupt, inconsistent, or alien
+bytes raise a :class:`WireError` subclass — never a crash, never a silent
+mis-decode (the CRC covers header + payload, and every variable-size field is
+bounds-checked before it is read). The fuzz suite in tests/test_wire.py pins
+this contract.
+
+The triangular pack codec itself is shared with the in-process path
+(``kernels.ops.pack_lower`` / ``unpack_lower`` via ``fed.PackedStats``);
+this module only moves the packed representation, it never re-derives it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+import zlib
+
+import numpy as np
+
+from repro.kernels.ops import tri_dim, tri_len
+
+try:  # jax's own scalar-types package; bf16 has no numpy-native codec
+    import ml_dtypes
+
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - ml_dtypes ships with jax
+    _BF16 = None
+
+MAGIC = b"OSRR"
+VERSION = 1
+_HEADER = struct.Struct("<4sBBBBI")
+HEADER_BYTES = _HEADER.size          # 12
+TRAILER_BYTES = 4                    # CRC32
+OVERHEAD_BYTES = HEADER_BYTES + TRAILER_BYTES
+MAX_PAYLOAD_BYTES = 1 << 28          # reject length-prefix lies before allocating
+MAX_DIM = 1 << 20
+MAX_ROWS = 1 << 24
+# The in-process containers carry counts as int32 (SuffStats.count); a wire
+# count the server could not represent is a typed rejection, not an overflow
+# deep inside admission.
+MAX_COUNT = 2**31 - 1
+
+FT_HELLO, FT_STATS, FT_PROJ, FT_DELTA = 0x01, 0x02, 0x03, 0x04
+FT_CONTROL, FT_SOLVE, FT_WEIGHTS, FT_ACK = 0x05, 0x06, 0x07, 0x08
+
+# -- dtype registry ----------------------------------------------------------
+
+DTYPE_TAGS = {"f32": 1, "f64": 2, "bf16": 3}
+_TAG_NAMES = {v: k for k, v in DTYPE_TAGS.items()}
+_WIRE_NP = {"f32": np.dtype("<f4"), "f64": np.dtype("<f8")}
+if _BF16 is not None:
+    _WIRE_NP["bf16"] = _BF16
+# Deterministic decode upcast: bf16 embeds exactly in f32, so fusing decoded
+# uploads in f32 is bit-exact w.r.t. the quantized bytes on the wire.
+DECODES_TO = {"f32": "f32", "f64": "f64", "bf16": "f32"}
+# Server-side negotiation default: widest common precision wins.
+DEFAULT_PREFERENCE = ("f64", "f32", "bf16")
+
+
+def dtype_name(dt) -> str:
+    """Wire name for a numpy/jax dtype; WireError if it has no wire encoding."""
+    dt = np.dtype(dt)
+    for name, wdt in _WIRE_NP.items():
+        if dt == wdt:
+            return name
+    raise BadDtype(f"dtype {dt} has no wire encoding "
+                   f"(supported: {sorted(_WIRE_NP)})")
+
+
+def wire_itemsize(name: str) -> int:
+    if name not in _WIRE_NP:
+        raise BadDtype(f"unknown wire dtype {name!r}")
+    return _WIRE_NP[name].itemsize
+
+
+def negotiate(offers, *, preference=DEFAULT_PREFERENCE) -> str:
+    """Server dtype policy: the first *preferred* dtype the client offered.
+
+    Unknown offer names are ignored (a newer client may offer encodings this
+    version does not know); an empty intersection is a typed failure.
+    """
+    offered = {o for o in offers if o in _WIRE_NP}
+    for name in preference:
+        if name in offered:
+            return name
+    raise NegotiationError(
+        f"no common dtype: client offered {tuple(offers)}, "
+        f"server accepts {tuple(preference)}")
+
+
+# -- typed errors ------------------------------------------------------------
+
+class WireError(ValueError):
+    """Base for every frame-level rejection (always typed, never a crash)."""
+
+
+class TruncatedFrame(WireError):
+    """Fewer bytes than the header/declared length requires."""
+
+
+class BadMagic(WireError):
+    """Alien bytes: the magic prefix is wrong."""
+
+
+class BadVersion(WireError):
+    """Unsupported protocol version."""
+
+
+class BadFrameType(WireError):
+    """Unknown frame-type byte."""
+
+
+class BadDtype(WireError):
+    """Unknown or unsupported dtype tag."""
+
+
+class BadLength(WireError):
+    """Length prefix lies: over-long, over-cap, or trailing bytes."""
+
+
+class ChecksumMismatch(WireError):
+    """CRC32 over header+payload does not match the trailer."""
+
+
+class PayloadError(WireError):
+    """Payload fields are internally inconsistent (d/m/n, bounds, reserved)."""
+
+
+class NegotiationError(WireError):
+    """Client offer and server policy share no dtype."""
+
+
+# -- frame classes -----------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Hello:
+    """Session open (client->server) / dtype choice (server->client).
+
+    Payload: u8 n_offers, n_offers dtype tags, u16 tenant_len, tenant utf-8.
+    The server's reply is a Hello whose single offer is the negotiated dtype.
+    """
+
+    tenant: str = "default"
+    offers: tuple[str, ...] = ("f32",)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class StatsFrame:
+    """Thm-4 upload: the packed d(d+1)/2 Gram triangle + d-float moment.
+
+    Payload: u32 d, u64 count, u16 id_len, client id utf-8,
+    tri (d(d+1)/2 scalars), moment (d scalars).
+    """
+
+    tri: np.ndarray
+    moment: np.ndarray
+    count: int
+    dim: int
+    client_id: str = ""
+    wire_dtype: str = "f32"
+
+    @classmethod
+    def from_packed(cls, packed, client_id: str = "") -> "StatsFrame":
+        """From a ``fed.PackedStats`` (or anything shaped like one)."""
+        tri = np.asarray(packed.tri)
+        try:
+            tri_d = tri_dim(tri.size)
+        except ValueError as e:
+            raise PayloadError(str(e)) from None
+        if tri_d != int(packed.dim):
+            raise PayloadError(f"packed triangle has {tri.size} scalars "
+                               f"(d={tri_d}), payload declares "
+                               f"d={int(packed.dim)}")
+        return cls(tri=tri, moment=np.asarray(packed.moment),
+                   count=int(packed.count), dim=int(packed.dim),
+                   client_id=client_id, wire_dtype=dtype_name(tri.dtype)
+                   if tri.dtype in set(_WIRE_NP.values()) else "f32")
+
+    @classmethod
+    def from_stats(cls, stats, client_id: str = "") -> "StatsFrame":
+        """From a ``SuffStats`` via the shared triangular pack codec."""
+        from repro.fed.protocol import PackedStats
+
+        return cls.from_packed(PackedStats.pack(stats), client_id=client_id)
+
+    def to_packed(self):
+        """Back into the in-process Thm-4 container (``fed.PackedStats``)."""
+        import jax.numpy as jnp
+
+        from repro.fed.protocol import PackedStats
+
+        return PackedStats(tri=jnp.asarray(self.tri),
+                           moment=jnp.asarray(self.moment),
+                           count=jnp.asarray(self.count, jnp.int32),
+                           dim=self.dim)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ProjectedFrame:
+    """§IV-F sketched upload: m-dim stats plus the sketch's identity.
+
+    Payload: u32 m, u32 d_orig, u64 seed, u64 rhash, u64 count,
+    u16 id_len, client id utf-8, tri (m(m+1)/2 scalars), moment (m scalars).
+
+    ``seed`` regenerates the shared R on the server (seed sharing is the
+    paper's O(1) alternative to shipping R); ``rhash`` fingerprints the
+    actual R bytes so two clients that *think* they share a sketch but do
+    not (version skew, wrong seed) are rejected instead of silently fused.
+    """
+
+    tri: np.ndarray
+    moment: np.ndarray
+    count: int
+    dim: int                 # m, the sketch dimension
+    d_orig: int              # original feature dimension (for the lift)
+    seed: int
+    rhash: int
+    client_id: str = ""
+    wire_dtype: str = "f32"
+
+    def to_packed(self):
+        import jax.numpy as jnp
+
+        from repro.fed.protocol import PackedStats
+
+        return PackedStats(tri=jnp.asarray(self.tri),
+                           moment=jnp.asarray(self.moment),
+                           count=jnp.asarray(self.count, jnp.int32),
+                           dim=self.dim)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DeltaRowsFrame:
+    """§VI-C streaming delta: a raw row batch (the rows ARE update vectors).
+
+    Payload: u32 n, u32 d, u16 id_len, client id utf-8, A (n*d row-major
+    scalars), b (n scalars).
+    """
+
+    A: np.ndarray
+    b: np.ndarray
+    client_id: str = ""
+    wire_dtype: str = "f32"
+
+
+_CONTROL_OPS = {"drop": 1, "restore": 2}
+_CONTROL_NAMES = {v: k for k, v in _CONTROL_OPS.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlFrame:
+    """Thm-8 control plane: drop or rejoin one client's contribution.
+
+    Payload: u8 op (1=drop, 2=restore), u16 id_len, client id utf-8.
+    """
+
+    op: str
+    client_id: str
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveFrame:
+    """Phase-3 query: the fused ridge solution at sigma. Payload: f64 sigma."""
+
+    sigma: float
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class WeightsFrame:
+    """Server download: w_sigma (d scalars). Payload: u32 d, f64 sigma, w."""
+
+    w: np.ndarray
+    sigma: float
+    wire_dtype: str = "f32"
+
+
+@dataclasses.dataclass(frozen=True)
+class AckFrame:
+    """Status reply. Payload: u8 ok, u16 msg_len, message utf-8."""
+
+    ok: bool
+    message: str = ""
+
+
+Frame = (Hello | StatsFrame | ProjectedFrame | DeltaRowsFrame | ControlFrame
+         | SolveFrame | WeightsFrame | AckFrame)
+
+_FRAME_TYPES = {
+    Hello: FT_HELLO, StatsFrame: FT_STATS, ProjectedFrame: FT_PROJ,
+    DeltaRowsFrame: FT_DELTA, ControlFrame: FT_CONTROL, SolveFrame: FT_SOLVE,
+    WeightsFrame: FT_WEIGHTS, AckFrame: FT_ACK,
+}
+
+
+# -- encode ------------------------------------------------------------------
+
+def _offer_tag(name: str) -> int:
+    """Offer name -> wire tag; round-trips the ``unknown:N`` names decode
+    gives to tags this version does not speak (forward compatibility)."""
+    if name in DTYPE_TAGS:
+        return DTYPE_TAGS[name]
+    if name.startswith("unknown:"):
+        try:
+            tag = int(name[len("unknown:"):])
+        except ValueError:
+            tag = 0
+        if 0 < tag <= 0xFF and tag not in _TAG_NAMES:
+            return tag
+    raise PayloadError(f"un-encodable dtype offer {name!r}")
+
+
+def _enc_str(s: str) -> bytes:
+    b = s.encode("utf-8")
+    if len(b) > 0xFFFF:
+        raise PayloadError(f"string field too long ({len(b)} bytes)")
+    return struct.pack("<H", len(b)) + b
+
+
+def _enc_array(x, name: str, *, expect: int) -> bytes:
+    arr = np.ascontiguousarray(np.asarray(x), dtype=_WIRE_NP[name])
+    if arr.size != expect:
+        raise PayloadError(f"array has {arr.size} scalars, layout needs {expect}")
+    return arr.tobytes()
+
+
+def encode_frame(frame: Frame, *, dtype: str | None = None) -> bytes:
+    """Serialize one frame. ``dtype`` overrides the scalar encoding of array
+    fields (the negotiated session dtype); scalars are cast exactly once here.
+    """
+    name = dtype or getattr(frame, "wire_dtype", None) or "f32"
+    if name not in _WIRE_NP:
+        raise BadDtype(f"unknown wire dtype {name!r}")
+
+    if isinstance(frame, Hello):
+        tags = bytes(_offer_tag(o) for o in frame.offers)
+        if not tags:
+            raise PayloadError("HELLO must offer at least one dtype")
+        payload = struct.pack("<B", len(tags)) + tags + _enc_str(frame.tenant)
+    elif isinstance(frame, StatsFrame):
+        d = frame.dim
+        _check_count(frame.count)
+        payload = (struct.pack("<IQ", d, frame.count)
+                   + _enc_str(frame.client_id)
+                   + _enc_array(frame.tri, name, expect=tri_len(d))
+                   + _enc_array(frame.moment, name, expect=d))
+    elif isinstance(frame, ProjectedFrame):
+        m = frame.dim
+        if not 0 < m <= frame.d_orig:
+            raise PayloadError(f"need 0 < m <= d_orig, got m={m}, "
+                               f"d_orig={frame.d_orig}")
+        _check_count(frame.count)
+        payload = (struct.pack("<IIQQQ", m, frame.d_orig, frame.seed,
+                               frame.rhash, frame.count)
+                   + _enc_str(frame.client_id)
+                   + _enc_array(frame.tri, name, expect=tri_len(m))
+                   + _enc_array(frame.moment, name, expect=m))
+    elif isinstance(frame, DeltaRowsFrame):
+        A = np.asarray(frame.A)
+        if A.ndim != 2:
+            raise PayloadError(f"delta rows must be 2-D, got shape {A.shape}")
+        n, d = A.shape
+        payload = (struct.pack("<II", n, d) + _enc_str(frame.client_id)
+                   + _enc_array(A, name, expect=n * d)
+                   + _enc_array(frame.b, name, expect=n))
+    elif isinstance(frame, ControlFrame):
+        if frame.op not in _CONTROL_OPS:
+            raise PayloadError(f"unknown control op {frame.op!r}")
+        payload = (struct.pack("<B", _CONTROL_OPS[frame.op])
+                   + _enc_str(frame.client_id))
+    elif isinstance(frame, SolveFrame):
+        sigma = float(frame.sigma)
+        if not (np.isfinite(sigma) and sigma > 0.0):
+            raise PayloadError(f"sigma must be finite and > 0, got {sigma}")
+        payload = struct.pack("<d", sigma)
+    elif isinstance(frame, WeightsFrame):
+        w = np.asarray(frame.w)
+        payload = (struct.pack("<Id", w.size, float(frame.sigma))
+                   + _enc_array(w, name, expect=w.size))
+    elif isinstance(frame, AckFrame):
+        payload = struct.pack("<B", 1 if frame.ok else 0) + _enc_str(frame.message)
+    else:
+        raise BadFrameType(f"cannot encode {type(frame).__name__}")
+
+    header = _HEADER.pack(MAGIC, VERSION, _FRAME_TYPES[type(frame)],
+                          DTYPE_TAGS[name], 0, len(payload))
+    body = header + payload
+    return body + struct.pack("<I", zlib.crc32(body) & 0xFFFFFFFF)
+
+
+# -- decode ------------------------------------------------------------------
+
+class _Cursor:
+    """Bounds-checked sequential reader over one frame's payload."""
+
+    def __init__(self, buf: bytes):
+        self.buf = buf
+        self.off = 0
+
+    def take(self, n: int) -> bytes:
+        if n < 0 or self.off + n > len(self.buf):
+            raise PayloadError(
+                f"payload overrun: need {n} bytes at offset {self.off}, "
+                f"have {len(self.buf)}")
+        out = self.buf[self.off:self.off + n]
+        self.off += n
+        return out
+
+    def unpack(self, fmt: str):
+        s = struct.Struct(fmt)
+        return s.unpack(self.take(s.size))
+
+    def string(self) -> str:
+        (n,) = self.unpack("<H")
+        try:
+            return self.take(n).decode("utf-8")
+        except UnicodeDecodeError as e:
+            raise PayloadError(f"invalid utf-8 in string field: {e}") from None
+
+    def array(self, name: str, count: int) -> np.ndarray:
+        wdt = _WIRE_NP[name]
+        raw = np.frombuffer(self.take(count * wdt.itemsize), dtype=wdt)
+        # Deterministic upcast to the decode dtype; always a fresh, writable,
+        # native-endian array (frombuffer views are read-only).
+        return raw.astype(_WIRE_NP[DECODES_TO[name]])
+
+    def done(self) -> None:
+        if self.off != len(self.buf):
+            raise PayloadError(
+                f"{len(self.buf) - self.off} trailing payload bytes")
+
+
+def _check_dim(d: int, what: str = "d") -> int:
+    if not 0 < d <= MAX_DIM:
+        raise PayloadError(f"{what}={d} out of range (1..{MAX_DIM})")
+    return d
+
+
+def _check_count(count: int) -> int:
+    if count > MAX_COUNT:
+        raise PayloadError(f"count={count} exceeds the int32 container "
+                           f"bound {MAX_COUNT}")
+    return count
+
+
+def frame_total_length(header: bytes) -> int:
+    """Total frame length from its 12-byte header (the transport read loop).
+
+    Validates just enough to trust the length field: magic, version, and the
+    payload-length cap. Full validation happens in :func:`decode_frame`.
+    """
+    if len(header) < HEADER_BYTES:
+        raise TruncatedFrame(
+            f"header needs {HEADER_BYTES} bytes, got {len(header)}")
+    magic, version, _, _, _, plen = _HEADER.unpack(header[:HEADER_BYTES])
+    if magic != MAGIC:
+        raise BadMagic(f"bad magic {magic!r}")
+    if version != VERSION:
+        raise BadVersion(f"unsupported version {version} (speak {VERSION})")
+    if plen > MAX_PAYLOAD_BYTES:
+        raise BadLength(f"payload length {plen} exceeds cap {MAX_PAYLOAD_BYTES}")
+    return HEADER_BYTES + plen + TRAILER_BYTES
+
+
+def decode_frame(buf: bytes) -> Frame:
+    """Parse and strictly validate exactly one frame.
+
+    Rejections are always a :class:`WireError` subclass; arbitrary input
+    bytes can never crash the decoder or yield a frame that does not
+    re-encode to the same bytes.
+    """
+    total = frame_total_length(buf)          # magic/version/length-cap checks
+    if len(buf) < total:
+        raise TruncatedFrame(f"frame declares {total} bytes, got {len(buf)}")
+    if len(buf) > total:
+        raise BadLength(f"{len(buf) - total} trailing bytes after frame")
+    _, _, ftype, dtag, flags, plen = _HEADER.unpack(buf[:HEADER_BYTES])
+    if flags != 0:
+        raise PayloadError(f"reserved flags byte must be 0, got {flags}")
+    (crc,) = struct.unpack("<I", buf[total - TRAILER_BYTES:total])
+    actual = zlib.crc32(buf[:total - TRAILER_BYTES]) & 0xFFFFFFFF
+    if crc != actual:
+        raise ChecksumMismatch(f"crc {crc:#010x} != computed {actual:#010x}")
+    if dtag not in _TAG_NAMES:
+        raise BadDtype(f"unknown dtype tag {dtag}")
+    name = _TAG_NAMES[dtag]
+    if name not in _WIRE_NP:  # pragma: no cover - bf16 absent without ml_dtypes
+        raise BadDtype(f"dtype {name!r} not supported by this build")
+    cur = _Cursor(buf[HEADER_BYTES:HEADER_BYTES + plen])
+
+    if ftype == FT_HELLO:
+        (n_offers,) = cur.unpack("<B")
+        if n_offers < 1:
+            raise PayloadError("HELLO must offer at least one dtype")
+        tags = cur.take(n_offers)
+        if len(set(tags)) != n_offers:
+            raise PayloadError(f"duplicate dtype offers {list(tags)}")
+        # Unknown tags are preserved (as "unknown:N"), not rejected: a newer
+        # client offering a future encoding alongside f32 must still be able
+        # to negotiate down — negotiate() skips names it cannot use, and
+        # re-encoding restores the original tag bytes.
+        offers = tuple(_TAG_NAMES.get(t, f"unknown:{t}") for t in tags)
+        frame: Frame = Hello(tenant=cur.string(), offers=offers)
+    elif ftype == FT_STATS:
+        d, count = cur.unpack("<IQ")
+        _check_dim(d)
+        _check_count(count)
+        cid = cur.string()
+        frame = StatsFrame(tri=cur.array(name, tri_len(d)),
+                           moment=cur.array(name, d), count=count, dim=d,
+                           client_id=cid, wire_dtype=name)
+    elif ftype == FT_PROJ:
+        m, d_orig, seed, rhash, count = cur.unpack("<IIQQQ")
+        _check_dim(m, "m")
+        _check_dim(d_orig, "d_orig")
+        _check_count(count)
+        if m > d_orig:
+            raise PayloadError(f"sketch m={m} > original d={d_orig}")
+        cid = cur.string()
+        frame = ProjectedFrame(tri=cur.array(name, tri_len(m)),
+                               moment=cur.array(name, m), count=count, dim=m,
+                               d_orig=d_orig, seed=seed, rhash=rhash,
+                               client_id=cid, wire_dtype=name)
+    elif ftype == FT_DELTA:
+        n, d = cur.unpack("<II")
+        if not 0 < n <= MAX_ROWS:
+            raise PayloadError(f"row count {n} out of range (1..{MAX_ROWS})")
+        _check_dim(d)
+        cid = cur.string()
+        frame = DeltaRowsFrame(A=cur.array(name, n * d).reshape(n, d),
+                               b=cur.array(name, n), client_id=cid,
+                               wire_dtype=name)
+    elif ftype == FT_CONTROL:
+        (op,) = cur.unpack("<B")
+        if op not in _CONTROL_NAMES:
+            raise PayloadError(f"unknown control op {op}")
+        frame = ControlFrame(op=_CONTROL_NAMES[op], client_id=cur.string())
+    elif ftype == FT_SOLVE:
+        (sigma,) = cur.unpack("<d")
+        if not (np.isfinite(sigma) and sigma > 0.0):
+            raise PayloadError(f"sigma must be finite and > 0, got {sigma}")
+        frame = SolveFrame(sigma=sigma)
+    elif ftype == FT_WEIGHTS:
+        d, sigma = cur.unpack("<Id")
+        _check_dim(d)
+        frame = WeightsFrame(w=cur.array(name, d), sigma=sigma,
+                             wire_dtype=name)
+    elif ftype == FT_ACK:
+        (ok,) = cur.unpack("<B")
+        if ok > 1:
+            raise PayloadError(f"ack status must be 0/1, got {ok}")
+        frame = AckFrame(ok=bool(ok), message=cur.string())
+    else:
+        raise BadFrameType(f"unknown frame type {ftype:#04x}")
+    cur.done()
+    return frame
+
+
+# -- analytic sizes (the ledger's measured-bytes column) ---------------------
+
+def stats_frame_nbytes(d: int, dtype: str = "f32", *, client_id: str = "") -> int:
+    """Exact encoded length of a Thm-4 STATS frame (header + payload + crc)."""
+    meta = 4 + 8 + 2 + len(client_id.encode("utf-8"))
+    return OVERHEAD_BYTES + meta + (tri_len(d) + d) * wire_itemsize(dtype)
+
+
+def projected_frame_nbytes(m: int, dtype: str = "f32", *,
+                           client_id: str = "") -> int:
+    """Exact encoded length of a §IV-F PROJ frame."""
+    meta = 4 + 4 + 8 + 8 + 8 + 2 + len(client_id.encode("utf-8"))
+    return OVERHEAD_BYTES + meta + (tri_len(m) + m) * wire_itemsize(dtype)
+
+
+def delta_frame_nbytes(n: int, d: int, dtype: str = "f32", *,
+                       client_id: str = "") -> int:
+    """Exact encoded length of a §VI-C DELTA frame."""
+    meta = 4 + 4 + 2 + len(client_id.encode("utf-8"))
+    return OVERHEAD_BYTES + meta + (n * d + n) * wire_itemsize(dtype)
+
+
+def encoded_nbytes(payload, *, frame: str = "tri",
+                   client_id: str = "") -> int:
+    """Encoded frame length a ``PackedStats``-shaped upload costs on the wire.
+
+    ``frame`` is "tri" (Thm-4 STATS) or "proj" (§IV-F). Raises
+    :class:`BadDtype` when the payload's dtype has no wire encoding.
+    """
+    name = dtype_name(np.asarray(payload.tri).dtype)
+    if frame == "tri":
+        return stats_frame_nbytes(payload.dim, name, client_id=client_id)
+    if frame == "proj":
+        return projected_frame_nbytes(payload.dim, name, client_id=client_id)
+    raise ValueError(f"frame must be 'tri' or 'proj', got {frame!r}")
+
+
+def projection_hash(R) -> int:
+    """Fingerprint of a §IV-F sketch: CRC32 of R's canonical f32 bytes.
+
+    Client and server each hash the R they derived from the shared seed; a
+    mismatch in a PROJ frame means the two sides do not actually share a
+    sketch (jax version skew, wrong seed) and the upload must be rejected —
+    fusing stats from different sketches is silent garbage.
+    """
+    arr = np.ascontiguousarray(np.asarray(R), dtype="<f4")
+    return zlib.crc32(arr.tobytes()) & 0xFFFFFFFF

@@ -13,6 +13,7 @@ already emits optimally on every backend.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
@@ -88,6 +89,25 @@ def _tril(d: int) -> tuple[np.ndarray, np.ndarray]:
     return _TRIL_IDX[d]
 
 
+def tri_len(d: int) -> int:
+    """Packed lower-triangle length for dimension d: d(d+1)/2 (Thm 4)."""
+    return d * (d + 1) // 2
+
+
+def tri_dim(length: int) -> int:
+    """Inverse of :func:`tri_len`; ValueError if no d satisfies d(d+1)/2 = L.
+
+    The wire codec uses this on the encode side
+    (``wire.StatsFrame.from_packed``) to cross-check a payload's declared
+    dimension against its packed-triangle length — an inconsistent pair is
+    a typed rejection before any bytes are produced.
+    """
+    d = (math.isqrt(8 * length + 1) - 1) // 2
+    if tri_len(d) != length:
+        raise ValueError(f"{length} is not a triangular length d(d+1)/2")
+    return d
+
+
 @jax.jit
 def pack_lower(G: jax.Array) -> jax.Array:
     """(d, d) symmetric -> (d(d+1)/2,) row-major lower triangle.
@@ -108,7 +128,7 @@ def unpack_lower(tri: jax.Array, d: int) -> jax.Array:
     triangle, then mirror the strict lower part — no arithmetic touches the
     stored values, so pack/unpack is bit-identical on the kept entries.
     """
-    if tri.shape[-1] != d * (d + 1) // 2:
+    if tri.shape[-1] != tri_len(d):
         raise ValueError(f"packed length {tri.shape[-1]} != d(d+1)/2 "
                          f"for d={d}")
     i, j = _tril(d)

@@ -1,0 +1,155 @@
+"""Wire-protocol client CLI: one federated participant as its own process.
+
+This is the paper's client loop with the process boundary made real: the
+client derives its shard of the shared synthetic dataset (same global seed
+every participant uses, then its own ``--client-index`` slice), computes its
+local sufficient statistics, negotiates a wire dtype with the server, and
+ships the Thm-4 packed upload (or the §IV-F projected variant, or §VI-C
+delta-row batches) over loopback/real TCP as actual bytes. Optionally it
+drives the Thm-8 control plane (drop/rejoin) and queries the fused solution.
+
+The final line on stdout is a single JSON report (negotiated dtype, byte
+counters per direction, and the served weights when ``--solve`` was given) so
+the subprocess e2e suite can pin everything the client saw against the
+server's ledger and a cold in-process reference.
+
+Usage (a 3-client federation against ``serve.py --mode fusion --listen``)::
+
+    python src/repro/launch/client.py --connect 127.0.0.1:7777 \
+        --tenant ridge --seed 0 --num-clients 3 --client-index 0 \
+        --samples 128 --dim 32 --offer f64,f32 --solve 0.1
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+
+def run_client(args: argparse.Namespace) -> dict:
+    from repro.core import projection
+    from repro.core.sufficient_stats import compute_stats
+    from repro.data import synthetic
+    from repro.fed import transport, wire
+    from repro.fed.protocol import PackedStats
+
+    # This client's shard of the shared dataset: every participant generates
+    # the same global dataset from --seed and keeps only its own client's
+    # rows (the e2e driver rebuilds the union in-process). Generated BEFORE
+    # the connection opens: local jax compilation can take tens of seconds
+    # on a loaded host and must not count against the server's idle timeout.
+    ds = synthetic.generate(jax.random.PRNGKey(args.seed),
+                            num_clients=args.num_clients,
+                            samples_per_client=args.samples,
+                            dim=args.dim)
+    A, b = ds.clients[args.client_index]
+
+    host, _, port = args.connect.rpartition(":")
+    channel = transport.TCPChannel(host or "127.0.0.1", int(port),
+                                   timeout_s=args.timeout)
+    client = transport.FrameClient(channel)
+    report: dict = {"tenant": args.tenant, "client_id": args.client_id,
+                    "client_index": args.client_index}
+    try:
+        offers = tuple(args.offer.split(","))
+        report["negotiated_dtype"] = client.hello(args.tenant, offers)
+
+        if args.projected:
+            m = args.projected
+            R = projection.make_projection(
+                jax.random.PRNGKey(args.proj_seed), args.dim, m)
+            packed = PackedStats.pack(projection.projected_stats(A, b, R))
+            client.upload_projected(packed, d_orig=args.dim,
+                                    seed=args.proj_seed,
+                                    rhash=wire.projection_hash(R),
+                                    client_id=args.client_id)
+            report["uploaded"] = {"frame": "proj", "m": m,
+                                  "proj_seed": args.proj_seed}
+        elif args.delta_batches:
+            # §VI-C: the same rows, shipped as raw delta batches instead of
+            # one packed statistic (Thm 1 makes the union identical).
+            n = A.shape[0]
+            bounds = np.linspace(0, n, args.delta_batches + 1, dtype=int)
+            for lo, hi in zip(bounds[:-1], bounds[1:]):
+                if hi > lo:
+                    client.stream_rows(A[lo:hi], b[lo:hi],
+                                       client_id=args.client_id)
+            report["uploaded"] = {"frame": "delta",
+                                  "batches": args.delta_batches, "rows": n}
+        else:
+            client.upload_stats(compute_stats(A, b),
+                                client_id=args.client_id)
+            report["uploaded"] = {"frame": "tri", "d": args.dim,
+                                  "count": int(A.shape[0])}
+
+        if args.control:
+            op, _, target = args.control.partition(":")
+            client.control(op, target or args.client_id)
+            report["control"] = {"op": op, "target": target or args.client_id}
+
+        if args.solve is not None:
+            w = client.solve(args.solve)
+            report["solve"] = {"sigma": args.solve,
+                               "weights": np.asarray(w, np.float64).tolist()}
+
+        report.update(bytes_uploaded=client.bytes_uploaded,
+                      bytes_sent=client.bytes_sent,
+                      bytes_received=client.bytes_received,
+                      frames_sent=client.frames_sent, ok=True)
+    finally:
+        client.close()
+    return report
+
+
+def make_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT",
+                    help="wire server address (serve.py --mode fusion "
+                         "--listen PORT)")
+    ap.add_argument("--tenant", default="default",
+                    help="tenant this session binds to at HELLO")
+    ap.add_argument("--client-id", default=None,
+                    help="client id carried in upload/control frames "
+                         "(default: client<index>)")
+    ap.add_argument("--offer", default="f32",
+                    help="comma list of wire dtypes to offer (f32,f64,bf16); "
+                         "the server's policy picks one")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="shared dataset seed (same for every participant)")
+    ap.add_argument("--num-clients", type=int, default=3)
+    ap.add_argument("--client-index", type=int, default=0,
+                    help="which client's shard this process owns")
+    ap.add_argument("--samples", type=int, default=128)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--projected", type=int, default=0, metavar="M",
+                    help="upload the §IV-F m-dim sketched statistics instead "
+                         "of the full Thm-4 payload")
+    ap.add_argument("--proj-seed", type=int, default=0,
+                    help="shared sketch seed (all projected clients must "
+                         "agree; the server verifies the R-hash)")
+    ap.add_argument("--delta-batches", type=int, default=0, metavar="N",
+                    help="ship the shard as N §VI-C delta-row frames instead "
+                         "of one packed statistic")
+    ap.add_argument("--control", default=None, metavar="OP[:CLIENT]",
+                    help="after uploading, send a Thm-8 control frame: "
+                         "'drop', 'restore', or 'drop:other_id'")
+    ap.add_argument("--solve", type=float, default=None, metavar="SIGMA",
+                    help="query the fused weights at SIGMA and report them")
+    ap.add_argument("--timeout", type=float, default=120.0,
+                    help="socket timeout awaiting each server reply (the "
+                         "server may be jit-compiling its first solve)")
+    return ap
+
+
+def main(argv=None) -> None:
+    args = make_parser().parse_args(argv)
+    if args.client_id is None:
+        args.client_id = f"client{args.client_index}"
+    report = run_client(args)
+    print(json.dumps(report))
+
+
+if __name__ == "__main__":
+    main()

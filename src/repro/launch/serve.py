@@ -1,6 +1,6 @@
 """Batched serving loops.
 
-Two modes:
+Modes:
   * ``model``  — prefill a batch of prompts, decode new tokens. The decode
     path is the same ``model.decode_step`` the dry-run lowers for
     decode_32k / long_500k; here it actually executes (reduced configs on
@@ -18,10 +18,19 @@ Two modes:
     background flusher is the only staleness clock, and the loop verifies
     every tenant's served weights still match its cold ``core.fusion``
     reference afterwards.
+  * ``fusion --listen PORT`` — the same pool behind the real wire: a
+    ``fed.transport.FrameServer`` accepts out-of-process clients
+    (``launch/client.py``) speaking the ``fed.wire`` binary protocol —
+    dtype-negotiated Thm-4 uploads, §IV-F projected payloads, §VI-C delta
+    streams, Thm-8 control, Phase-3 queries — and the final report prints
+    the ledger from *actual encoded frame lengths*. ``--expect-uploads N``
+    exits once N upload frames were admitted and every connection closed
+    (or at ``--serve-timeout``).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -242,6 +251,74 @@ def serve_fusion(*, num_clients: int = 4, samples_per_client: int = 128,
     }
 
 
+def serve_wire(*, port: int = 0, expect_uploads: int = 0,
+               timeout_s: float = 30.0, sigma: float = 0.1,
+               placement: str = "dense", coalesce_rank: int = 32,
+               flush_staleness_s: float = 0.05,
+               max_warm: int | None = None,
+               dtype_preference: tuple[str, ...] | None = None) -> dict:
+    """Run the out-of-process federation server: an ``EnginePool`` behind a
+    ``fed.transport.FrameServer`` speaking the ``fed.wire`` binary protocol.
+
+    Tenants are created lazily by the first upload frame that names them
+    (the HELLO's tenant binding); clients negotiate their wire dtype per
+    session. The loop exits once ``expect_uploads`` upload frames were
+    admitted AND every connection has closed — so an in-flight Phase-3 query
+    after the last upload still gets its WEIGHTS frame — or at ``timeout_s``.
+    The returned report carries the pool ledger measured from actual encoded
+    frame lengths plus a final server-side solve per tenant at ``sigma``.
+    """
+    from repro.fed import transport
+    from repro.server import CoalescerPolicy, EnginePool
+
+    policy = CoalescerPolicy(max_rank=coalesce_rank,
+                             max_staleness_s=flush_staleness_s)
+    kw = ({"dtype_preference": dtype_preference}
+          if dtype_preference is not None else {})
+    pool = EnginePool(max_warm=max_warm, default_coalesce=policy)
+    with pool, transport.FrameServer(pool, port=port, placement=placement,
+                                     **kw) as srv:
+        print(f"[serve_wire] listening on {srv.host}:{srv.port}", flush=True)
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            done = (expect_uploads
+                    and srv.dispatcher.uploads_admitted >= expect_uploads
+                    and srv.active_connections == 0)
+            if done:
+                break
+            time.sleep(0.02)
+        solves = {}
+        for name in pool.tenant_names:
+            # solve_lifted == what SOLVE frames served: the report's weights
+            # and the clients' WEIGHTS downloads can never diverge.
+            w = pool.solve_lifted(name, sigma)
+            solves[name] = np.asarray(jax.device_get(w), np.float64).tolist()
+        ledger = pool.ledger()
+        report = {
+            "port": srv.port,
+            "transport": srv.dispatcher.summary(),
+            "connections_total": srv.connections_total,
+            "tenants": list(pool.tenant_names),
+            "sigma": sigma,
+            "weights": solves,
+            "ledger": ledger,
+            "pool": pool.summary(),
+        }
+    tr = report["transport"]
+    print(f"[serve_wire] {tr['frames_handled']} frames "
+          f"({tr['uploads_admitted']} uploads admitted, "
+          f"{tr['frames_rejected']} rejected) over "
+          f"{report['connections_total']} connections")
+    print(f"[serve_wire] ledger: {ledger['wire_upload_bytes']} upload bytes "
+          f"+ {ledger['wire_download_bytes']} download bytes on the wire "
+          f"across {len(report['tenants'])} tenants")
+    for name, w in solves.items():
+        print(f"[serve_wire] tenant {name}: |w({sigma})| = "
+              f"{float(np.linalg.norm(w)):.6f}")
+    print(f"[serve_wire] report {json.dumps(report)}", flush=True)
+    return report
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["model", "fusion"], default="model")
@@ -275,7 +352,25 @@ def main() -> None:
                          "flusher enforces")
     ap.add_argument("--max-warm", type=int, default=None,
                     help="LRU bound on tenants with resident factor caches")
+    ap.add_argument("--listen", type=int, default=None, metavar="PORT",
+                    help="serve the fed.wire protocol over TCP instead of "
+                         "the in-process loop (0 = ephemeral port, printed)")
+    ap.add_argument("--expect-uploads", type=int, default=0,
+                    help="with --listen: exit once this many upload frames "
+                         "were admitted and all connections closed")
+    ap.add_argument("--serve-timeout", type=float, default=30.0,
+                    help="with --listen: hard deadline in seconds")
+    ap.add_argument("--sigma", type=float, default=0.1,
+                    help="with --listen: sigma of the final per-tenant "
+                         "report solve")
     args = ap.parse_args()
+    if args.mode == "fusion" and args.listen is not None:
+        serve_wire(port=args.listen, expect_uploads=args.expect_uploads,
+                   timeout_s=args.serve_timeout, sigma=args.sigma,
+                   coalesce_rank=args.coalesce_rank,
+                   flush_staleness_s=args.flush_staleness,
+                   max_warm=args.max_warm)
+        return
     if args.mode == "fusion":
         res = serve_fusion(dim=args.dim, tenants=args.tenants,
                            num_clients=args.clients,

@@ -68,6 +68,11 @@ class Tenant:
     last_used: float = dataclasses.field(default_factory=time.monotonic)
     comm: Any = None               # fed.comm.CommRecord from admission
     streamed_floats: int = 0       # §VI-C bytes ingested after admission
+    wire_frames: int = 0           # decoded wire frames admitted (fed.wire)
+    wire_upload_bytes: int = 0     # encoded bytes of admitted upload frames
+    wire_download_bytes: int = 0   # encoded bytes of replies (weights/acks)
+    projection: dict | None = None  # §IV-F sketch identity (seed/d_orig/m/rhash)
+    projection_matrix: Any = None  # the R rebuilt from the seed (solve cache)
     background_flushes: int = 0    # flushes driven by the pool's thread
     max_flush_age_s: float = 0.0   # oldest delta age ever seen at a drain
     factor_evictions: int = 0      # LRU evictions of this tenant's factors
@@ -84,6 +89,9 @@ class Tenant:
                 "placement": self.placement,
                 "backend": self.backend_name,
                 "streamed_floats": self.streamed_floats,
+                "wire_frames": self.wire_frames,
+                "wire_upload_bytes": self.wire_upload_bytes,
+                "wire_download_bytes": self.wire_download_bytes,
                 "background_flushes": self.background_flushes,
                 "max_flush_age_s": self.max_flush_age_s,
                 "factor_evictions": self.factor_evictions,
@@ -292,6 +300,9 @@ class EnginePool:
                 download_floats_per_client=base.download_floats_per_client,
                 num_clients=base.num_clients,
                 rounds=base.rounds,
+                upload_wire_bytes_per_client=base.upload_wire_bytes_per_client,
+                download_wire_bytes_per_client=(
+                    base.download_wire_bytes_per_client),
                 psum_floats_per_axis=fed_comm.sharded_oneshot_record(
                     dim, base.num_clients, axis_sizes).psum_floats_per_axis)
         return base
@@ -307,6 +318,181 @@ class EnginePool:
                 return True
         return False
 
+    # -- wire-frame admission (fed.wire / fed.transport) ----------------------
+
+    def admit_frame(self, name: str, frame, *, encoded_len: int = 0,
+                    placement: str = "dense"):
+        """Feed one decoded ``fed.wire`` frame into tenant ``name``.
+
+        This is the server half of the wire protocol: upload frames
+        (STATS / PROJ / DELTA) are ingested into the tenant's engine —
+        created lazily from the first frame's dimension with ``placement`` —
+        CONTROL frames drive Thm-8 drop/rejoin, and SOLVE queries return a
+        ``WeightsFrame`` (lifted through the tenant's §IV-F sketch when the
+        tenant was admitted from projected uploads). ``encoded_len`` is the
+        frame's actual on-wire byte length; the pool ledger accumulates it
+        for upload frames, so ``ledger()['wire_upload_bytes']`` is the sum
+        of real encoded frame lengths, not a float-count formula.
+
+        Returns the reply frame (``AckFrame`` or ``WeightsFrame``).
+        Protocol-level problems (dim mismatch, unknown tenant/client,
+        conflicting sketch) come back as ``AckFrame(ok=False)`` — the
+        session survives; only programming errors raise.
+        """
+        from repro.fed import wire
+
+        if isinstance(frame, wire.Hello):
+            raise TypeError("HELLO is a session frame; the transport "
+                            "negotiates it before admission")
+        try:
+            if isinstance(frame, (wire.StatsFrame, wire.ProjectedFrame)):
+                packed = frame.to_packed()
+                t = self._ensure_wire_tenant(name, packed.dim, placement)
+                # One lock acquisition spans guard AND ingest (RLock — the
+                # nested _locked re-acquire is free): a concurrent upload
+                # cannot flip the tenant's space between check and fuse.
+                with t.lock:
+                    if isinstance(frame, wire.ProjectedFrame):
+                        err = self._check_projection(t, frame)
+                    else:
+                        err = self._check_unsketched(t)
+                    if err is not None:
+                        return wire.AckFrame(False, err)
+                    cid = frame.client_id or None
+                    self._locked(name,
+                                 lambda e: e.ingest(packed.unpack(),
+                                                    client_id=cid),
+                                 wire_bytes=encoded_len)
+                return wire.AckFrame(True, f"ingested d={packed.dim} "
+                                           f"count={int(packed.count)}")
+            if isinstance(frame, wire.DeltaRowsFrame):
+                A = jnp.asarray(frame.A)
+                b = jnp.asarray(frame.b)
+                t = self._ensure_wire_tenant(name, A.shape[1], placement)
+                with t.lock:
+                    err = self._check_unsketched(t)
+                    if err is not None:
+                        return wire.AckFrame(False, err)
+                    cid = frame.client_id or None
+                    self._locked(name,
+                                 lambda e: e.ingest_rows(A, b, client_id=cid),
+                                 wire_bytes=encoded_len)
+                return wire.AckFrame(True, f"ingested {A.shape[0]} rows")
+            if isinstance(frame, wire.ControlFrame):
+                if name not in self:
+                    return wire.AckFrame(False, f"unknown tenant {name!r}")
+                op = (FusionEngine.drop if frame.op == "drop"
+                      else FusionEngine.restore)
+                self._locked(name, lambda e: op(e, frame.client_id))
+                return wire.AckFrame(True, f"{frame.op} {frame.client_id!r}")
+            if isinstance(frame, wire.SolveFrame):
+                if name not in self:
+                    return wire.AckFrame(False, f"unknown tenant {name!r}")
+                w = jax.device_get(self.solve_lifted(name, frame.sigma))
+                return wire.WeightsFrame(
+                    w=w, sigma=frame.sigma,
+                    wire_dtype=wire.dtype_name(w.dtype))
+        except KeyError as e:
+            return wire.AckFrame(False, f"unknown client {e.args[0]!r}")
+        except ValueError as e:
+            return wire.AckFrame(False, str(e))
+        raise TypeError(f"cannot admit frame type {type(frame).__name__}")
+
+    def record_wire_reply(self, name: str, nbytes: int) -> None:
+        """Account a reply frame's encoded bytes (the download direction)."""
+        with self._reg_lock:
+            t = self._tenants.get(name)
+        if t is not None:
+            with t.lock:
+                t.wire_download_bytes += nbytes
+
+    def _ensure_wire_tenant(self, name: str, dim: int,
+                            placement: str) -> Tenant:
+        with self._reg_lock:
+            t = self._tenants.get(name)
+        if t is None:
+            try:
+                self.create_tenant(name, dim=dim, placement=placement)
+            except ValueError as e:
+                if "already exists" not in str(e):   # lost a create/create race
+                    raise
+            t = self.tenant(name)
+        if t.engine.dim != dim:
+            raise ValueError(f"frame dim {dim} != tenant {name!r} dim "
+                             f"{t.engine.dim}")
+        return t
+
+    @staticmethod
+    def _check_unsketched(t: Tenant) -> str | None:
+        """A plain (Thm-4 / §VI-C) upload may not land on a sketched tenant:
+        m-dim statistics from different spaces fuse without a shape error and
+        serve silent garbage. Returns an error string (reject) or None."""
+        with t.lock:
+            if t.projection is not None:
+                return (f"tenant holds §IV-F sketched statistics "
+                        f"(seed={t.projection['seed']}); plain uploads "
+                        f"would silently mix spaces")
+        return None
+
+    def _check_projection(self, t: Tenant, frame) -> str | None:
+        """§IV-F sketch consistency: every projected upload for a tenant must
+        name the SAME (seed, d_orig, rhash) — and the rhash must match the R
+        the server rebuilds from the seed, or the two sides only believe
+        they share a sketch. A tenant already holding *unsketched* statistics
+        rejects projected uploads outright (the mirror of
+        :meth:`_check_unsketched`). Returns an error string or None."""
+        from repro.core import projection as proj_lib
+        from repro.fed import wire
+
+        with t.lock:
+            if t.projection is None:
+                if t.engine.client_ids or int(t.engine.backend.count) != 0:
+                    return ("tenant already holds unsketched statistics; "
+                            "a §IV-F upload would silently mix spaces")
+                R = proj_lib.make_projection(
+                    jax.random.PRNGKey(frame.seed), frame.d_orig, frame.dim)
+                server_hash = wire.projection_hash(R)
+                if server_hash != frame.rhash:
+                    return (f"projection hash mismatch: frame says "
+                            f"{frame.rhash:#010x}, server derived "
+                            f"{server_hash:#010x} from seed {frame.seed}")
+                t.projection = {"seed": frame.seed, "d_orig": frame.d_orig,
+                                "m": frame.dim, "rhash": frame.rhash}
+                t.projection_matrix = R
+                return None
+            p = t.projection
+            if (frame.seed, frame.d_orig, frame.rhash) != (
+                    p["seed"], p["d_orig"], p["rhash"]):
+                return (f"conflicting sketch: tenant fused seed={p['seed']} "
+                        f"d_orig={p['d_orig']}, frame has seed={frame.seed} "
+                        f"d_orig={frame.d_orig}")
+            return None
+
+    def _lift(self, t: Tenant, v: jax.Array) -> jax.Array:
+        """Prop 3 lift w~ = R v for a projected tenant's served weights.
+
+        R is cached on the tenant at admission (the sketch identity is
+        write-once), so the serving hot path never regenerates it.
+        """
+        from repro.core import projection as proj_lib
+
+        if t.projection_matrix is None:
+            p = t.projection
+            t.projection_matrix = proj_lib.make_projection(
+                jax.random.PRNGKey(p["seed"]), p["d_orig"], p["m"])
+        return proj_lib.lift(v, t.projection_matrix)
+
+    def solve_lifted(self, name: str, sigma: float) -> jax.Array:
+        """Phase-3 solve in the tenant's *serving* space: the fused solve,
+        lifted through the tenant's §IV-F sketch when it has one (Prop 3's
+        w~ = R v) — what a WEIGHTS frame carries. Identical to ``solve`` for
+        unsketched tenants."""
+        t = self.tenant(name)
+        w = self._locked(name, lambda e: e.solve(sigma), warms=True)
+        if t.projection is not None:
+            w = self._lift(t, w)
+        return w
+
     def drop_tenant(self, name: str) -> FusionEngine:
         """Remove a tenant entirely; returns its engine (caller may archive)."""
         with self._reg_lock:
@@ -317,7 +503,7 @@ class EnginePool:
     # -- locked per-tenant operations ----------------------------------------
 
     def _locked(self, name: str, fn: Callable[[FusionEngine], Any], *,
-                drains: bool = True, floats: int = 0,
+                drains: bool = True, floats: int = 0, wire_bytes: int = 0,
                 warms: bool = False) -> Any:
         t = self.tenant(name)
         with t.lock:
@@ -329,6 +515,9 @@ class EnginePool:
                     t.max_flush_age_s = max(t.max_flush_age_s, age)
             t.last_used = time.monotonic()
             t.streamed_floats += floats
+            if wire_bytes:
+                t.wire_frames += 1
+                t.wire_upload_bytes += wire_bytes
             out = fn(t.engine)
         if warms:
             self._maybe_evict()
@@ -526,19 +715,31 @@ class EnginePool:
 
     def ledger(self) -> dict:
         """Pool-level ``fed.comm`` rollup: admission uploads (measured where
-        payloads were given) plus streamed §VI-C bytes, per tenant and total."""
+        payloads were given), streamed §VI-C bytes, and — for tenants fed
+        through ``admit_frame`` — the actual encoded byte lengths of the wire
+        frames that moved (upload direction) and of the replies (download),
+        per tenant and total."""
         from repro.fed import comm as fed_comm
 
         snapshot = self._snapshot()
         out = fed_comm.aggregate_records(
             {t.name: t.comm for t in snapshot if t.comm is not None})
-        streamed = 0
+        streamed = wire_up = wire_down = 0
         for t in snapshot:
             entry = out["per_tenant"].setdefault(t.name, {})
             entry["streamed_bytes"] = t.streamed_floats * fed_comm.FLOAT_BYTES
             streamed += entry["streamed_bytes"]
+            if t.wire_frames:
+                entry["wire_frames"] = t.wire_frames
+                entry["wire_upload_bytes"] = t.wire_upload_bytes
+                entry["wire_download_bytes"] = t.wire_download_bytes
+            wire_up += t.wire_upload_bytes
+            wire_down += t.wire_download_bytes
         out["streamed_bytes"] = streamed
-        out["total_bytes"] = out["upload_download_bytes"] + streamed
+        out["wire_upload_bytes"] = wire_up
+        out["wire_download_bytes"] = wire_down
+        out["total_bytes"] = (out["upload_download_bytes"] + streamed
+                              + wire_up + wire_down)
         return out
 
     def summary(self) -> dict:

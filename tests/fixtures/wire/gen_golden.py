@@ -1,0 +1,149 @@
+"""Generate the golden wire-frame fixtures (run ONCE; the .bin files are
+checked in and tests/test_wire.py only ever reads them).
+
+    PYTHONPATH=src python tests/fixtures/wire/gen_golden.py
+
+Regenerating is an *intentional wire-format break*: if the codec still
+produces the same bytes the files do not change; if it produces different
+bytes you are changing the protocol version's layout and must bump
+``wire.VERSION`` instead. The fixture data is derived from a fixed numpy
+``default_rng`` stream (platform-stable), never from jax RNG, so the bytes
+are reproducible anywhere.
+
+``expected.json`` records, per fixture: the frame's sha256, the decoded
+scalar fields, sha256 digests of the decoded arrays' canonical f64 bytes,
+and — for statistic-bearing frames — the fused ridge reference solve
+(float64 numpy, sigma = 0.5) the decode must reproduce.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[3] / "src"))
+
+from repro.fed import wire  # noqa: E402
+
+HERE = pathlib.Path(__file__).resolve().parent
+SIGMA = 0.5
+D = 6          # Thm-4 fixture dimension
+M, D_ORIG = 4, 10   # §IV-F sketch: m=4 of d=10
+PROJ_SEED = 7
+
+
+def _sha(b: bytes) -> str:
+    return hashlib.sha256(b).hexdigest()
+
+
+def _arr_digest(a: np.ndarray) -> str:
+    return _sha(np.ascontiguousarray(a, dtype="<f8").tobytes())
+
+
+def _spd_stats(rng: np.random.Generator, d: int, n: int):
+    A = rng.standard_normal((n, d))
+    b = rng.standard_normal(n)
+    return A.T @ A, A.T @ b, n
+
+
+def _tri(G: np.ndarray) -> np.ndarray:
+    return G[np.tril_indices(G.shape[0])]
+
+
+def _unpack(tri: np.ndarray, d: int) -> np.ndarray:
+    low = np.zeros((d, d))
+    low[np.tril_indices(d)] = tri
+    return low + np.tril(low, -1).T
+
+
+def _ridge(G: np.ndarray, h: np.ndarray, sigma: float) -> np.ndarray:
+    return np.linalg.solve(G + sigma * np.eye(G.shape[0]), h)
+
+
+def main() -> None:
+    rng = np.random.default_rng(20260730)
+    expected: dict[str, dict] = {}
+
+    def emit(name: str, frame, *, dtype: str, extra: dict | None = None):
+        data = wire.encode_frame(frame, dtype=dtype)
+        (HERE / f"{name}.bin").write_bytes(data)
+        decoded = wire.decode_frame(data)
+        entry: dict = {"sha256": _sha(data), "nbytes": len(data),
+                       "frame_type": type(decoded).__name__,
+                       "wire_dtype": dtype}
+        for field in ("dim", "count", "client_id", "d_orig", "seed", "rhash",
+                      "sigma", "op", "ok", "message", "tenant", "offers"):
+            if hasattr(decoded, field):
+                v = getattr(decoded, field)
+                entry[field] = list(v) if isinstance(v, tuple) else v
+        for field in ("tri", "moment", "A", "b", "w"):
+            if hasattr(decoded, field):
+                entry[f"{field}_sha256"] = _arr_digest(getattr(decoded, field))
+        if extra:
+            entry.update(extra)
+        expected[name] = entry
+
+    # --- Thm-4 STATS x {f32, f64, bf16} -------------------------------------
+    G, h, n = _spd_stats(rng, D, 16)
+    for dt in ("f32", "f64", "bf16"):
+        frame = wire.StatsFrame(tri=_tri(G), moment=h, count=n, dim=D,
+                                client_id="golden", wire_dtype=dt)
+        # The reference solve fuses exactly what the DECODE of this frame
+        # yields (i.e. after the dtype's quantization + deterministic upcast).
+        dec = wire.decode_frame(wire.encode_frame(frame, dtype=dt))
+        w = _ridge(_unpack(dec.tri.astype("<f8"), D), dec.moment.astype("<f8"),
+                   SIGMA)
+        emit(f"stats_{dt}", frame, dtype=dt,
+             extra={"sigma_ref": SIGMA, "weights_ref": w.tolist()})
+
+    # --- §IV-F PROJ x {f32, bf16} -------------------------------------------
+    Gp, hp, np_ = _spd_stats(rng, M, 12)
+    # rhash is part of the *fixture*: a stand-in sketch fingerprint (the
+    # layout gate cares that the u64 survives, not that R exists here).
+    for dt in ("f32", "bf16"):
+        frame = wire.ProjectedFrame(tri=_tri(Gp), moment=hp, count=np_,
+                                    dim=M, d_orig=D_ORIG, seed=PROJ_SEED,
+                                    rhash=0xDEADBEEF, client_id="sketchy",
+                                    wire_dtype=dt)
+        dec = wire.decode_frame(wire.encode_frame(frame, dtype=dt))
+        w = _ridge(_unpack(dec.tri.astype("<f8"), M), dec.moment.astype("<f8"),
+                   SIGMA)
+        emit(f"proj_{dt}", frame, dtype=dt,
+             extra={"sigma_ref": SIGMA, "weights_ref": w.tolist()})
+
+    # --- §VI-C DELTA x {f32, f64} -------------------------------------------
+    A = rng.standard_normal((3, D))
+    b = rng.standard_normal(3)
+    for dt in ("f32", "f64"):
+        frame = wire.DeltaRowsFrame(A=A, b=b, client_id="streamer",
+                                    wire_dtype=dt)
+        dec = wire.decode_frame(wire.encode_frame(frame, dtype=dt))
+        Ad = dec.A.astype("<f8")
+        w = _ridge(Ad.T @ Ad, Ad.T @ dec.b.astype("<f8"), SIGMA)
+        emit(f"delta_{dt}", frame, dtype=dt,
+             extra={"sigma_ref": SIGMA, "weights_ref": w.tolist()})
+
+    # --- control plane / session frames -------------------------------------
+    emit("hello", wire.Hello("golden-tenant", ("f64", "f32", "bf16")),
+         dtype="f32")
+    emit("control_drop", wire.ControlFrame("drop", "golden"), dtype="f32")
+    emit("control_restore", wire.ControlFrame("restore", "golden"),
+         dtype="f32")
+    emit("solve", wire.SolveFrame(0.25), dtype="f32")
+    emit("weights_f32",
+         wire.WeightsFrame(w=rng.standard_normal(D), sigma=0.25,
+                           wire_dtype="f32"), dtype="f32")
+    emit("ack", wire.AckFrame(True, "ingested d=6 count=16"), dtype="f32")
+    emit("ack_error", wire.AckFrame(False, "ChecksumMismatch: crc"),
+         dtype="f32")
+
+    (HERE / "expected.json").write_text(json.dumps(expected, indent=1,
+                                                   sort_keys=True))
+    print(f"wrote {len(expected)} fixtures to {HERE}")
+
+
+if __name__ == "__main__":
+    main()

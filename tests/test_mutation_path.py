@@ -150,8 +150,15 @@ class TestPackedPayloads:
             ops.unpack_lower(jnp.zeros((7,)), 4)
 
     def test_measured_ledger_equals_thm4_formula(self):
-        """The measured record and the Thm 4 formula must never drift."""
+        """The measured record and the Thm 4 formula must never drift.
+
+        Float columns pin the analytic formula exactly; the byte column is
+        the *encoded frame length* (fed.wire header/CRC envelope + metadata
+        + scalars at the payload dtype), pinned against the codec's exact
+        size and lower-bounded by the Thm-4 analytic bytes.
+        """
         from repro import data
+        from repro.fed import wire
 
         d = 24
         dset = data.generate(jax.random.PRNGKey(0), num_clients=3,
@@ -160,7 +167,15 @@ class TestPackedPayloads:
         formula = fed.one_shot_comm(d, 3)
         assert res.comm.upload_floats_per_client == \
             formula.upload_floats_per_client == d * (d + 1) // 2 + d
-        assert res.comm.total_bytes == formula.total_bytes
+        # Analytic column: unchanged by framing (the paper-table number).
+        assert res.comm.analytic_total_bytes == formula.total_bytes
+        # Measured column: exact encoded frame size, >= the analytic floats.
+        assert res.comm.upload_wire_bytes_per_client == \
+            wire.stats_frame_nbytes(d, "f32")
+        assert res.comm.total_bytes > formula.total_bytes
+        per_client_overhead = (res.comm.upload_wire_bytes_per_client
+                               - (d * (d + 1) // 2 + d) * 4)
+        assert per_client_overhead == wire.OVERHEAD_BYTES + 4 + 8 + 2
 
     def test_measured_ledger_rejects_heterogeneous(self):
         s6 = fed.PackedStats.pack(compute_stats(jnp.ones((2, 6)),

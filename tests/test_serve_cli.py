@@ -61,12 +61,15 @@ def extra_set(name):
 
 
 def test_fusion_cli_reports_ledger(monkeypatch, capsys):
+    from repro.fed import wire
+
     out = _run_cli(monkeypatch, capsys, [])
     m = re.search(r"ledger: (\d+) upload bytes \+ (\d+) streamed", out)
     assert m, out
-    # 3 tenants x 2 clients x (d(d+1)/2 + d + d) fp32 floats, d=24
+    # 3 tenants x 2 clients; each upload is priced at its encoded Thm-4
+    # frame length (fed.wire), each download at d fp32 floats, d=24.
     d = 24
-    per_client = (d * (d + 1) // 2 + d + d) * 4
+    per_client = wire.stats_frame_nbytes(d, "f32") + d * 4
     assert int(m.group(1)) == 3 * 2 * per_client
     assert int(m.group(2)) == 0
 

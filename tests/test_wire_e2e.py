@@ -1,0 +1,521 @@
+"""Out-of-process federation e2e: loopback, TCP, and real subprocess clients.
+
+The acceptance gate for the wire layer: the paper's one-shot protocol run
+as *bytes across a process boundary* must recover the centralized ridge
+solution to the same tolerance as the in-process path, with the ledger
+measured from actual encoded frame lengths (Thm-4's float formula as the
+lower bound), under mixed Thm-4 / §IV-F / §VI-C frames and dtype-negotiated
+clients.
+
+Three layers, same protocol:
+
+  * Loopback — ``fed.transport.LoopbackChannel`` straight into the
+    dispatcher: fast enough for tier-1, pins the full server state machine
+    (negotiation, lazy tenant admission, control plane, sketch-hash checks,
+    rejection paths that must NOT kill the session).
+  * TCP in-proc — ``FrameServer`` + ``TCPChannel`` threads: the framing
+    survives a real socket, a corrupt header ends only that connection.
+  * Subprocess — ``launch/client.py`` processes against the server
+    (both an in-proc ``FrameServer`` and a full ``serve.py --mode fusion
+    --listen`` subprocess): nothing shared but bytes and the seed.
+"""
+import json
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fusion, projection
+from repro.core.sufficient_stats import compute_stats
+from repro.data import synthetic
+from repro.fed import transport, wire
+from repro.fed.protocol import PackedStats
+from repro.server import EnginePool
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+CLIENT_CLI = REPO / "src" / "repro" / "launch" / "client.py"
+SERVE_CLI = REPO / "src" / "repro" / "launch" / "serve.py"
+
+SIGMA = 0.1
+D = 16
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    return env
+
+
+def _dataset(num_clients=3, samples=64, dim=D, seed=0):
+    return synthetic.generate(jax.random.PRNGKey(seed),
+                              num_clients=num_clients,
+                              samples_per_client=samples, dim=dim)
+
+
+def _bf16_quantized(stats):
+    """What a bf16-negotiated upload makes of ``stats`` after the
+    deterministic decode upcast — the reference the server must match
+    bit-for-bit in f32 space."""
+    import ml_dtypes
+
+    p = PackedStats.pack(stats)
+    q = np.asarray(p.tri).astype(ml_dtypes.bfloat16).astype(np.float32)
+    m = np.asarray(p.moment).astype(ml_dtypes.bfloat16).astype(np.float32)
+    return PackedStats(jnp.asarray(q), jnp.asarray(m), p.count, p.dim).unpack()
+
+
+def _loopback_client(dispatcher, tenant, offers):
+    c = transport.FrameClient(transport.LoopbackChannel(dispatcher))
+    c.hello(tenant, offers)
+    return c
+
+
+class TestLoopbackFederation:
+    def test_mixed_dtype_clients_recover_centralized(self):
+        """3 clients (f32 / f64 / bf16-negotiated) over loopback == the
+        quantization-aware cold reference; ledger == bytes clients sent;
+        Thm-4 floats are a lower bound on every upload."""
+        ds = _dataset()
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            offers = [("f32",), ("f64", "f32"), ("bf16",)]
+            clients = []
+            for i, (A, b) in enumerate(ds.clients):
+                c = _loopback_client(disp, "ridge", offers[i])
+                c.upload_stats(compute_stats(A, b), client_id=f"c{i}")
+                clients.append(c)
+            # x64 is off, so the server's container is f32 and its policy
+            # negotiates f64-capable clients DOWN to f32 (no wasted bytes);
+            # bf16-only clients keep bf16.
+            assert [c.dtype for c in clients] == ["f32", "f32", "bf16"]
+
+            w = clients[0].solve(SIGMA)
+
+            stats = [compute_stats(A, b) for A, b in ds.clients]
+            stats[2] = _bf16_quantized(stats[2])   # what the wire did
+            ref = fusion.solve_ridge(stats[0] + stats[1] + stats[2], SIGMA)
+            np.testing.assert_allclose(np.asarray(w), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-5)
+
+            # Wire accuracy vs centralized == in-process accuracy (the
+            # bf16 client costs exactly its quantization, nothing more).
+            from repro import fed
+
+            central = np.asarray(fed.run_centralized(ds, SIGMA).weights)
+            err_wire = np.abs(np.asarray(w) - central).max()
+            err_ref = np.abs(np.asarray(ref) - central).max()
+            assert err_wire <= err_ref + 1e-5
+
+            led = pool.ledger()
+            sent = sum(c.bytes_uploaded for c in clients)
+            assert led["wire_upload_bytes"] == sent
+            # Thm 4 bounds the scalars on the wire from below; itemsize is
+            # the negotiated dtype's.
+            floats = D * (D + 1) // 2 + D
+            for c, dt in zip(clients, ("f32", "f32", "bf16")):
+                assert c.bytes_uploaded >= floats * wire.wire_itemsize(dt)
+            # Exact per-frame sizes: the ledger is frame lengths, not a formula.
+            assert sent == sum(
+                wire.stats_frame_nbytes(D, dt, client_id=f"c{i}")
+                for i, dt in enumerate(("f32", "f32", "bf16")))
+
+    def test_drop_restore_over_control_frames(self):
+        ds = _dataset()
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            c = _loopback_client(disp, "ridge", ("f32",))
+            stats = [compute_stats(A, b) for A, b in ds.clients]
+            for i, s in enumerate(stats):
+                c.upload_stats(s, client_id=f"c{i}")
+            c.control("drop", "c1")
+            w = c.solve(SIGMA)
+            ref = fusion.solve_ridge(stats[0] + stats[2], SIGMA)
+            np.testing.assert_allclose(np.asarray(w), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-6)
+            c.control("restore", "c1")
+            w = c.solve(SIGMA)
+            ref = fusion.solve_ridge(stats[0] + stats[1] + stats[2], SIGMA)
+            np.testing.assert_allclose(np.asarray(w), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-6)
+            with pytest.raises(transport.TransportError, match="unknown"):
+                c.control("drop", "never-uploaded")
+
+    def test_delta_rows_equal_packed_stats(self):
+        """The same rows shipped as §VI-C deltas fuse to the same solution
+        as one Thm-4 packed upload (Thm 1 across the wire)."""
+        ds = _dataset(num_clients=1, samples=48)
+        A, b = ds.clients[0]
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            c1 = _loopback_client(disp, "packed", ("f32",))
+            c1.upload_stats(compute_stats(A, b), client_id="c")
+            c2 = _loopback_client(disp, "streamed", ("f32",))
+            for lo, hi in ((0, 16), (16, 17), (17, 48)):   # ragged batches
+                c2.stream_rows(np.asarray(A[lo:hi]), np.asarray(b[lo:hi]),
+                               client_id="c")
+            w1, w2 = c1.solve(SIGMA), c2.solve(SIGMA)
+            np.testing.assert_allclose(w1, w2, rtol=1e-4, atol=1e-5)
+
+    def test_projected_tenant_lifts_like_inprocess(self):
+        """§IV-F over the wire: m-dim uploads + seed/hash, served weights
+        come back lifted to d and equal the in-process sketch path."""
+        ds = _dataset()
+        m, seed = 6, 41
+        R = projection.make_projection(jax.random.PRNGKey(seed), D, m)
+        rhash = wire.projection_hash(R)
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            packed = []
+            for i, (A, b) in enumerate(ds.clients):
+                c = _loopback_client(disp, "sketch", ("f32",))
+                p = PackedStats.pack(projection.projected_stats(A, b, R))
+                c.upload_projected(p, d_orig=D, seed=seed, rhash=rhash,
+                                   client_id=f"p{i}")
+                packed.append(p)
+            w = c.solve(SIGMA)
+            assert w.shape == (D,)
+            fused = packed[0].unpack() + packed[1].unpack() + packed[2].unpack()
+            ref = projection.lift(fusion.solve_ridge(fused, SIGMA), R)
+            np.testing.assert_allclose(np.asarray(w), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_projected_hash_and_conflict_rejected(self):
+        ds = _dataset()
+        m, seed = 6, 41
+        R = projection.make_projection(jax.random.PRNGKey(seed), D, m)
+        rhash = wire.projection_hash(R)
+        p = PackedStats.pack(
+            projection.projected_stats(*ds.clients[0], R))
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            c = _loopback_client(disp, "sketch", ("f32",))
+            with pytest.raises(transport.TransportError,
+                               match="hash mismatch"):
+                c.upload_projected(p, d_orig=D, seed=seed, rhash=rhash ^ 1,
+                                   client_id="bad")
+            c.upload_projected(p, d_orig=D, seed=seed, rhash=rhash,
+                               client_id="good")
+            # Another client with a DIFFERENT seed for the same tenant: the
+            # sketches do not match, fusing them would be silent garbage.
+            seed2 = seed + 1
+            R2 = projection.make_projection(jax.random.PRNGKey(seed2), D, m)
+            p2 = PackedStats.pack(
+                projection.projected_stats(*ds.clients[1], R2))
+            with pytest.raises(transport.TransportError,
+                               match="conflicting sketch"):
+                c.upload_projected(p2, d_orig=D, seed=seed2,
+                                   rhash=wire.projection_hash(R2),
+                                   client_id="worse")
+
+    def test_plain_and_sketched_spaces_never_mix(self):
+        """A Thm-4/§VI-C upload whose d happens to equal a sketched tenant's
+        m (or a §IV-F upload landing on an unsketched tenant) must be
+        rejected — fusing statistics from different spaces is shape-silent
+        garbage."""
+        ds = _dataset()
+        m, seed = 6, 41
+        R = projection.make_projection(jax.random.PRNGKey(seed), D, m)
+        p = PackedStats.pack(projection.projected_stats(*ds.clients[0], R))
+        small = _dataset(dim=m)   # plain stats with d == m
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            c = _loopback_client(disp, "sketch", ("f32",))
+            c.upload_projected(p, d_orig=D, seed=seed,
+                               rhash=wire.projection_hash(R), client_id="p0")
+            before = np.asarray(pool.solve_lifted("sketch", SIGMA))
+            with pytest.raises(transport.TransportError,
+                               match="sketched statistics"):
+                c.upload_stats(compute_stats(*small.clients[0]),
+                               client_id="plain")
+            with pytest.raises(transport.TransportError,
+                               match="sketched statistics"):
+                c.stream_rows(np.zeros((2, m), np.float32),
+                              np.zeros(2, np.float32), client_id="rows")
+            # Rejections really rejected: the tenant state is untouched.
+            np.testing.assert_array_equal(
+                before, np.asarray(pool.solve_lifted("sketch", SIGMA)))
+            # Mirror direction: sketch upload onto an unsketched tenant.
+            c2 = _loopback_client(disp, "plain", ("f32",))
+            c2.upload_stats(compute_stats(*small.clients[0]), client_id="c")
+            with pytest.raises(transport.TransportError,
+                               match="unsketched statistics"):
+                c2.upload_projected(p, d_orig=D, seed=seed,
+                                    rhash=wire.projection_hash(R),
+                                    client_id="p1")
+
+    def test_overflowing_count_is_typed_not_thread_killing(self):
+        """A codec-valid frame whose count exceeds the int32 container bound
+        is rejected at decode; and even an admission-time internal error
+        comes back as an error ACK, never a dead session."""
+        with pytest.raises(wire.PayloadError, match="int32 container"):
+            wire.encode_frame(wire.StatsFrame(
+                tri=np.zeros(3, np.float32), moment=np.zeros(2, np.float32),
+                count=2**31, dim=2))
+        # Craft the frame byte-level (a buggy/hostile peer has no encoder
+        # guard): decode must reject it as typed.
+        good = wire.encode_frame(wire.StatsFrame(
+            tri=np.zeros(3, np.float32), moment=np.zeros(2, np.float32),
+            count=1, dim=2))
+        import zlib
+
+        bad = bytearray(good)
+        bad[16:24] = (2**31).to_bytes(8, "little")   # count u64 after u32 d
+        body = bytes(bad[:-4])
+        crafted = body + (zlib.crc32(body) & 0xFFFFFFFF).to_bytes(4, "little")
+        with pytest.raises(wire.PayloadError, match="int32 container"):
+            wire.decode_frame(crafted)
+        # And through a session: typed-error ack, session alive after.
+        with EnginePool() as pool:
+            session = transport.WireDispatcher(pool).session()
+            reply = wire.decode_frame(session.handle(crafted))
+            assert isinstance(reply, wire.AckFrame) and not reply.ok
+            assert "PayloadError" in reply.message
+            assert isinstance(
+                wire.decode_frame(session.handle(
+                    wire.encode_frame(wire.Hello("t", ("f32",))))),
+                wire.Hello)
+
+    def test_dim_mismatch_rejected_session_survives(self):
+        ds = _dataset()
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            c = _loopback_client(disp, "ridge", ("f32",))
+            c.upload_stats(compute_stats(*ds.clients[0]), client_id="c0")
+            small = _dataset(dim=4)
+            with pytest.raises(transport.TransportError, match="dim"):
+                c.upload_stats(compute_stats(*small.clients[0]),
+                               client_id="c1")
+            # The session is still alive and consistent after the rejection.
+            c.upload_stats(compute_stats(*ds.clients[1]), client_id="c1")
+            assert pool.get("ridge").count == 128
+
+    def test_malformed_bytes_get_error_ack_not_crash(self):
+        with EnginePool() as pool:
+            session = transport.WireDispatcher(pool).session()
+            reply = wire.decode_frame(session.handle(b"garbage not a frame"))
+            assert isinstance(reply, wire.AckFrame) and not reply.ok
+            assert "BadMagic" in reply.message
+            # Next frame on the same session still works.
+            good = wire.encode_frame(wire.Hello("t", ("f32",)))
+            assert isinstance(wire.decode_frame(session.handle(good)),
+                              wire.Hello)
+
+    def test_huge_client_id_rejection_ack_is_bounded(self):
+        """A codec-valid 60KB client id inside a rejection message must not
+        overflow the ACK's u16 string field and kill the session — the
+        transport bounds what it echoes."""
+        ds = _dataset(num_clients=1)
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            c = _loopback_client(disp, "ridge", ("f32",))
+            c.upload_stats(compute_stats(*ds.clients[0]), client_id="c0")
+            huge = "x" * 60_000
+            with pytest.raises(transport.TransportError, match="unknown"):
+                c.control("drop", huge)
+            # Session alive, state untouched, and the ack really was bounded.
+            reply = wire.decode_frame(c.channel._session.handle(
+                wire.encode_frame(wire.ControlFrame("drop", huge))))
+            assert isinstance(reply, wire.AckFrame) and not reply.ok
+            assert len(reply.message.encode()) <= \
+                transport.MAX_ACK_MESSAGE_BYTES + len("...[truncated]")
+            assert pool.get("ridge").count == 64
+
+    def test_client_sending_server_frames_rejected(self):
+        with EnginePool() as pool:
+            session = transport.WireDispatcher(pool).session()
+            data = wire.encode_frame(wire.WeightsFrame(np.zeros(3), 0.1))
+            reply = wire.decode_frame(session.handle(data))
+            assert isinstance(reply, wire.AckFrame) and not reply.ok
+            assert "unexpected WeightsFrame" in reply.message
+
+    def test_solve_unknown_tenant_rejected(self):
+        with EnginePool() as pool:
+            c = _loopback_client(transport.WireDispatcher(pool),
+                                 "nobody", ("f32",))
+            with pytest.raises(transport.TransportError, match="unknown"):
+                c.solve(SIGMA)
+
+
+class TestTCPTransport:
+    def test_tcp_roundtrip_and_corrupt_header_isolation(self):
+        ds = _dataset(num_clients=1)
+        A, b = ds.clients[0]
+        with EnginePool() as pool, transport.FrameServer(pool) as srv:
+            with transport.TCPChannel("127.0.0.1", srv.port) as ch:
+                c = transport.FrameClient(ch)
+                assert c.hello("tcp", ("f64", "bf16")) == "f64"
+                c.upload_stats(compute_stats(A, b), client_id="c0")
+                w = c.solve(SIGMA)
+            ref = fusion.solve_ridge(compute_stats(A, b), SIGMA)
+            np.testing.assert_allclose(w, np.asarray(ref), rtol=1e-5,
+                                       atol=1e-6)
+            # A connection that sends a corrupt HEADER gets a typed error
+            # ack and is hung up — without touching the server or the pool.
+            with transport.TCPChannel("127.0.0.1", srv.port) as bad:
+                reply = wire.decode_frame(bad.request(b"X" * 32))
+                assert isinstance(reply, wire.AckFrame) and not reply.ok
+            # Server still serves new connections afterwards.
+            with transport.TCPChannel("127.0.0.1", srv.port) as ch2:
+                c2 = transport.FrameClient(ch2)
+                c2.hello("tcp", ("f32",))
+                np.testing.assert_allclose(c2.solve(SIGMA), w, atol=1e-6)
+            assert pool.get("tcp").count == int(A.shape[0])
+
+
+def _spawn_client(port, *extra):
+    return subprocess.Popen(
+        [sys.executable, str(CLIENT_CLI), "--connect", f"127.0.0.1:{port}",
+         "--seed", "0", "--num-clients", "3", "--samples", "64",
+         "--dim", str(D)] + [str(e) for e in extra],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        env=_env())
+
+
+def _finish(proc):
+    out, err = proc.communicate(timeout=180)
+    assert proc.returncode == 0, f"client failed:\n{err}"
+    return json.loads(out.strip().splitlines()[-1])
+
+
+class TestSubprocessFederation:
+    """launch/client.py processes against an in-proc FrameServer: nothing is
+    shared between the sides but the TCP bytes and the dataset seed."""
+
+    def test_three_process_mixed_federation(self):
+        ds = _dataset()
+        m, proj_seed = 6, 41
+        with EnginePool() as pool, transport.FrameServer(pool) as srv:
+            first_wave = [
+                # tenant ridge: Thm-4 f64-negotiated + f32 uploads
+                _spawn_client(srv.port, "--tenant", "ridge",
+                              "--client-index", 0, "--offer", "f64,f32"),
+                _spawn_client(srv.port, "--tenant", "ridge",
+                              "--client-index", 1, "--offer", "f32"),
+                # tenant lowp: the dtype-negotiated (bf16) client
+                _spawn_client(srv.port, "--tenant", "lowp",
+                              "--client-index", 0, "--offer", "bf16"),
+                # tenant sketch: a §IV-F projected upload
+                _spawn_client(srv.port, "--tenant", "sketch",
+                              "--client-index", 1, "--projected", m,
+                              "--proj-seed", proj_seed),
+            ]
+            wave_reports = [_finish(p) for p in first_wave]
+            # The querying client starts only after the other ridge uploads
+            # landed: its --solve must observe the tenant's FINAL state, or
+            # the bit-exact pin below would race concurrent ingests.
+            r_solver = _finish(_spawn_client(
+                srv.port, "--tenant", "ridge", "--client-index", 2,
+                "--delta-batches", 2, "--solve", SIGMA))
+            reports = [wave_reports[0], wave_reports[1], r_solver,
+                       wave_reports[2], wave_reports[3]]
+            # The f64-offering client is negotiated down to the server's
+            # f32 container width (x64 off); bf16-only stays bf16.
+            assert [r["negotiated_dtype"] for r in reports] == \
+                ["f32", "f32", "f32", "bf16", "f32"]
+
+            # --- ridge: recovers centralized to the in-process tolerance ---
+            w_wire = np.asarray(pool.solve("ridge", SIGMA))
+            A_all, b_all = ds.stacked()
+            central = np.asarray(
+                fusion.solve_ridge(compute_stats(A_all, b_all), SIGMA))
+            from repro import fed
+
+            inproc = np.asarray(fed.run_one_shot(ds, SIGMA).weights)
+            err_wire = np.abs(w_wire - central).max()
+            err_inproc = np.abs(inproc - central).max()
+            assert err_wire <= max(10 * err_inproc, 5e-5), \
+                (err_wire, err_inproc)
+            # The weights the client process received == what the server
+            # serves (the WEIGHTS frame carried them bit-exactly).
+            w_client = np.asarray(reports[2]["solve"]["weights"],
+                                  np.float32)
+            np.testing.assert_array_equal(
+                w_client, np.asarray(pool.solve("ridge", SIGMA),
+                                     np.float32))
+
+            # --- lowp: exactly the bf16-quantized reference ---
+            w_lowp = np.asarray(pool.solve("lowp", SIGMA))
+            ref_lowp = fusion.solve_ridge(
+                _bf16_quantized(compute_stats(*ds.clients[0])), SIGMA)
+            np.testing.assert_allclose(w_lowp, np.asarray(ref_lowp),
+                                       rtol=1e-5, atol=1e-5)
+
+            # --- sketch: server lifts through the shared R ---
+            t = pool.tenant("sketch")
+            assert t.projection == {
+                "seed": proj_seed, "d_orig": D, "m": m,
+                "rhash": t.projection["rhash"]}
+            R = projection.make_projection(jax.random.PRNGKey(proj_seed),
+                                           D, m)
+            ps = projection.projected_stats(*ds.clients[1], R)
+            ref_sk = projection.lift(fusion.solve_ridge(ps, SIGMA), R)
+            w_sk = pool.solve_lifted("sketch", SIGMA)
+            np.testing.assert_allclose(np.asarray(w_sk),
+                                       np.asarray(ref_sk),
+                                       rtol=1e-4, atol=1e-5)
+
+            # --- ledger: bytes measured from actual frames ---
+            led = pool.ledger()
+            sent = sum(r["bytes_uploaded"] for r in reports)
+            assert led["wire_upload_bytes"] == sent
+            floats = D * (D + 1) // 2 + D
+            # Thm-4 floats lower-bound the ridge tenant's uploads (f64/f32
+            # stats frames and the row deltas all carry >= that many
+            # scalars at >= 4 bytes each).
+            ridge_sent = sum(r["bytes_uploaded"] for r in reports[:3])
+            assert led["per_tenant"]["ridge"]["wire_upload_bytes"] == \
+                ridge_sent >= 3 * floats * 4
+            # And exactly: frame sizes are analytic, per negotiated dtype.
+            cid = "client0"
+            assert reports[0]["bytes_uploaded"] == wire.stats_frame_nbytes(
+                D, "f32", client_id=cid)
+            assert reports[3]["bytes_uploaded"] == wire.stats_frame_nbytes(
+                D, "bf16", client_id=cid)
+            assert reports[4]["bytes_uploaded"] == \
+                wire.projected_frame_nbytes(m, "f32", client_id="client1")
+
+    def test_serve_cli_subprocess_end_to_end(self):
+        """The full CLI pair: serve.py --listen subprocess + client
+        subprocess; the server's printed report pins the ledger and the
+        solve against a cold in-process reference."""
+        srv = subprocess.Popen(
+            [sys.executable, str(SERVE_CLI), "--mode", "fusion", "--listen",
+             "0", "--expect-uploads", "1", "--serve-timeout", "120",
+             "--sigma", str(SIGMA)],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env=_env())
+        try:
+            line = srv.stdout.readline()
+            match = re.search(r"listening on 127\.0\.0\.1:(\d+)", line)
+            assert match, f"no listen line: {line!r}"
+            port = int(match.group(1))
+            rep = _finish(_spawn_client(
+                port, "--tenant", "solo", "--client-index", 0,
+                "--offer", "f64,f32", "--solve", SIGMA))
+            out, err = srv.communicate(timeout=120)
+        finally:
+            if srv.poll() is None:
+                srv.kill()
+                srv.communicate()
+        assert srv.returncode == 0, err
+        report = json.loads(
+            re.search(r"\[serve_wire\] report (.*)", out).group(1))
+        assert report["transport"]["uploads_admitted"] == 1
+        assert report["ledger"]["wire_upload_bytes"] == rep["bytes_uploaded"]
+
+        ds = _dataset()
+        ref = fusion.solve_ridge(compute_stats(*ds.clients[0]), SIGMA)
+        np.testing.assert_allclose(
+            np.asarray(report["weights"]["solo"]), np.asarray(ref),
+            rtol=1e-5, atol=1e-6)
+        # Client-received weights == server-reported weights, bit for bit.
+        np.testing.assert_array_equal(
+            np.asarray(rep["solve"]["weights"]),
+            np.asarray(report["weights"]["solo"]))
