@@ -6,9 +6,12 @@ PY ?= python
 # any perf claim fails), one dense-vs-sharded crossover measurement, the
 # mutation-path smoke (blocked rank-r update / ingest coalescer / packed
 # payload ledger), the engine-pool smoke (tenant-count scaling +
-# background-flusher staleness bound), and the wire-codec smoke
-# (bytes-on-wire vs the Thm-4/§IV-F formulas + loopback admission path) so
-# experiments/repro/ tracks serving, write-path, and wire perf per PR.
+# background-flusher staleness bound), the wire-codec smoke
+# (bytes-on-wire vs the Thm-4/§IV-F formulas + loopback admission path),
+# and the QPS smoke (closed-loop batched-vs-unbatched serving: stacked
+# sweep beats sequential per-tenant solves on wave p99 at T=32, zero
+# bitwise exactness violations) so experiments/repro/ tracks serving,
+# write-path, and wire perf per PR.
 .PHONY: tier1
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -17,6 +20,7 @@ tier1:
 	PYTHONPATH=src $(PY) benchmarks/mutation_bench.py --smoke
 	PYTHONPATH=src $(PY) benchmarks/pool_bench.py --smoke
 	PYTHONPATH=src $(PY) benchmarks/wire_bench.py --smoke
+	PYTHONPATH=src $(PY) benchmarks/qps_bench.py --smoke
 
 # Standalone wire gate: the codec suite (golden frames, roundtrip fuzz,
 # mutation fuzz) plus the out-of-process federation e2e (loopback, TCP,
@@ -48,6 +52,17 @@ pool-smoke:
 sharded-smoke:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_sharded_backend.py
 	PYTHONPATH=src $(PY) benchmarks/sharded_fusion_bench.py --smoke
+
+# Standalone QPS gate: the batched-solve test suite (stacked-sweep
+# bit-identity under interleaved mutations, SolveBatcher window semantics
+# over loopback + TCP, admission/quota refusals) plus the closed-loop QPS
+# bench smoke, which asserts batched p99 <= unbatched p99 at T=32 (all-T
+# solve-wave latency: one stacked sweep vs sequential per-tenant solves
+# under mixed traffic) and zero bitwise exactness violations.
+.PHONY: qps-smoke
+qps-smoke:
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_batch_solve.py
+	PYTHONPATH=src $(PY) benchmarks/qps_bench.py --smoke
 
 .PHONY: test
 test:

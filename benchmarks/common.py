@@ -1,9 +1,13 @@
-"""Shared benchmark harness: trials, timing, CSV output, claim checks."""
+"""Shared benchmark harness: trials, timing, CSV/JSON output, claim checks."""
 from __future__ import annotations
 
 import csv
+import datetime
+import json
 import math
+import os
 import pathlib
+import platform
 import statistics
 import time
 from typing import Callable, Iterable
@@ -11,6 +15,40 @@ from typing import Callable, Iterable
 import jax
 
 OUT_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "repro"
+
+
+def host_metadata() -> dict:
+    """Self-describing context for every recorded number.
+
+    These benchmarks run on whatever host CI/dev hands them (usually CPU);
+    a JSON full of latencies without the host it came from is a claim
+    nobody can audit. Stamped into every ``write_json`` payload.
+    """
+    return {
+        "cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "jax_version": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "recorded_at": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+
+
+def write_json(name: str, payload: dict) -> pathlib.Path:
+    """Persist a benchmark report with host metadata under ``experiments/``.
+
+    The ``host`` key is injected (not overwritten if the caller set one) so
+    every ``experiments/repro/*.json`` states what machine produced it.
+    """
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    payload = dict(payload)
+    payload.setdefault("host", host_metadata())
+    path = OUT_DIR / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=2, default=float))
+    return path
 
 
 def trials(fn: Callable[[jax.Array], dict], n: int = 5, seed: int = 0) -> list[dict]:

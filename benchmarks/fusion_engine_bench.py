@@ -128,8 +128,7 @@ def run(smoke: bool = False) -> list[dict]:
     bench = {"smoke": smoke, "dim": dim, "backend": engine.summary()["backend"],
              "rows": rows, "claims": claims.rows()}
     common.OUT_DIR.mkdir(parents=True, exist_ok=True)
-    (common.OUT_DIR / "fusion_engine_bench.json").write_text(
-        json.dumps(bench, indent=2))
+    common.write_json("fusion_engine_bench", bench)
     print("BENCH " + json.dumps({r["name"]: round(r["speedup"], 2)
                                  for r in rows}))
     return claims.rows()

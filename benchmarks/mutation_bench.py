@@ -161,8 +161,7 @@ def run(smoke: bool = False) -> list[dict]:
     common.write_csv("mutation_bench", rows)
     bench = {"smoke": smoke, "rows": rows, "claims": claims.rows()}
     common.OUT_DIR.mkdir(parents=True, exist_ok=True)
-    (common.OUT_DIR / "mutation_bench.json").write_text(
-        json.dumps(bench, indent=2))
+    common.write_json("mutation_bench", bench)
     print("BENCH " + json.dumps({
         r["name"]: round(r.get("speedup", r.get("mutation_reduction",
                                                 r.get("savings", 0.0))), 2)

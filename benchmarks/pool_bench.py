@@ -231,8 +231,7 @@ def run(smoke: bool = False) -> list[dict]:
 
     common.write_csv("pool_bench", rows)
     bench = {"smoke": smoke, "rows": rows, "claims": claims.rows()}
-    common.OUT_DIR.mkdir(parents=True, exist_ok=True)
-    (common.OUT_DIR / "pool_bench.json").write_text(json.dumps(bench, indent=2))
+    common.write_json("pool_bench", bench)
     print("BENCH " + json.dumps({
         r["name"]: round(r.get("serve_p50_ms", r.get("max_flush_age_s", 0.0)),
                          3)

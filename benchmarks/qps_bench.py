@@ -1,0 +1,329 @@
+"""Closed-loop QPS bench: the wire SOLVE path, batched vs unbatched.
+
+The ROADMAP's north star is serving Phase 3 at high QPS for many tenants;
+this bench measures exactly that surface, end to end through the wire
+protocol. A fleet of closed-loop workers (worker i is a ``FrameClient``
+bound to tenant ``i % T``; offered load = worker count, each issues
+back-to-back requests) drives mixed traffic — mostly Phase-3 SOLVE queries
+with a §VI-C row delta every few requests — against ONE ``EnginePool``
+behind either transport:
+
+  * loopback   — ``LoopbackChannel`` sessions over a shared dispatcher: the
+                 full codec/validation/ledger path minus the kernel, so the
+                 numbers isolate *server* scheduling from socket costs.
+  * tcp        — a real ``FrameServer`` over 127.0.0.1 (full mode).
+
+Each (T, transport) cell runs twice: **unbatched** (every SOLVE frame runs
+its tenant's solve alone, as before this bench existed) and **batched**
+(a ``server.batch.SolveBatcher`` micro-batching window coalesces concurrent
+SOLVEs into one cross-tenant stacked sweep — ``EnginePool.solve_many``).
+Reported per cell: per-request solve p50/p99 latency, sustained QPS vs the
+offered load, and the batcher's sweep stats. Factor caches, the
+rank-bucketed update programs, and every power-of-two stacked-sweep bucket
+are warmed before timing, so tails measure scheduling, not XLA compiles.
+
+While the closed loop runs, a prober thread measures the *solve-wave*
+latency the tentpole targets: time for the server to produce ALL T
+tenants' weights. The unbatched cell serves the wave the way the pool did
+before this PR — T sequential per-tenant solves, so tenant i's latency is
+its completion offset and every one of the T jit dispatches is exposed to
+preemption by the serving threads — while the batched cell serves it as
+ONE ``solve_many`` stacked sweep (one dispatch, every tenant completes
+together).
+
+Claims gate on (a) the stacked sweep beating sequential per-tenant solves
+on per-tenant wave p99 at the largest tenant count under mixed traffic,
+and (b) ZERO bitwise exactness violations: after the pool quiesces,
+``solve_many`` must return bit-identical weights to each tenant's lone
+``solve``. Per-request client latencies carry no claim — on a small CPU
+host they are codec/GIL-bound, which batching cannot remove; they are
+recorded honestly whatever they are. The ``host`` key in the JSON says
+exactly what machine produced the numbers.
+
+Usage: PYTHONPATH=src:. python benchmarks/qps_bench.py [--smoke]
+Emits a CSV + BENCH JSON under experiments/repro/ and prints a BENCH line.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/qps_bench.py`
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import common
+from repro import core
+from repro.fed import transport
+from repro.kernels.ops import pow2_bucket
+from repro.server import CoalescerPolicy, EnginePool, SolveBatcher
+
+WINDOW_S = 0.002          # micro-batching window under load
+SIGMAS = (0.1, 0.5)
+MIX_EVERY = 5             # a §VI-C delta upload every MIX_EVERY requests
+
+
+def _pctl(ts: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(ts), q))
+
+
+def _make_pool(T: int, dim: int, seed: int) -> EnginePool:
+    pool = EnginePool(default_coalesce=CoalescerPolicy(max_rank=16))
+    for t in range(T):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 31 * t))
+        A = jax.random.normal(k1, (4 * dim, dim))
+        b = jax.random.normal(k2, (4 * dim,))
+        pool.create_tenant(f"t{t}", clients=[core.compute_stats(A, b)],
+                           placement="dense")
+    return pool
+
+
+def _warm(pool: EnginePool, names: tuple[str, ...], dim: int,
+          workers: int) -> None:
+    """Compile everything the timed loop will hit: per-tenant factors at
+    every sigma, every pow2 rank bucket of the incremental-update program
+    (the coalescer can flush 1..max_rank rows at once under mixed deltas),
+    and every pow2 stacked-sweep bucket the batcher can form, including one
+    padded (non-pow2) batch so the pad lanes exist — tails must measure
+    scheduling, not XLA."""
+    for name in names:
+        pool.solve_batch(name, list(SIGMAS), method="chol")
+    rank = 1
+    while rank <= 16:
+        for _ in range(rank):
+            pool.ingest_rows_async(names[0], jnp.zeros((1, dim)),
+                                   jnp.zeros((1,)))
+        pool.flush(names[0])
+        rank *= 2
+    for name in names:
+        for s in SIGMAS:
+            pool.solve(name, s)
+    reqs = [(n, SIGMAS[0]) for n in names]
+    size = 1
+    while size <= pow2_bucket(workers):
+        pool.solve_many((reqs * size)[:size])
+        size *= 2
+    if workers >= 3:
+        pool.solve_many(reqs[:3])  # padded batch: builds the pad lanes
+
+
+def _drive(clients, dim: int, duration_s: float) -> tuple[list[float], int]:
+    """Closed-loop mixed traffic: each worker hammers its own session."""
+    lat: list[list[float]] = [[] for _ in clients]
+    uploads = [0] * len(clients)
+    stop_t = time.monotonic() + duration_s
+
+    def work(i: int) -> None:
+        cl = clients[i]
+        rng = np.random.default_rng(1000 + i)
+        dA = rng.standard_normal((1, dim)).astype(np.float32)
+        n = 0
+        while time.monotonic() < stop_t:
+            n += 1
+            if n % MIX_EVERY == 0:
+                cl.stream_rows(dA, np.zeros((1,), np.float32))
+                uploads[i] += 1
+            sigma = SIGMAS[int(rng.integers(len(SIGMAS)))]
+            t0 = time.perf_counter()
+            cl.solve(sigma)
+            lat[i].append(time.perf_counter() - t0)
+
+    threads = [threading.Thread(target=work, args=(i,), daemon=True)
+               for i in range(len(clients))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return [x for per in lat for x in per], sum(uploads)
+
+
+def _probe_waves(pool, names, *, batched: bool, stop: threading.Event,
+                 out: list[float]) -> None:
+    """Measure solve-wave latency (time to ALL T tenants' weights) under
+    whatever traffic is running. Appends one per-tenant latency per tenant
+    per wave: the unbatched wave is T sequential lone solves (tenant i's
+    latency = its completion offset, the pre-PR serving pattern), the
+    batched wave is ONE stacked ``solve_many`` sweep (all tenants complete
+    together)."""
+    reqs = [(n, SIGMAS[0]) for n in names]
+    while not stop.is_set():
+        t0 = time.perf_counter()
+        if batched:
+            ws = pool.solve_many(reqs)
+            jax.block_until_ready(ws[-1])
+            out.extend([time.perf_counter() - t0] * len(names))
+        else:
+            for n in names:
+                jax.block_until_ready(pool.solve(n, SIGMAS[0]))
+                out.append(time.perf_counter() - t0)
+        stop.wait(0.01)
+
+
+def _clients(channel_of, names, workers: int):
+    out = []
+    for i in range(workers):
+        cl = transport.FrameClient(channel_of())
+        cl.hello(names[i % len(names)])
+        out.append(cl)
+    return out
+
+
+def _run_cell(T: int, dim: int, *, batched: bool, tcp: bool,
+              duration_s: float) -> dict:
+    """One (T, transport, batched?) measurement cell on a fresh pool."""
+    pool = _make_pool(T, dim, seed=T)
+    names = pool.tenant_names
+    workers = T
+    _warm(pool, names, dim, workers)
+
+    batcher = None
+    srv = None
+    try:
+        if tcp:
+            srv = transport.FrameServer(
+                pool, solve_window_s=WINDOW_S if batched else None).start()
+            clients = _clients(
+                lambda: transport.TCPChannel(srv.host, srv.port,
+                                             timeout_s=60.0), names, workers)
+            dispatcher = srv.dispatcher
+        else:
+            dispatcher = transport.WireDispatcher(pool)
+            if batched:
+                batcher = SolveBatcher(pool, window_s=WINDOW_S).start()
+                dispatcher.solve_batcher = batcher
+            clients = _clients(
+                lambda: transport.LoopbackChannel(dispatcher), names, workers)
+
+        waves: list[float] = []
+        probe_stop = threading.Event()
+        prober = threading.Thread(
+            target=_probe_waves, kwargs=dict(
+                pool=pool, names=names, batched=batched, stop=probe_stop,
+                out=waves),
+            daemon=True)
+        prober.start()
+        t0 = time.perf_counter()
+        lat, uploads = _drive(clients, dim, duration_s)
+        elapsed = time.perf_counter() - t0
+        probe_stop.set()
+        prober.join()
+        for cl in clients:
+            cl.close()
+    finally:
+        if batcher is not None:
+            batcher.stop()
+        if srv is not None:
+            srv.stop()
+
+    sweeps = dispatcher.summary().get("solve_batcher", {})
+    row = {
+        "name": f"{'tcp' if tcp else 'loop'}_T{T}_"
+                f"{'batched' if batched else 'unbatched'}",
+        "tenants": T,
+        "transport": "tcp" if tcp else "loopback",
+        "batched": batched,
+        "offered_workers": workers,
+        "solves": len(lat),
+        "delta_uploads": uploads,
+        "qps": len(lat) / elapsed,
+        "p50_ms": _pctl(lat, 50) * 1e3,
+        "p99_ms": _pctl(lat, 99) * 1e3,
+        "waves": len(waves) // T,
+        "wave_p50_ms": _pctl(waves, 50) * 1e3,
+        "wave_p99_ms": _pctl(waves, 99) * 1e3,
+        "batched_sweeps": pool.batched_sweeps,
+        "max_batch_seen": sweeps.get("max_batch_seen", 0),
+    }
+    pool.close()
+    return row
+
+
+def _exactness_violations(T: int, dim: int) -> int:
+    """Post-quiesce bitwise check: solve_many vs lone solves, same state.
+
+    Runs mixed mutations first (so caches hold incrementally-updated
+    factors, the hard case), flushes, then compares every tenant at every
+    sigma — any differing bit is a violation.
+    """
+    pool = _make_pool(T, dim, seed=97)
+    names = pool.tenant_names
+    rng = np.random.default_rng(97)
+    for i, name in enumerate(names):
+        pool.solve(name, SIGMAS[0])
+        if i % 2 == 0:
+            pool.ingest_rows(name, jnp.asarray(
+                rng.standard_normal((1, dim)), jnp.float32),
+                jnp.zeros((1,)))
+    pool.flush()
+    bad = 0
+    for sigma in SIGMAS:
+        lone = [np.asarray(pool.solve(n, sigma)) for n in names]
+        many = pool.solve_many([(n, sigma) for n in names])
+        for w_lone, w_many in zip(lone, many):
+            if not (np.asarray(w_many) == w_lone).all():
+                bad += 1
+    pool.close()
+    return bad
+
+
+def run(smoke: bool = False) -> list[dict]:
+    claims = common.Claims("qps")
+    rows: list[dict] = []
+    dim = 32 if smoke else 64
+    duration = 2.0 if smoke else 4.0
+    tenant_counts = [32] if smoke else [2, 8, 32]
+
+    for T in tenant_counts:
+        for batched in (False, True):
+            rows.append(_run_cell(T, dim, batched=batched, tcp=False,
+                                  duration_s=duration))
+    if not smoke:
+        for batched in (False, True):
+            rows.append(_run_cell(32, dim, batched=batched, tcp=True,
+                                  duration_s=duration))
+
+    violations = _exactness_violations(tenant_counts[-1], dim)
+
+    by = {r["name"]: r for r in rows}
+    un, ba = by[f"loop_T{tenant_counts[-1]}_unbatched"], \
+        by[f"loop_T{tenant_counts[-1]}_batched"]
+    claims.check(
+        f"batched_p99_beats_unbatched_T{tenant_counts[-1]}",
+        ba["wave_p99_ms"] <= un["wave_p99_ms"],
+        f"all-{tenant_counts[-1]}-tenant wave p99 under mixed traffic: "
+        f"{un['wave_p99_ms']:.1f}ms sequential -> "
+        f"{ba['wave_p99_ms']:.1f}ms stacked sweep "
+        f"(max batch {ba['max_batch_seen']})")
+    claims.check("batched_bitwise_exact", violations == 0,
+                 f"{violations} bitwise mismatches vs lone solves")
+
+    common.write_csv("qps_bench", rows)
+    bench = {"smoke": smoke, "window_s": WINDOW_S, "mix_every": MIX_EVERY,
+             "rows": rows, "exactness_violations": violations,
+             "claims": claims.rows()}
+    common.write_json("qps_bench", bench)
+    print("BENCH " + json.dumps({
+        r["name"]: {"qps": round(r["qps"], 1),
+                    "p99_ms": round(r["p99_ms"], 3),
+                    "wave_p99_ms": round(r["wave_p99_ms"], 3)}
+        for r in rows}))
+    return claims.rows()
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="T=32 loopback only, short runs")
+    args = ap.parse_args()
+    failed = [c for c in run(smoke=args.smoke) if not c["pass"]]
+    sys.exit(1 if failed else 0)

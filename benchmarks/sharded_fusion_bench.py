@@ -109,8 +109,7 @@ def _child(smoke: bool) -> None:
     bench = {"smoke": smoke, "mesh": dict((str(k), int(v))
                                           for k, v in mesh.shape.items()),
              "rows": rows, "crossover_d": crossover, "claims": claims.rows()}
-    _OUT.mkdir(parents=True, exist_ok=True)
-    _JSON.write_text(json.dumps(bench, indent=2))
+    common.write_json("sharded_fusion_bench", bench)
     print("BENCH " + json.dumps({
         "crossover_d": crossover,
         **{f"d{r['d']}_cold_ratio": round(r["cold_ratio"], 2) for r in rows}}))

@@ -88,13 +88,20 @@ class WireDispatcher:
 
     def __init__(self, pool, *, default_tenant: str = "default",
                  placement: str = "dense",
-                 dtype_preference: Sequence[str] | None = None):
+                 dtype_preference: Sequence[str] | None = None,
+                 solve_batcher=None):
         self.pool = pool
         self.default_tenant = default_tenant
         self.placement = placement
         self.dtype_preference = (tuple(dtype_preference)
                                  if dtype_preference is not None
                                  else default_dtype_preference())
+        # Optional server.batch.SolveBatcher: when present, SOLVE frames
+        # route through its micro-batching window so queries from many
+        # concurrent sessions coalesce into one cross-tenant stacked sweep.
+        # Ownership stays with whoever constructed it (FrameServer when
+        # built from ``solve_window_s``).
+        self.solve_batcher = solve_batcher
         self._lock = threading.Lock()
         self.frames_handled = 0
         self.frames_rejected = 0
@@ -112,13 +119,16 @@ class WireDispatcher:
 
     def summary(self) -> dict:
         with self._lock:
-            return {
+            out = {
                 "frames_handled": self.frames_handled,
                 "frames_rejected": self.frames_rejected,
                 "uploads_admitted": self.uploads_admitted,
                 "bytes_in": self.bytes_in,
                 "bytes_out": self.bytes_out,
             }
+        if self.solve_batcher is not None:
+            out["solve_batcher"] = self.solve_batcher.summary()
+        return out
 
 
 class _Session:
@@ -158,9 +168,13 @@ class _Session:
             return self._reply(wire.AckFrame(
                 False, f"unexpected {type(frame).__name__} from client"))
         try:
-            reply = d.pool.admit_frame(self.tenant, frame,
-                                       encoded_len=len(data),
-                                       placement=d.placement)
+            if (isinstance(frame, wire.SolveFrame)
+                    and d.solve_batcher is not None):
+                reply = self._batched_solve(frame)
+            else:
+                reply = d.pool.admit_frame(self.tenant, frame,
+                                           encoded_len=len(data),
+                                           placement=d.placement)
         except Exception as e:  # noqa: BLE001 - a frame must never kill the
             # session thread; the protocol contract is a typed-error ACK.
             d._count(frames_rejected=1)
@@ -175,6 +189,25 @@ class _Session:
         d.pool.record_wire_reply(self.tenant, len(out))
         d._count(bytes_out=len(out))
         return out
+
+    def _batched_solve(self, frame):
+        """SOLVE via the micro-batching window: same reply contract as
+        ``pool.admit_frame`` — a WEIGHTS frame, or a typed-error ACK for
+        protocol-level problems (the session survives either way)."""
+        import jax
+
+        d = self.dispatcher
+        if self.tenant not in d.pool:
+            return wire.AckFrame(False, f"unknown tenant {self.tenant!r}")
+        try:
+            w = jax.device_get(d.solve_batcher.solve(self.tenant, frame.sigma))
+        except KeyError:
+            # Raced a concurrent drop_tenant between the check and the sweep.
+            return wire.AckFrame(False, f"unknown tenant {self.tenant!r}")
+        except ValueError as e:
+            return wire.AckFrame(False, str(e))
+        return wire.WeightsFrame(w=w, sigma=frame.sigma,
+                                 wire_dtype=wire.dtype_name(w.dtype))
 
     def _reply(self, frame) -> bytes:
         out = wire.encode_frame(_bounded_ack(frame))
@@ -266,7 +299,16 @@ class FrameServer:
     """
 
     def __init__(self, pool, *, host: str = "127.0.0.1", port: int = 0,
-                 conn_timeout_s: float = 120.0, **dispatcher_kwargs):
+                 conn_timeout_s: float = 120.0,
+                 solve_window_s: float | None = None, **dispatcher_kwargs):
+        self._batcher = None
+        if solve_window_s is not None:
+            # Deferred import: fed.transport stays importable without the
+            # server package on the path (the pool is always injected).
+            from repro.server.batch import SolveBatcher
+
+            self._batcher = SolveBatcher(pool, window_s=solve_window_s)
+            dispatcher_kwargs.setdefault("solve_batcher", self._batcher)
         self.dispatcher = WireDispatcher(pool, **dispatcher_kwargs)
         # Per-connection idle budget: generous, because a client may spend
         # tens of seconds of *local* jax compile time between two frames of
@@ -291,6 +333,8 @@ class FrameServer:
     def start(self) -> "FrameServer":
         if self._accept_thread is not None:
             return self
+        if self._batcher is not None:
+            self._batcher.start()
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name=f"FrameServer-{self.port}",
             daemon=True)
@@ -358,6 +402,8 @@ class FrameServer:
         if self._accept_thread is not None:
             self._accept_thread.join(timeout=5.0)
             self._accept_thread = None
+        if self._batcher is not None:
+            self._batcher.stop()
 
     def __enter__(self) -> "FrameServer":
         return self.start()

@@ -28,6 +28,19 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def pow2_bucket(n: int, *, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor) — the jit-retrace bucket.
+
+    Shared by every path whose batch extent is workload-dependent (coalescer
+    flush ranks, sigma-grid lengths, cross-tenant solve batches): padding the
+    extent to the next power of two bounds the number of compiled programs at
+    log2(max) instead of one per distinct size, and every caller pads with
+    exact identities (zero update rows, repeated sigmas, identity factors) so
+    the bucketing is free of accuracy cost.
+    """
+    return max(floor, 1 << (max(int(n), 1) - 1).bit_length())
+
+
 def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
     pad = (-x.shape[axis]) % multiple
     if not pad:

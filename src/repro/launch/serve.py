@@ -41,6 +41,44 @@ from repro import configs
 from repro.models import model
 
 
+def enable_compilation_cache(path: str, *,
+                             min_compile_time_s: float = 0.0,
+                             min_entry_size_bytes: int = 0) -> bool:
+    """Point jax's persistent compilation cache at ``path``.
+
+    Server restarts otherwise pay every jit compile again — on the serving
+    path that lands squarely in the first requests' tail latencies. With the
+    cache on, a restarted server replays compiled executables from disk and
+    the cold-start tail collapses to dispatch cost. The threshold configs
+    are set to "cache everything" by default because fusion-serving programs
+    are small and numerous (per-(d, dtype, bucket) specializations).
+
+    Returns True when the cache was enabled; False (with a warning) on jax
+    versions exposing none of the expected config knobs — callers treat the
+    cache as best-effort, never a hard dependency.
+    """
+    enabled = False
+    try:
+        jax.config.update("jax_compilation_cache_dir", path)
+        enabled = True
+    except AttributeError:                      # pragma: no cover - old jax
+        import warnings
+
+        warnings.warn("jax has no jax_compilation_cache_dir config; "
+                      "persistent compilation cache disabled", stacklevel=2)
+        return False
+    # Optional tuning knobs — present on current jax, harmless to skip.
+    for key, val in (
+            ("jax_persistent_cache_min_compile_time_secs", min_compile_time_s),
+            ("jax_persistent_cache_min_entry_size_bytes",
+             min_entry_size_bytes)):
+        try:
+            jax.config.update(key, val)
+        except AttributeError:                  # pragma: no cover - old jax
+            pass
+    return enabled
+
+
 def serve(arch: str, *, reduced: bool = True, batch: int = 4,
           prompt_len: int = 32, gen_tokens: int = 32, seed: int = 0,
           greedy: bool = True) -> dict:
@@ -256,6 +294,7 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
                placement: str = "dense", coalesce_rank: int = 32,
                flush_staleness_s: float = 0.05,
                max_warm: int | None = None,
+               solve_window_s: float | None = None,
                dtype_preference: tuple[str, ...] | None = None) -> dict:
     """Run the out-of-process federation server: an ``EnginePool`` behind a
     ``fed.transport.FrameServer`` speaking the ``fed.wire`` binary protocol.
@@ -267,6 +306,11 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
     after the last upload still gets its WEIGHTS frame — or at ``timeout_s``.
     The returned report carries the pool ledger measured from actual encoded
     frame lengths plus a final server-side solve per tenant at ``sigma``.
+
+    ``solve_window_s`` puts a ``server.batch.SolveBatcher`` micro-batching
+    window on the SOLVE path: queries from concurrent sessions landing
+    within the window coalesce into one cross-tenant stacked sweep (a lone
+    request on an idle server still dispatches immediately).
     """
     from repro.fed import transport
     from repro.server import CoalescerPolicy, EnginePool
@@ -275,6 +319,8 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
                              max_staleness_s=flush_staleness_s)
     kw = ({"dtype_preference": dtype_preference}
           if dtype_preference is not None else {})
+    if solve_window_s is not None:
+        kw["solve_window_s"] = solve_window_s
     pool = EnginePool(max_warm=max_warm, default_coalesce=policy)
     with pool, transport.FrameServer(pool, port=port, placement=placement,
                                      **kw) as srv:
@@ -363,13 +409,28 @@ def main() -> None:
     ap.add_argument("--sigma", type=float, default=0.1,
                     help="with --listen: sigma of the final per-tenant "
                          "report solve")
+    ap.add_argument("--solve-window", type=float, default=None,
+                    metavar="SECONDS",
+                    help="with --listen: micro-batching window on the SOLVE "
+                         "path — concurrent queries landing within it "
+                         "coalesce into one cross-tenant stacked sweep; a "
+                         "lone request never waits")
+    ap.add_argument("--compilation-cache", type=str, default=None,
+                    metavar="PATH",
+                    help="persistent jax compilation cache directory: a "
+                         "restarted server replays compiled executables "
+                         "from disk instead of re-paying every jit compile "
+                         "in its first requests' tail latencies")
     args = ap.parse_args()
+    if args.compilation_cache:
+        enable_compilation_cache(args.compilation_cache)
     if args.mode == "fusion" and args.listen is not None:
         serve_wire(port=args.listen, expect_uploads=args.expect_uploads,
                    timeout_s=args.serve_timeout, sigma=args.sigma,
                    coalesce_rank=args.coalesce_rank,
                    flush_staleness_s=args.flush_staleness,
-                   max_warm=args.max_warm)
+                   max_warm=args.max_warm,
+                   solve_window_s=args.solve_window)
         return
     if args.mode == "fusion":
         res = serve_fusion(dim=args.dim, tenants=args.tenants,

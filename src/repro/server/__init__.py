@@ -16,21 +16,28 @@ lives behind a pluggable ``LinalgBackend``:
 engines with per-tenant backend placement (dense / sharded / measured-auto
 over one shared mesh), per-tenant coalescer policies with a background
 staleness-enforcing flusher, LRU eviction of cold tenants' factor caches,
-and a pool-level ``fed.comm`` byte ledger.
+admission control under memory pressure (``AdmissionError`` quotas on
+tenants, fused-stat residency, and retained clients), and a pool-level
+``fed.comm`` byte ledger. ``solve_many`` batches Phase-3 queries ACROSS
+tenants — per-tenant ``(L, h)`` snapshots stacked into one jitted sweep —
+and ``SolveBatcher`` (server.batch) puts a micro-batching window in front
+of it for the wire SOLVE path.
 
 ``core.fusion`` keeps the pure-function reference implementations both
 backends are tested against.
 """
-from repro.server.backends import DenseBackend, LinalgBackend
+from repro.server.backends import DenseBackend, LinalgBackend, solve_snapshot
+from repro.server.batch import SolveBatcher, solve_stacked
 from repro.server.cholesky import (chol_rank1, chol_update,
                                    chol_update_blocked, panel_transform,
                                    psd_update_vectors)
 from repro.server.distributed import ShardedBackend, ShardedFactor
 from repro.server.engine import CoalescerPolicy, FusionEngine
-from repro.server.pool import EnginePool, Tenant
+from repro.server.pool import AdmissionError, EnginePool, Tenant
 from repro.server.select import auto_backend, backend_threshold, prefer_sharded
 
 __all__ = ["FusionEngine", "CoalescerPolicy", "EnginePool", "Tenant",
+           "AdmissionError", "SolveBatcher", "solve_stacked", "solve_snapshot",
            "LinalgBackend", "DenseBackend",
            "ShardedBackend", "ShardedFactor", "auto_backend",
            "backend_threshold", "prefer_sharded", "chol_rank1", "chol_update",

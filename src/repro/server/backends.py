@@ -16,9 +16,12 @@ The protocol is intentionally small: ``fuse`` (fold a stats delta into the
 backend-held state), ``factor``/``solve``/``solve_batch`` (Phase 3),
 ``update`` (incremental factor maintenance under PSD deltas — a backend may
 decline by returning ``None``, in which case the engine evicts and lazily
-refactorizes), and ``spectral`` (the Corollary-1 eigh serving path, likewise
-optional). Everything the engine caches is opaque to it: a "factor" is
-whatever object the backend's ``factor`` returned.
+refactorizes), ``spectral`` (the Corollary-1 eigh serving path, likewise
+optional), and ``solve_operands`` (an immutable ``(L, h)`` snapshot for a
+lock-free / cross-tenant-stacked solve — a backend whose solve is not a pure
+function of two replicated arrays declines with ``None`` and keeps solving
+under the tenant lock). Everything the engine caches is opaque to it: a
+"factor" is whatever object the backend's ``factor`` returned.
 """
 from __future__ import annotations
 
@@ -28,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sufficient_stats import SuffStats, zeros_like_stats
+from repro.kernels.ops import pow2_bucket
 from repro.server.cholesky import chol_update, chol_update_blocked
 
 
@@ -74,6 +78,9 @@ class LinalgBackend(Protocol):
 
     def spectral(self, sigmas: Sequence[float]) -> jax.Array | None: ...
 
+    def solve_operands(self, factor: Any
+                       ) -> tuple[jax.Array, jax.Array] | None: ...
+
 
 # -- dense kernels (jitted once per shape) ----------------------------------
 
@@ -86,6 +93,17 @@ def _cold_factor(G, sigma):
 @jax.jit
 def _factor_solve(L, h):
     return jax.scipy.linalg.cho_solve((L, True), h)
+
+
+def solve_snapshot(L: jax.Array, h: jax.Array) -> jax.Array:
+    """Solve off a snapshotted ``(L, h)`` pair — outside any tenant lock.
+
+    This is the SAME jitted program ``DenseBackend.solve`` runs, so a solve
+    over operands snapshotted under a lock is bit-identical to the locked
+    solve at the same state; jax arrays are immutable, so the snapshot is a
+    reference grab, not a copy.
+    """
+    return _factor_solve(L, h)
 
 
 @jax.jit
@@ -190,10 +208,19 @@ class DenseBackend:
 
     def solve_batch(self, sigmas: Sequence[float]
                     ) -> tuple[list[jax.Array], jax.Array]:
+        keys = list(sigmas)
+        # Bucket the grid length to a power of two (same idiom as the
+        # update-rank bucketing below): tenants bring variable-length sigma
+        # grids, and an S-specialized program per distinct length would
+        # retrace without bound. The pad sigma repeats the last entry — a
+        # valid shift whose factor/solution are computed and sliced away;
+        # batched Cholesky factors each slice independently, so the kept
+        # entries are bit-identical to the unpadded sweep.
+        padded = keys + [keys[-1]] * (pow2_bucket(len(keys)) - len(keys))
         Ls, ws = _multi_sigma_factor_solve(
             self._stats.gram, self._stats.moment,
-            jnp.asarray(list(sigmas), self.dtype))
-        return [Ls[i] for i in range(Ls.shape[0])], ws
+            jnp.asarray(padded, self.dtype))
+        return [Ls[i] for i in range(len(keys))], ws[:len(keys)]
 
     def update(self, factor: jax.Array, update_vectors: jax.Array,
                sign: float) -> jax.Array:
@@ -202,7 +229,7 @@ class DenseBackend:
             # Rank-bucket to the next power of two so variable coalescer
             # flush ranks reuse a bounded set of compiled programs; zero
             # rows are exact identities in the up/downdate recurrence.
-            bucket = 1 << (r - 1).bit_length()
+            bucket = pow2_bucket(r)
             if bucket != r:
                 update_vectors = jnp.pad(update_vectors,
                                          ((0, bucket - r), (0, 0)))
@@ -218,3 +245,19 @@ class DenseBackend:
         lam, Q = self._eigh
         return _spectral_solve(lam, Q, self._stats.moment,
                                jnp.asarray(list(sigmas), self.dtype))
+
+    def solve_operands(self, factor: jax.Array
+                       ) -> tuple[jax.Array, jax.Array]:
+        """The (L, h) pair :func:`solve_snapshot` solves — both immutable, so
+        the caller can release its lock (or stack many tenants' pairs into
+        one cross-tenant sweep) and still get bit-identical weights."""
+        return factor, self._stats.moment
+
+    @property
+    def state_bytes(self) -> int:
+        """Resident bytes of the fused statistics (the irreducible tenant
+        footprint — factor caches are accounted separately and evictable)."""
+        n = self._stats.gram.nbytes + self._stats.moment.nbytes
+        if self._eigh is not None:
+            n += self._eigh[0].nbytes + self._eigh[1].nbytes
+        return n

@@ -59,6 +59,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.sufficient_stats import SuffStats, compute_stats
+from repro.kernels import ops as kernel_ops
 from repro.launch.sharding import FUSION_RULES, GRAM_AXES, ShardingRules
 from repro.server.cholesky import panel_transform
 
@@ -257,7 +258,7 @@ class ShardedBackend:
         # the jit cache without bound on the hot mutation path. Zero rows are
         # exact identities in the recurrence (x_k = 0 -> rho = L_kk, c = 1,
         # s = 0), so rank padding costs some flops but no accuracy.
-        bucket = 1 << (r - 1).bit_length()
+        bucket = kernel_ops.pow2_bucket(r)
         key = ("update", bucket, sign > 0)
         fn = self._jitted.get(key)
         if fn is None:
@@ -383,6 +384,18 @@ class ShardedBackend:
         ws = jnp.stack([self.solve(f) for f in factors])
         return factors, ws
 
+    def solve_operands(self, factor: ShardedFactor) -> None:
+        """Decline the snapshot path: a sharded solve is a shard_map over the
+        block-sharded L (or a CG re-solve against the live G), not a pure
+        function of two replicated arrays — the pool keeps solving sharded
+        tenants under their lock and excludes them from cross-tenant stacks."""
+        return None
+
+    @property
+    def state_bytes(self) -> int:
+        """Resident bytes of the fused (padded, block-sharded) statistics."""
+        return self._G.nbytes + self._h.nbytes
+
     # -- shard-local kernels ---------------------------------------------------
 
     def _local_chol(self, Gl, sigma):
@@ -468,8 +481,6 @@ class ShardedBackend:
             Xloc = jax.lax.dynamic_slice(X, (0, ro), (r, rl)).T   # (rl, r)
             Z = jnp.concatenate([strip, Xloc], axis=1)            # (rl, bs+r)
             if self.use_pallas:
-                from repro.kernels import ops as kernel_ops
-
                 Zn = kernel_ops.gemm_nt(jnp.zeros_like(Z), Z, T.T, alpha=1.0)
             else:
                 Zn = Z @ T
@@ -489,8 +500,6 @@ class ShardedBackend:
     def _trsm(self, Lkk, below):
         """Panel solve: X with X @ Lkk^T = below."""
         if self.use_pallas:
-            from repro.kernels import ops as kernel_ops
-
             # Re-express as a GEMM against the inverted bs x bs tile so the
             # panel rides the same Pallas MXU tile as the trailing update.
             # Lkk's diagonal is >= sqrt(sigma) (Prop 1), so the explicit
@@ -505,8 +514,6 @@ class ShardedBackend:
     def _syrk(self, Gl, a, bmat):
         """Trailing update Gl - a @ bmat^T on this shard's tile."""
         if self.use_pallas:
-            from repro.kernels import ops as kernel_ops
-
             return kernel_ops.gemm_nt(Gl, a, bmat, alpha=-1.0)
         return Gl - a @ bmat.T
 

@@ -459,6 +459,40 @@ class FusionEngine:
         """Cached per-sigma factors currently held (LRU accounting)."""
         return len(self._factors)
 
+    @property
+    def retained_clients(self) -> int:
+        """Ledger entries held for drop/restore/LOCO (active + dropped)."""
+        return len(self._clients) + len(self._dropped)
+
+    @staticmethod
+    def _factor_bytes(factor: Any) -> int:
+        if hasattr(factor, "nbytes"):           # dense: the L array itself
+            return int(factor.nbytes)
+        L = getattr(factor, "L", None)          # sharded: opaque wrapper
+        return int(L.nbytes) if L is not None else 0
+
+    @property
+    def resident_bytes(self) -> int:
+        """Device/host bytes this tenant pins right now.
+
+        Three tiers, from irreducible to evictable: the backend-held fused
+        statistics (``state_bytes`` — what admission control budgets
+        against), the per-client ledger retained for Thm-8 drop/restore and
+        LOCO, and the per-sigma factor cache (reclaimable via
+        :meth:`release_factors`, so a pool's LRU eviction shrinks this
+        number without touching correctness).
+        """
+        n = int(getattr(self.backend, "state_bytes", 0))
+        for s in self._clients.values():
+            n += s.gram.nbytes + s.moment.nbytes
+        for s, vectors in self._dropped.values():
+            n += s.gram.nbytes + s.moment.nbytes
+            if vectors is not None:
+                n += vectors.nbytes
+        for f in self._factors.values():
+            n += self._factor_bytes(f.factor)
+        return n
+
     # -- solving (Thm 3 / Prop 5) -------------------------------------------
 
     def factor(self, sigma: float):

@@ -50,10 +50,22 @@ import jax.numpy as jnp
 
 from repro.core.privacy import psd_repair
 from repro.core.sufficient_stats import SuffStats
+from repro.server.backends import solve_snapshot
 from repro.server.engine import CoalescerPolicy, FusionEngine
 from repro.server.select import prefer_sharded
 
 PLACEMENTS = ("dense", "sharded", "auto")
+
+
+class AdmissionError(ValueError):
+    """A tenant/client was refused for capacity, not correctness.
+
+    Subclasses ``ValueError`` deliberately: the wire path
+    (:meth:`EnginePool.admit_frame`) already converts ``ValueError`` into a
+    typed ``AckFrame(ok=False)``, so quota rejections reach remote clients
+    as protocol-level refusals — the session survives, nothing raises out
+    of the server loop.
+    """
 
 
 @dataclasses.dataclass
@@ -106,6 +118,9 @@ class EnginePool:
     def __init__(self, *, mesh=None, mesh_devices: int = 8,
                  threshold: float | None = None, table=None,
                  max_warm: int | None = None,
+                 max_tenants: int | None = None,
+                 stat_budget_bytes: int | None = None,
+                 max_clients_per_tenant: int | None = None,
                  default_coalesce: CoalescerPolicy | None = None):
         """Args:
           mesh: mesh shared by every sharded tenant; built lazily
@@ -115,6 +130,17 @@ class EnginePool:
             placement (explicit threshold beats the measured crossover).
           max_warm: LRU bound on tenants with resident factor caches
             (``None``: never evict).
+          max_tenants: hard cap on admitted tenants (:class:`AdmissionError`
+            past it).
+          stat_budget_bytes: admission budget on *fused-statistic* residency
+            (each tenant's irreducible ``backend.state_bytes`` — per-sigma
+            factor caches are evictable and governed by ``max_warm``
+            instead). A tenant whose (G, h) would push the pool past the
+            budget is refused at ``create_tenant``.
+          max_clients_per_tenant: cap on retained ledger entries (active +
+            dropped clients) per tenant — each retained client pins O(d^2)
+            for Thm-8 drop/restore; ingests under NEW client ids past the
+            cap are refused (anonymous and repeat-id ingests always pass).
           default_coalesce: coalescer policy for tenants that don't pass
             their own.
         """
@@ -125,8 +151,14 @@ class EnginePool:
         self._threshold = threshold
         self._table = table
         self.max_warm = max_warm
+        self.max_tenants = max_tenants
+        self.stat_budget_bytes = stat_budget_bytes
+        self.max_clients_per_tenant = max_clients_per_tenant
         self._default_coalesce = default_coalesce
         self.meshes_built = 0
+        self.batched_sweeps = 0     # cross-tenant stacked solve sweeps run
+        self.batched_solves = 0     # individual solves served by those sweeps
+        self.admission_rejections = 0
         self._flusher: threading.Thread | None = None
         self._stop = threading.Event()
 
@@ -237,6 +269,7 @@ class EnginePool:
                 eff_dtype = next(iter(unpacked.values())).gram.dtype
             elif stats is not None:
                 eff_dtype = stats.gram.dtype
+        self._check_admission(name, dim, eff_dtype)
         backend = self._place(dim, placement, eff_dtype, backend_kwargs or {})
         kwargs: dict = {"coalesce": coalesce if coalesce is not None
                         else self._default_coalesce}
@@ -269,6 +302,67 @@ class EnginePool:
                 raise ValueError(f"tenant {name!r} already exists")
             self._tenants[name] = t
         return engine
+
+    def _check_admission(self, name: str, dim: int, dtype) -> None:
+        """Capacity gate for a new tenant: tenant count and stat residency.
+
+        The byte check estimates the candidate's fused-stat footprint from
+        (dim, dtype) *before* any backend is built — a refusal allocates
+        nothing. Sharded backends pad ``dim`` up to the mesh tiling, so the
+        dense estimate is a floor; the budget is a pressure valve, not an
+        exact accountant.
+        """
+        with self._reg_lock:
+            n = len(self._tenants)
+        if self.max_tenants is not None and n >= self.max_tenants:
+            self.admission_rejections += 1
+            raise AdmissionError(
+                f"tenant {name!r} refused: pool at max_tenants="
+                f"{self.max_tenants}")
+        if self.stat_budget_bytes is not None:
+            itemsize = jnp.dtype(dtype if dtype is not None
+                                 else jnp.float32).itemsize
+            incoming = (dim * dim + dim) * itemsize
+            resident = self.resident_stat_bytes()
+            if resident + incoming > self.stat_budget_bytes:
+                self.admission_rejections += 1
+                raise AdmissionError(
+                    f"tenant {name!r} refused: fused stats would need "
+                    f"{incoming} bytes on top of {resident} resident "
+                    f"(stat_budget_bytes={self.stat_budget_bytes})")
+
+    def _check_client_quota(self, t: Tenant, client_id: Hashable) -> None:
+        """Refuse ingests that would retain a NEW ledger client past quota.
+
+        Called under ``t.lock``. Anonymous ingests (no id — nothing is
+        retained) and repeat ingests under an existing id (accumulation,
+        §VI-C installments) always pass; only a genuinely new retained entry
+        counts against ``max_clients_per_tenant``.
+        """
+        if self.max_clients_per_tenant is None or client_id is None:
+            return
+        eng = t.engine
+        if client_id in eng.client_ids or client_id in eng.dropped_ids:
+            return
+        if eng.retained_clients >= self.max_clients_per_tenant:
+            self.admission_rejections += 1
+            raise AdmissionError(
+                f"client {client_id!r} refused: tenant {t.name!r} at "
+                f"max_clients_per_tenant={self.max_clients_per_tenant}")
+
+    def resident_stat_bytes(self) -> int:
+        """Fused-statistic bytes pinned across all tenants (the admission
+        budget's denominator; excludes evictable factor caches)."""
+        return sum(int(getattr(t.engine.backend, "state_bytes", 0))
+                   for t in self._snapshot())
+
+    def resident_bytes(self) -> int:
+        """Total tenant residency: fused stats + ledgers + factor caches."""
+        total = 0
+        for t in self._snapshot():
+            with t.lock:
+                total += t.engine.resident_bytes
+        return total
 
     def _place(self, dim: int, placement: str, dtype, backend_kwargs):
         """Resolve a placement request to a backend (None = default dense)."""
@@ -362,7 +456,7 @@ class EnginePool:
                     self._locked(name,
                                  lambda e: e.ingest(packed.unpack(),
                                                     client_id=cid),
-                                 wire_bytes=encoded_len)
+                                 wire_bytes=encoded_len, quota_client=cid)
                 return wire.AckFrame(True, f"ingested d={packed.dim} "
                                            f"count={int(packed.count)}")
             if isinstance(frame, wire.DeltaRowsFrame):
@@ -376,7 +470,7 @@ class EnginePool:
                     cid = frame.client_id or None
                     self._locked(name,
                                  lambda e: e.ingest_rows(A, b, client_id=cid),
-                                 wire_bytes=encoded_len)
+                                 wire_bytes=encoded_len, quota_client=cid)
                 return wire.AckFrame(True, f"ingested {A.shape[0]} rows")
             if isinstance(frame, wire.ControlFrame):
                 if name not in self:
@@ -488,7 +582,7 @@ class EnginePool:
         w~ = R v) — what a WEIGHTS frame carries. Identical to ``solve`` for
         unsketched tenants."""
         t = self.tenant(name)
-        w = self._locked(name, lambda e: e.solve(sigma), warms=True)
+        w = self.solve(name, sigma)
         if t.projection is not None:
             w = self._lift(t, w)
         return w
@@ -504,9 +598,14 @@ class EnginePool:
 
     def _locked(self, name: str, fn: Callable[[FusionEngine], Any], *,
                 drains: bool = True, floats: int = 0, wire_bytes: int = 0,
-                warms: bool = False) -> Any:
+                warms: bool = False, quota_client: Hashable | None = None
+                ) -> Any:
         t = self.tenant(name)
         with t.lock:
+            if quota_client is not None:
+                # Before any accounting: a refused ingest must not count
+                # bytes it never moved.
+                self._check_client_quota(t, quota_client)
             if drains:
                 # Any queued delta is about to be folded in (engine reads and
                 # sync mutations drain) — record the staleness it reached.
@@ -532,25 +631,27 @@ class EnginePool:
     def ingest(self, name: str, stats: SuffStats,
                client_id: Hashable | None = None, **kw) -> None:
         self._locked(name, lambda e: e.ingest(stats, client_id=client_id, **kw),
-                     floats=self._delta_floats(stats))
+                     floats=self._delta_floats(stats), quota_client=client_id)
 
     def ingest_async(self, name: str, stats: SuffStats,
                      client_id: Hashable | None = None, **kw) -> None:
         self._locked(name,
                      lambda e: e.ingest_async(stats, client_id=client_id, **kw),
-                     drains=False, floats=self._delta_floats(stats))
+                     drains=False, floats=self._delta_floats(stats),
+                     quota_client=client_id)
 
     def ingest_rows(self, name: str, A: jax.Array, b: jax.Array,
                     client_id: Hashable | None = None) -> SuffStats:
         return self._locked(
             name, lambda e: e.ingest_rows(A, b, client_id=client_id),
-            floats=A.shape[0] * (A.shape[1] + 1))
+            floats=A.shape[0] * (A.shape[1] + 1), quota_client=client_id)
 
     def ingest_rows_async(self, name: str, A: jax.Array, b: jax.Array,
                           client_id: Hashable | None = None) -> SuffStats:
         return self._locked(
             name, lambda e: e.ingest_rows_async(A, b, client_id=client_id),
-            drains=False, floats=A.shape[0] * (A.shape[1] + 1))
+            drains=False, floats=A.shape[0] * (A.shape[1] + 1),
+            quota_client=client_id)
 
     def drop(self, name: str, client_id: Hashable) -> None:
         self._locked(name, lambda e: e.drop(client_id))
@@ -564,8 +665,83 @@ class EnginePool:
     def stats(self, name: str) -> SuffStats:
         return self._locked(name, lambda e: e.stats)
 
+    def _snapshot_factor(self, name: str, sigma: float):
+        """Under the tenant lock: drain, factor (cached), snapshot operands.
+
+        Returns ``(w, None)`` when the backend declines the snapshot and the
+        solve ran under the lock (e.g. sharded block factors — their solve
+        is a mesh collective, not a pure function of two replicated arrays),
+        else ``(None, (L, h))`` for a lock-free solve by the caller.
+        """
+        t = self.tenant(name)
+        with t.lock:
+            age = t.engine.oldest_pending_age_s
+            if age > 0.0:
+                t.max_flush_age_s = max(t.max_flush_age_s, age)
+            t.last_used = time.monotonic()
+            factor = t.engine.factor(sigma)
+            ops_fn = getattr(t.engine.backend, "solve_operands", None)
+            ops = ops_fn(factor) if ops_fn is not None else None
+            if ops is None:
+                return t.engine.backend.solve(factor), None
+        return None, ops
+
     def solve(self, name: str, sigma: float) -> jax.Array:
-        return self._locked(name, lambda e: e.solve(sigma), warms=True)
+        """Phase-3 solve holding the tenant lock only for drain + factor +
+        snapshot: the triangular solves run OUTSIDE the lock off immutable
+        ``(L, h)`` (same jitted program — bit-identical weights), so a long
+        sweep never serializes concurrent ingests behind it."""
+        w, ops = self._snapshot_factor(name, sigma)
+        if ops is not None:
+            w = solve_snapshot(*ops)
+        self._maybe_evict()
+        return w
+
+    def solve_many(self, requests: Sequence[tuple[str, float]], *,
+                   lifted: bool = False) -> list[jax.Array]:
+        """Cross-tenant batched Phase 3: many (tenant, sigma) solves, ONE
+        stacked sweep per (d, dtype) bucket.
+
+        Per request, the tenant's lock is held only to drain its queue and
+        snapshot the cached factor's ``(L, h)`` (cold factorization if
+        needed — same path as ``solve``); the snapshots are then bucketed by
+        (dimension, dtype) and each bucket runs as one
+        :func:`~repro.server.batch.solve_stacked` jit dispatch with NO locks
+        held, so T tenants cost one dispatch instead of T. Lanes are
+        bit-identical to each tenant's lone ``solve`` at the same logical
+        state (pinned by tests). Backends that decline the snapshot
+        (sharded) solve under their lock and skip the stack. ``lifted``
+        applies each tenant's §IV-F lift (Prop 3) like ``solve_lifted``.
+        """
+        reqs = [(name, float(sigma)) for name, sigma in requests]
+        results: list[jax.Array | None] = [None] * len(reqs)
+        stacked: list[tuple[int, jax.Array, jax.Array]] = []
+        for i, (name, sigma) in enumerate(reqs):
+            w, ops = self._snapshot_factor(name, sigma)
+            if ops is None:
+                results[i] = w
+            else:
+                stacked.append((i, ops[0], ops[1]))
+        if stacked:
+            from repro.server.batch import solve_stacked
+
+            buckets: dict[tuple, list[tuple[int, jax.Array, jax.Array]]] = {}
+            for i, L, h in stacked:
+                buckets.setdefault((L.shape[-1], str(jnp.dtype(L.dtype))),
+                                   []).append((i, L, h))
+            for entries in buckets.values():
+                ws = solve_stacked([(L, h) for _, L, h in entries])
+                for (i, _, _), w in zip(entries, ws):
+                    results[i] = w
+                self.batched_sweeps += 1
+                self.batched_solves += len(entries)
+        if lifted:
+            for i, (name, _) in enumerate(reqs):
+                t = self.tenant(name)
+                if t.projection is not None:
+                    results[i] = self._lift(t, results[i])
+        self._maybe_evict()
+        return results
 
     def solve_batch(self, name: str, sigmas: Sequence[float], *,
                     method: str = "auto") -> jax.Array:
@@ -573,7 +749,8 @@ class EnginePool:
                             warms=True)
 
     def predict(self, name: str, A: jax.Array, sigma: float) -> jax.Array:
-        return self._locked(name, lambda e: e.predict(A, sigma), warms=True)
+        """Hot-path predictions; rides the lock-snapshot ``solve``."""
+        return A @ self.solve(name, sigma)
 
     def predict_batch(self, name: str, A: jax.Array,
                       sigmas: Sequence[float]) -> jax.Array:
@@ -757,6 +934,10 @@ class EnginePool:
                 (t.max_flush_age_s for t in snapshot), default=0.0),
             "factor_evictions": sum(t.factor_evictions for t in snapshot),
             "psd_repairs": sum(t.psd_repairs for t in snapshot),
+            "batched_sweeps": self.batched_sweeps,
+            "batched_solves": self.batched_solves,
+            "admission_rejections": self.admission_rejections,
+            "resident_stat_bytes": self.resident_stat_bytes(),
             "warm_tenants": len(self.warm_tenants()),
             "per_tenant": {t.name: t.summary() for t in snapshot},
         }

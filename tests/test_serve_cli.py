@@ -78,3 +78,22 @@ def test_model_mode_still_requires_arch(monkeypatch, capsys):
     monkeypatch.setattr(sys, "argv", ["serve.py", "--mode", "model"])
     with pytest.raises(SystemExit):
         serve.main()
+
+
+def test_compilation_cache_flag(monkeypatch, capsys, tmp_path):
+    """--compilation-cache points jax's persistent cache at the path (and
+    the serving run still completes exactly); the helper reports whether
+    the knob exists on this jax."""
+    import jax
+
+    cache_dir = tmp_path / "jit-cache"
+    try:
+        out = _run_cli(monkeypatch, capsys,
+                       ["--compilation-cache", str(cache_dir)])
+        assert "[serve_fusion]" in out
+        assert jax.config.jax_compilation_cache_dir == str(cache_dir)
+        assert serve.enable_compilation_cache(str(cache_dir)) is True
+    finally:
+        # tmp_path is torn down after the test; don't leave jax pointed at
+        # a vanished cache dir for the rest of the session.
+        jax.config.update("jax_compilation_cache_dir", None)
