@@ -8,10 +8,12 @@ PY ?= python
 # payload ledger), the engine-pool smoke (tenant-count scaling +
 # background-flusher staleness bound), the wire-codec smoke
 # (bytes-on-wire vs the Thm-4/§IV-F formulas + loopback admission path),
-# and the QPS smoke (closed-loop batched-vs-unbatched serving: stacked
+# the QPS smoke (closed-loop batched-vs-unbatched serving: stacked
 # sweep beats sequential per-tenant solves on wave p99 at T=32, zero
-# bitwise exactness violations) so experiments/repro/ tracks serving,
-# write-path, and wire perf per PR.
+# bitwise exactness violations), and the sketch smoke (fused
+# featurize->Gram ingest vs the unfused XLA reference, §IV-F wire-byte
+# closed forms, mixed dense/sketched solve_many bucketing) so
+# experiments/repro/ tracks serving, write-path, and wire perf per PR.
 .PHONY: tier1
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -21,6 +23,7 @@ tier1:
 	PYTHONPATH=src $(PY) benchmarks/pool_bench.py --smoke
 	PYTHONPATH=src $(PY) benchmarks/wire_bench.py --smoke
 	PYTHONPATH=src $(PY) benchmarks/qps_bench.py --smoke
+	PYTHONPATH=src $(PY) benchmarks/sketch_bench.py --smoke
 
 # Standalone wire gate: the codec suite (golden frames, roundtrip fuzz,
 # mutation fuzz) plus the out-of-process federation e2e (loopback, TCP,
@@ -63,6 +66,16 @@ sharded-smoke:
 qps-smoke:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_batch_solve.py
 	PYTHONPATH=src $(PY) benchmarks/qps_bench.py --smoke
+
+# Standalone sketch/RFF gate: the feature-tenant e2e suite (wire-byte
+# formulas, bit-identity vs cold references, RFF kernel-ridge oracle,
+# negotiation rejections) + fused-kernel numerics, then the sketch bench
+# smoke (fused-vs-unfused ingest, HBM ledger, solve_many bucketing).
+.PHONY: sketch-smoke
+sketch-smoke:
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_sketch_kernels.py \
+		tests/test_feature_tenants.py
+	PYTHONPATH=src $(PY) benchmarks/sketch_bench.py --smoke
 
 .PHONY: test
 test:

@@ -1,0 +1,275 @@
+"""Fused featurize->Gram ingest bench: §IV-F sketch & RFF tenants end to end.
+
+Three surfaces, matching the feature-tenant serving path layer by layer:
+
+  * **Kernel** — the fused Pallas ingest (``kernels.ops.sketch_gram`` /
+    ``rff_gram``: featurize and accumulate (G, h) in one pass, the (n x m)
+    feature block T never materializing in HBM) versus the unfused XLA
+    reference (``core.projection.projected_stats`` / ``core.rff.rff_stats``:
+    featurize to T, then a second Gram pass over it). Both are timed across
+    an (n, d, m) grid, but the timings carry NO claim: on this CPU host the
+    Pallas kernel runs in interpret mode (the kernel body executes in
+    Python), so wall-clock comparisons say nothing about a real TPU backend.
+    What IS claimed is (a) numerical agreement at f32-accumulation tolerance
+    for every grid cell, and (b) the *analytic* HBM-traffic ledger: the
+    fused kernel provably skips the T write + T re-read, saving exactly
+    2 * n * m * 4 bytes per ingest, a fraction that grows with n.
+
+  * **Wire** — the §IV-F upload-compression contract. For every grid cell
+    the encoded PROJ / RFF frame must be byte-for-byte the closed form:
+    OVERHEAD + meta + (m(m+1)/2 + m) * itemsize — the Prop-2 float count,
+    not one float more. Claims gate on exact equality, f32 and bf16.
+
+  * **Pool** — a mixed dense/sketched wave through ``EnginePool.solve_many``.
+    Sketched tenants solve in m-space, so with dense tenants of dim m the
+    whole wave must coalesce into ONE stacked sweep (bucket count +1), and
+    the sweep must return bit-identical weights to each tenant's lone
+    ``solve``; sketched tenants' lifted weights must match a cold
+    ``core``-only reference (sketch stats -> solve_ridge -> R v). Wave
+    timings (sequential vs stacked) are recorded claim-free, same CPU
+    honesty as above.
+
+Usage: PYTHONPATH=src:. python benchmarks/sketch_bench.py [--smoke]
+Emits a CSV + BENCH JSON under experiments/repro/ and prints a BENCH line.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/sketch_bench.py`
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import common
+from repro import core
+from repro.core import fusion
+from repro.core.features import FeatureMap
+from repro.fed import wire
+from repro.kernels.ops import pack_lower, tri_len
+from repro.server import EnginePool
+
+SIGMA = 0.1
+F32 = 4  # itemsize of the accumulation/wire dtype the ledger counts in
+
+# (n, d, m): client rows x raw dim x feature dim. m <= d so every cell is
+# valid for BOTH maps (sketch requires it; RFF merely allows wider).
+GRID = [(256, 32, 8), (512, 64, 16), (1024, 128, 32)]
+GRID_SMOKE = [(128, 16, 8)]
+
+
+def _time(fn, *args, reps: int = 3):
+    """Mean wall-clock microseconds after one untimed compile/warmup call."""
+    out = fn(*args)
+    jax.block_until_ready((out.gram, out.moment))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready((r.gram, r.moment))
+        ts.append(time.perf_counter() - t0)
+    return float(np.mean(ts) * 1e6), out
+
+
+def _rows(seed: int, n: int, d: int):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return jax.random.normal(k1, (n, d)), jax.random.normal(k2, (n,))
+
+
+def _traffic_bytes(n: int, d: int, m: int, *, fused: bool,
+                   kind: str) -> int:
+    """Analytic HBM ledger for one ingest, f32 everywhere.
+
+    Both paths read the raw rows A (n*d), the map (d*m for R; d*m + m for
+    the RFF (W, c)), and write (G, h) ((m^2 + m)). The unfused path
+    additionally writes the feature block T (n*m) and reads it back for the
+    Gram pass — exactly the traffic the fused kernel's VMEM-resident T
+    avoids.
+    """
+    map_elems = d * m + (m if kind == "rff" else 0)
+    base = n * d + map_elems + n + (m * m + m)
+    if not fused:
+        base += 2 * n * m
+    return base * F32
+
+
+def _grid_cells(cells, claims: common.Claims) -> list[dict]:
+    rows = []
+    for i, (n, d, m) in enumerate(cells):
+        A, b = _rows(10 + i, n, d)
+        for kind in ("sketch", "rff"):
+            fm = FeatureMap(kind, seed=40 + i, d_orig=d, m=m)
+            us_fused, s_fused = _time(
+                lambda A, b: fm.stats(A, b, use_pallas=True), A, b)
+            us_ref, s_ref = _time(lambda A, b: fm.stats(A, b), A, b)
+
+            # f32 accumulation over n rows: scale tolerance with the Gram's
+            # own magnitude (entries are O(n) for standard-normal rows).
+            scale = float(np.abs(np.asarray(s_ref.gram)).max())
+            err_g = float(np.abs(np.asarray(s_fused.gram) -
+                                 np.asarray(s_ref.gram)).max())
+            err_h = float(np.abs(np.asarray(s_fused.moment) -
+                                 np.asarray(s_ref.moment)).max())
+            tol = 5e-6 * max(scale, 1.0)
+            claims.check(
+                f"{kind}_fused_matches_ref_n{n}_d{d}_m{m}",
+                err_g <= tol and err_h <= tol,
+                f"max|dG|={err_g:.2e} max|dh|={err_h:.2e} tol={tol:.2e}")
+
+            fb = _traffic_bytes(n, d, m, fused=True, kind=kind)
+            ub = _traffic_bytes(n, d, m, fused=False, kind=kind)
+            claims.check(
+                f"{kind}_hbm_ledger_n{n}_d{d}_m{m}",
+                ub - fb == 2 * n * m * F32,
+                f"unfused {ub}B - fused {fb}B == 2*n*m*4 = {2 * n * m * F32}B "
+                f"({(ub - fb) / ub:.1%} of unfused traffic)")
+
+            nb = _wire_bytes(fm, s_fused, claims)
+            rows.append({
+                "name": f"{kind}_n{n}_d{d}_m{m}", "kind": kind,
+                "n": n, "d": d, "m": m,
+                "fused_us": us_fused, "unfused_us": us_ref,
+                "fused_hbm_bytes": fb, "unfused_hbm_bytes": ub,
+                "hbm_saved_bytes": ub - fb,
+                "wire_bytes_f32": nb,
+                "upload_floats": fm.upload_floats(),
+                "dense_upload_floats": tri_len(d) + d,
+            })
+    return rows
+
+
+def _wire_bytes(fm: FeatureMap, stats, claims: common.Claims) -> int:
+    """Encode the cell's stats as its wire frame; pin the closed form."""
+    tri = np.asarray(pack_lower(stats.gram))
+    h = np.asarray(stats.moment)
+    count = int(stats.count)
+    nb = {}
+    for dt in ("f32", "bf16"):
+        if fm.kind == "sketch":
+            frame = wire.ProjectedFrame(
+                tri=tri, moment=h, count=count, dim=fm.m, d_orig=fm.d_orig,
+                seed=fm.seed, rhash=fm.fhash, client_id="bench",
+                wire_dtype=dt)
+            want = wire.projected_frame_nbytes(fm.m, dt, client_id="bench")
+            meta = 4 + 4 + 8 + 8 + 8 + 2 + len(b"bench")
+        else:
+            frame = wire.RFFFrame(
+                tri=tri, moment=h, count=count, dim=fm.m, d_orig=fm.d_orig,
+                seed=fm.seed, fhash=fm.fhash, lengthscale=fm.lengthscale,
+                client_id="bench", wire_dtype=dt)
+            want = wire.rff_frame_nbytes(fm.m, dt, client_id="bench")
+            meta = 4 + 4 + 8 + 8 + 8 + 8 + 2 + len(b"bench")
+        got = len(wire.encode_frame(frame, dtype=dt))
+        closed = (wire.OVERHEAD_BYTES + meta +
+                  fm.upload_floats() * wire.wire_itemsize(dt))
+        claims.check(
+            f"{fm.kind}_wire_bytes_{dt}_m{fm.m}",
+            got == want == closed,
+            f"encoded {got}B == helper {want}B == OVERHEAD+meta+"
+            f"(m(m+1)/2+m)*{wire.wire_itemsize(dt)} = {closed}B")
+        nb[dt] = got
+    return nb["f32"]
+
+
+def _mixed_wave(claims: common.Claims, *, dense_t: int, sketch_t: int,
+                d_orig: int, m: int) -> dict:
+    """Mixed dense/sketched pool: one solve_many wave, one stacked sweep."""
+    pool = EnginePool()
+    fmaps: dict[str, FeatureMap] = {}
+    cold: dict[str, tuple] = {}
+    for t in range(dense_t):
+        A, b = _rows(500 + t, 4 * m, m)
+        pool.create_tenant(f"dense{t}", clients=[core.compute_stats(A, b)],
+                           placement="dense")
+    for t in range(sketch_t):
+        fm = FeatureMap("sketch", seed=600 + t, d_orig=d_orig, m=m)
+        A, b = _rows(700 + t, 4 * d_orig, d_orig)
+        pool.create_tenant(f"sk{t}", payloads=None,
+                           clients=[fm.stats(A, b, use_pallas=True)],
+                           placement="dense", features=fm)
+        fmaps[f"sk{t}"] = fm
+        cold[f"sk{t}"] = (A, b)
+    names = pool.tenant_names
+    reqs = [(nm, SIGMA) for nm in names]
+
+    lone = {nm: np.asarray(pool.solve(nm, SIGMA)) for nm in names}
+    t0 = time.perf_counter()
+    for nm in names:
+        jax.block_until_ready(pool.solve(nm, SIGMA))
+    seq_us = (time.perf_counter() - t0) * 1e6
+
+    before = pool.batched_sweeps
+    ws = pool.solve_many(reqs)
+    jax.block_until_ready(ws[-1])
+    t0 = time.perf_counter()
+    ws = pool.solve_many(reqs)
+    jax.block_until_ready(ws[-1])
+    wave_us = (time.perf_counter() - t0) * 1e6
+    sweeps = pool.batched_sweeps - before
+
+    claims.check(
+        "mixed_wave_one_bucket", sweeps == 2,
+        f"{dense_t} dense (dim {m}) + {sketch_t} sketched (m={m}) waves "
+        f"each took exactly one stacked sweep ({sweeps} sweeps / 2 waves)")
+    bad = sum(0 if (np.asarray(w) == lone[nm]).all() else 1
+              for nm, w in zip(names, ws))
+    claims.check("mixed_wave_bitwise_exact", bad == 0,
+                 f"{bad}/{len(names)} solve_many weights differ from lone "
+                 f"solves")
+
+    worst = 0.0
+    for nm, fm in fmaps.items():
+        A, b = cold[nm]
+        ref = fm.lift(fusion.solve_ridge(fm.stats(A, b), SIGMA))
+        got = np.asarray(pool.solve_lifted(nm, SIGMA))
+        worst = max(worst, float(np.abs(got - np.asarray(ref)).max() /
+                                 max(np.abs(np.asarray(ref)).max(), 1e-12)))
+    claims.check("sketched_cold_ref_exact", worst <= 1e-4,
+                 f"served lifted weights vs cold core reference: "
+                 f"max rel err {worst:.2e} <= 1e-4")
+    pool.close()
+    return {"name": f"wave_dense{dense_t}_sk{sketch_t}_m{m}",
+            "tenants": dense_t + sketch_t, "solve_dim": m,
+            "sequential_us": seq_us, "stacked_us": wave_us,
+            "stacked_sweeps_per_wave": sweeps / 2}
+
+
+def run(smoke: bool = False) -> list[dict]:
+    claims = common.Claims("sketch")
+    cells = GRID_SMOKE if smoke else GRID
+    rows = _grid_cells(cells, claims)
+    rows.append(_mixed_wave(claims, dense_t=2 if smoke else 4,
+                            sketch_t=2 if smoke else 4,
+                            d_orig=24, m=8))
+
+    common.write_csv("sketch_bench", rows)
+    bench = {"smoke": smoke, "sigma": SIGMA, "grid": cells, "rows": rows,
+             "claims": claims.rows(),
+             "note": "timings are CPU interpret-mode, recorded claim-free; "
+                     "claims cover numerics, wire bytes, HBM ledger, "
+                     "solve_many bucketing"}
+    common.write_json("sketch_bench", bench)
+    print("BENCH " + json.dumps({
+        r["name"]: {k: round(v, 1) for k, v in r.items()
+                    if k.endswith("_us")} |
+                   ({"hbm_saved_bytes": r["hbm_saved_bytes"]}
+                    if "hbm_saved_bytes" in r else {})
+        for r in rows}))
+    return claims.rows()
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single small grid cell, 2+2 tenant wave")
+    args = ap.parse_args()
+    failed = [c for c in run(smoke=args.smoke) if not c["pass"]]
+    sys.exit(1 if failed else 0)

@@ -36,6 +36,7 @@ from repro.core.projection import (
     upload_floats,
 )
 from repro.core.rff import RFFMap, kernel_gram_exact, make_rff, rff_stats
+from repro.core.features import FeatureMap, feature_hash
 from repro.core.equilibrium import (
     equilibrium_residual,
     residual_bound,
@@ -53,6 +54,7 @@ __all__ = [
     "error_bound", "lift", "make_projection", "project_data", "projected_stats",
     "upload_floats",
     "RFFMap", "kernel_gram_exact", "make_rff", "rff_stats",
+    "FeatureMap", "feature_hash",
     "equilibrium_residual", "residual_bound", "solve_cg",
     "ProbeResult", "one_shot_probe", "probe_mse", "solve_head",
 ]

@@ -1,9 +1,13 @@
-"""Random Fourier features — the paper's kernel extension (§VI-C, [10]).
+"""Random Fourier features — the paper's §IV-F kernel-extension path [10].
 
 phi(x) = sqrt(2/D) cos(W x + c),  W_ij ~ N(0, 1/ell^2), c ~ U[0, 2pi)
 approximates the RBF kernel k(x,y) = exp(-||x-y||^2 / (2 ell^2)). One-shot
 fusion then runs verbatim on phi(A): communication O(D^2) where D is the
 feature count — nonlinear decision functions from pure linear algebra.
+This is the random-feature sibling of ``projection.py``'s Gaussian sketch:
+both instantiate §IV-F's m ≪ d upload reduction, and the Prop-2/Prop-3
+accounting there (``upload_floats``, ``error_bound``) prices this path's
+D(D+1)/2 + D wire cost identically with m = D.
 """
 from __future__ import annotations
 

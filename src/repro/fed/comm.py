@@ -195,7 +195,8 @@ def sharded_oneshot_record(d: int, num_clients: int,
     )
 
 
-def aggregate_records(records: Mapping[str, CommRecord]) -> dict:
+def aggregate_records(records: Mapping[str, CommRecord], *,
+                      kinds: Mapping[str, str] | None = None) -> dict:
     """Roll a set of per-tenant CommRecords up into one pool-level ledger.
 
     Tenants are independent fusion problems, so bytes simply add; the rollup
@@ -204,9 +205,16 @@ def aggregate_records(records: Mapping[str, CommRecord]) -> dict:
     is reported separately from client-upload bytes — they move on different
     networks (DCN uploads vs ICI collectives) and adding them would hide
     exactly the distinction Thm 4 is about.
+
+    ``kinds`` maps tenant name -> tenant kind ("dense" / "sketched" /
+    "rff"); when given, the rollup adds a ``by_kind`` split so the §IV-F
+    O(d²) -> O(m²) upload reduction is directly readable: a pool mixing
+    dense and sketched tenants shows the dense kind carrying almost all the
+    bytes. Names absent from ``kinds`` count as "dense".
     """
     per_tenant = {}
     upload_bytes = cross_shard = 0
+    by_kind: dict[str, dict] = {}
     for name, rec in records.items():
         entry = {"upload_download_bytes": rec.total_bytes,
                  "analytic_bytes": rec.analytic_total_bytes,
@@ -215,14 +223,26 @@ def aggregate_records(records: Mapping[str, CommRecord]) -> dict:
         if isinstance(rec, ShardedCommRecord):
             entry["cross_shard_bytes"] = rec.cross_shard_bytes
             cross_shard += rec.cross_shard_bytes
+        if kinds is not None:
+            kind = kinds.get(name, "dense")
+            entry["kind"] = kind
+            k = by_kind.setdefault(kind, {"tenants": 0,
+                                          "upload_download_bytes": 0,
+                                          "analytic_bytes": 0})
+            k["tenants"] += 1
+            k["upload_download_bytes"] += rec.total_bytes
+            k["analytic_bytes"] += rec.analytic_total_bytes
         per_tenant[name] = entry
-    return {
+    out = {
         "tenants": len(per_tenant),
         "upload_download_bytes": upload_bytes,
         "cross_shard_bytes": cross_shard,
         "total_mb": upload_bytes / 2**20,
         "per_tenant": per_tenant,
     }
+    if kinds is not None:
+        out["by_kind"] = by_kind
+    return out
 
 
 def fedavg_comm(d: int, num_clients: int, rounds: int) -> CommRecord:

@@ -160,8 +160,8 @@ class _Session:
                 return self._reply(wire.AckFrame(False, str(e)))
             return self._reply(wire.Hello(self.tenant, (self.dtype,)))
         if not isinstance(frame, (wire.StatsFrame, wire.ProjectedFrame,
-                                  wire.DeltaRowsFrame, wire.ControlFrame,
-                                  wire.SolveFrame)):
+                                  wire.RFFFrame, wire.DeltaRowsFrame,
+                                  wire.ControlFrame, wire.SolveFrame)):
             # Well-formed but server-bound-only frame (WEIGHTS/ACK): a typed
             # protocol rejection, not a thread-killing dispatch error.
             d._count(frames_rejected=1)
@@ -183,7 +183,7 @@ class _Session:
         if isinstance(reply, wire.AckFrame) and not reply.ok:
             d._count(frames_rejected=1)
         elif isinstance(frame, (wire.StatsFrame, wire.ProjectedFrame,
-                                wire.DeltaRowsFrame)):
+                                wire.RFFFrame, wire.DeltaRowsFrame)):
             d._count(uploads_admitted=1)
         out = wire.encode_frame(_bounded_ack(reply))
         d.pool.record_wire_reply(self.tenant, len(out))
@@ -462,6 +462,17 @@ class FrameClient:
             tri=np.asarray(packed.tri), moment=np.asarray(packed.moment),
             count=int(packed.count), dim=int(packed.dim), d_orig=d_orig,
             seed=seed, rhash=rhash, client_id=client_id)
+        return self._expect_ack(frame, upload=True)
+
+    def upload_rff(self, packed, *, d_orig: int, seed: int, fhash: int,
+                   lengthscale: float = 1.0,
+                   client_id: str = "") -> wire.AckFrame:
+        """§IV-F RFF upload: D-dim packed stats plus the map's identity."""
+        frame = wire.RFFFrame(
+            tri=np.asarray(packed.tri), moment=np.asarray(packed.moment),
+            count=int(packed.count), dim=int(packed.dim), d_orig=d_orig,
+            seed=seed, fhash=fhash, lengthscale=lengthscale,
+            client_id=client_id)
         return self._expect_ack(frame, upload=True)
 
     def stream_rows(self, A, b, client_id: str = "") -> wire.AckFrame:

@@ -34,6 +34,8 @@ frame                   type  paper surface
 :class:`SolveFrame`     0x06  Phase-3 query: weights at sigma
 :class:`WeightsFrame`   0x07  server download: the fused ridge solution
 :class:`AckFrame`       0x08  server status reply
+:class:`RFFFrame`       0x09  §IV-F RFF upload: D-dim stats + (W/c-seed,
+                              lengthscale, map-hash)
 ======================  ====  ==================================================
 
 Dtype negotiation: a client *offers* a set of scalar encodings (f32 / f64 /
@@ -92,6 +94,7 @@ MAX_COUNT = 2**31 - 1
 
 FT_HELLO, FT_STATS, FT_PROJ, FT_DELTA = 0x01, 0x02, 0x03, 0x04
 FT_CONTROL, FT_SOLVE, FT_WEIGHTS, FT_ACK = 0x05, 0x06, 0x07, 0x08
+FT_RFF = 0x09
 
 # -- dtype registry ----------------------------------------------------------
 
@@ -280,6 +283,44 @@ class ProjectedFrame:
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
+class RFFFrame:
+    """§IV-F RFF upload: D-dim feature-space stats plus the map's identity.
+
+    Payload: u32 D, u32 d_orig, u64 seed, u64 fhash, f64 lengthscale,
+    u64 count, u16 id_len, client id utf-8, tri (D(D+1)/2 scalars),
+    moment (D scalars).
+
+    The random-feature sibling of :class:`ProjectedFrame`: ``seed`` and
+    ``lengthscale`` regenerate the shared (W, c) on the server, ``fhash``
+    fingerprints the actual array bytes (``core.feature_hash``) so version
+    skew between the two derivations is a typed rejection. Unlike the JL
+    sketch, D may EXCEED d_orig — more random features only improve the
+    kernel approximation — so decode does not enforce m <= d here.
+    """
+
+    tri: np.ndarray
+    moment: np.ndarray
+    count: int
+    dim: int                 # D, the feature count
+    d_orig: int              # original feature dimension
+    seed: int
+    fhash: int
+    lengthscale: float = 1.0
+    client_id: str = ""
+    wire_dtype: str = "f32"
+
+    def to_packed(self):
+        import jax.numpy as jnp
+
+        from repro.fed.protocol import PackedStats
+
+        return PackedStats(tri=jnp.asarray(self.tri),
+                           moment=jnp.asarray(self.moment),
+                           count=jnp.asarray(self.count, jnp.int32),
+                           dim=self.dim)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class DeltaRowsFrame:
     """§VI-C streaming delta: a raw row batch (the rows ARE update vectors).
 
@@ -332,13 +373,13 @@ class AckFrame:
     message: str = ""
 
 
-Frame = (Hello | StatsFrame | ProjectedFrame | DeltaRowsFrame | ControlFrame
-         | SolveFrame | WeightsFrame | AckFrame)
+Frame = (Hello | StatsFrame | ProjectedFrame | RFFFrame | DeltaRowsFrame
+         | ControlFrame | SolveFrame | WeightsFrame | AckFrame)
 
 _FRAME_TYPES = {
     Hello: FT_HELLO, StatsFrame: FT_STATS, ProjectedFrame: FT_PROJ,
     DeltaRowsFrame: FT_DELTA, ControlFrame: FT_CONTROL, SolveFrame: FT_SOLVE,
-    WeightsFrame: FT_WEIGHTS, AckFrame: FT_ACK,
+    WeightsFrame: FT_WEIGHTS, AckFrame: FT_ACK, RFFFrame: FT_RFF,
 }
 
 
@@ -404,6 +445,21 @@ def encode_frame(frame: Frame, *, dtype: str | None = None) -> bytes:
                    + _enc_str(frame.client_id)
                    + _enc_array(frame.tri, name, expect=tri_len(m))
                    + _enc_array(frame.moment, name, expect=m))
+    elif isinstance(frame, RFFFrame):
+        D = frame.dim
+        if D <= 0 or frame.d_orig <= 0:
+            raise PayloadError(f"need D, d_orig > 0, got D={D}, "
+                               f"d_orig={frame.d_orig}")
+        ls = float(frame.lengthscale)
+        if not (np.isfinite(ls) and ls > 0.0):
+            raise PayloadError(
+                f"lengthscale must be finite and > 0, got {ls}")
+        _check_count(frame.count)
+        payload = (struct.pack("<IIQQdQ", D, frame.d_orig, frame.seed,
+                               frame.fhash, ls, frame.count)
+                   + _enc_str(frame.client_id)
+                   + _enc_array(frame.tri, name, expect=tri_len(D))
+                   + _enc_array(frame.moment, name, expect=D))
     elif isinstance(frame, DeltaRowsFrame):
         A = np.asarray(frame.A)
         if A.ndim != 2:
@@ -570,6 +626,22 @@ def decode_frame(buf: bytes) -> Frame:
                                moment=cur.array(name, m), count=count, dim=m,
                                d_orig=d_orig, seed=seed, rhash=rhash,
                                client_id=cid, wire_dtype=name)
+    elif ftype == FT_RFF:
+        D, d_orig, seed, fhash, lengthscale, count = cur.unpack("<IIQQdQ")
+        _check_dim(D, "D")
+        _check_dim(d_orig, "d_orig")
+        _check_count(count)
+        # No D <= d_orig check: extra random features only sharpen the
+        # kernel approximation, D > d is a legitimate regime.
+        if not (np.isfinite(lengthscale) and lengthscale > 0.0):
+            raise PayloadError(
+                f"lengthscale must be finite and > 0, got {lengthscale}")
+        cid = cur.string()
+        frame = RFFFrame(tri=cur.array(name, tri_len(D)),
+                         moment=cur.array(name, D), count=count, dim=D,
+                         d_orig=d_orig, seed=seed, fhash=fhash,
+                         lengthscale=lengthscale, client_id=cid,
+                         wire_dtype=name)
     elif ftype == FT_DELTA:
         n, d = cur.unpack("<II")
         if not 0 < n <= MAX_ROWS:
@@ -627,19 +699,27 @@ def delta_frame_nbytes(n: int, d: int, dtype: str = "f32", *,
     return OVERHEAD_BYTES + meta + (n * d + n) * wire_itemsize(dtype)
 
 
+def rff_frame_nbytes(D: int, dtype: str = "f32", *, client_id: str = "") -> int:
+    """Exact encoded length of a §IV-F RFF frame."""
+    meta = 4 + 4 + 8 + 8 + 8 + 8 + 2 + len(client_id.encode("utf-8"))
+    return OVERHEAD_BYTES + meta + (tri_len(D) + D) * wire_itemsize(dtype)
+
+
 def encoded_nbytes(payload, *, frame: str = "tri",
                    client_id: str = "") -> int:
     """Encoded frame length a ``PackedStats``-shaped upload costs on the wire.
 
-    ``frame`` is "tri" (Thm-4 STATS) or "proj" (§IV-F). Raises
-    :class:`BadDtype` when the payload's dtype has no wire encoding.
+    ``frame`` is "tri" (Thm-4 STATS), "proj" (§IV-F sketch), or "rff".
+    Raises :class:`BadDtype` when the payload's dtype has no wire encoding.
     """
     name = dtype_name(np.asarray(payload.tri).dtype)
     if frame == "tri":
         return stats_frame_nbytes(payload.dim, name, client_id=client_id)
     if frame == "proj":
         return projected_frame_nbytes(payload.dim, name, client_id=client_id)
-    raise ValueError(f"frame must be 'tri' or 'proj', got {frame!r}")
+    if frame == "rff":
+        return rff_frame_nbytes(payload.dim, name, client_id=client_id)
+    raise ValueError(f"frame must be 'tri', 'proj', or 'rff', got {frame!r}")
 
 
 def projection_hash(R) -> int:

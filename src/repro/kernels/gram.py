@@ -1,9 +1,9 @@
-"""Fused streaming Gram + moment Pallas kernel — the paper's Phase-1 hot spot.
+"""Fused streaming Gram + moment Pallas kernels — the paper's Phase-1 hot spot.
 
-Computes G = A^T A and h = A^T b in ONE pass over A. The XLA baseline emits
-two HLO ops that each read A from HBM; on a TPU the fused kernel streams each
-(bn, bd) tile of A into VMEM once per (i, k) pair and feeds the MXU directly,
-accumulating both outputs in fp32.
+``gram_moment_pallas`` computes G = A^T A and h = A^T b in ONE pass over A.
+The XLA baseline emits two HLO ops that each read A from HBM; on a TPU the
+fused kernel streams each (bn, bd) tile of A into VMEM once per (i, k) pair
+and feeds the MXU directly, accumulating both outputs in fp32.
 
 Grid (d/bd, d/bd, n/bn), row-chunks innermost so output tiles are revisited
 for accumulation:
@@ -11,9 +11,25 @@ for accumulation:
   G[i, j] += A[k, i]^T @ A[k, j]         every (i, j, k)
   h[i]    += A[k, i]^T @ b[k]            only when j == 0
 
-Tiles are MXU-aligned (bd multiple of 128, bn multiple of 8 with 128 lanes);
-``ops.gram_moment`` pads ragged shapes with zero rows/cols (exact: zero rows
-contribute nothing to either statistic).
+``sketch_gram_pallas`` / ``rff_gram_pallas`` extend the same design to the
+§IV-F featurize->Gram ingest: per row-chunk the feature block
+T = A_blk @ R (sketch) or T = sqrt(2/D) cos(X_blk @ W + c) (RFF) is built in
+a VMEM scratch accumulator across d-chunks, then folded straight into
+G += T^T T and h += T^T b — the (n x m) feature matrix NEVER materializes in
+HBM, which is the whole point: the unfused two-pass path (kernels.ref) writes
+and re-reads n*m scalars that this kernel keeps on-chip.
+
+Grid (n/bn, d/bd), d-chunks innermost so the T scratch accumulates the full
+contraction before the Gram fold at the last d-chunk:
+
+  T_k  = sum_j A[k, j] @ R[j]            accumulated in VMEM scratch
+  G   += T_k^T T_k,  h += T_k^T b[k]     once per row-chunk (j == last)
+
+Tiles are MXU-aligned (bd multiple of 128, bn multiple of 8 with 128 lanes;
+m padded to 128 lanes); ``ops.gram_moment`` / ``ops.sketch_gram`` /
+``ops.rff_gram`` pad ragged shapes with zero rows/cols (exact for the plain
+Gram and the sketch: zero rows contribute nothing; the RFF kernel masks
+padded rows in-kernel because cos(0 + c) != 0).
 """
 from __future__ import annotations
 
@@ -22,6 +38,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _gram_kernel(a_i_ref, a_j_ref, b_ref, g_ref, h_ref):
@@ -93,6 +110,162 @@ def gemm_nt_pallas(C: jax.Array, A: jax.Array, B: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((m, n), C.dtype),
         interpret=interpret,
     )(C, A, B)
+
+
+def _sketch_gram_kernel(a_ref, b_ref, r_ref, g_ref, h_ref, t_ref):
+    """One (row-chunk k, d-chunk j) step of the fused sketch->Gram ingest.
+
+    t_ref is a (block_n, m) f32 VMEM scratch: it accumulates the row-chunk's
+    feature block T = A[k] @ R across d-chunks, then folds into G/h exactly
+    once per row-chunk — T never leaves VMEM.
+    """
+    k = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(k == 0, j == 0))
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    @pl.when(j == 0)
+    def _zero_t():
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    t_ref[...] += jax.lax.dot_general(
+        a_ref[...], r_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _fold():
+        t = t_ref[...]
+        g_ref[...] += jax.lax.dot_general(
+            t, t, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        bv = b_ref[...].astype(jnp.float32)
+        h_ref[...] += jnp.sum(t * bv[:, None], axis=0)
+
+
+def _rff_gram_kernel(scale, n_valid, block_n,
+                     x_ref, b_ref, w_ref, c_ref, g_ref, h_ref, t_ref):
+    """Fused RFF featurize->Gram: T = sqrt(2/D) cos(X W + c), G += T^T T.
+
+    Same scratch scheme as the sketch kernel, with the nonlinearity applied
+    at the fold. Padded rows MUST be masked here (not just zero-padded):
+    cos(0 + c) != 0, so a zero row of X still produces a nonzero feature row
+    that would corrupt G. n_valid is the true (unpadded) row count.
+    """
+    k = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(k == 0, j == 0))
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    @pl.when(j == 0)
+    def _zero_t():
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    t_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _fold():
+        t = jnp.cos(t_ref[...] + c_ref[...].astype(jnp.float32)[None, :])
+        t = t * jnp.float32(scale)
+        rows = k * block_n + jax.lax.broadcasted_iota(jnp.int32, t.shape, 0)
+        t = jnp.where(rows < n_valid, t, jnp.float32(0.0))
+        g_ref[...] += jax.lax.dot_general(
+            t, t, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        bv = b_ref[...].astype(jnp.float32)
+        h_ref[...] += jnp.sum(t * bv[:, None], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_n", "interpret"))
+def sketch_gram_pallas(A: jax.Array, b: jax.Array, R: jax.Array, *,
+                       block_d: int = 128, block_n: int = 512,
+                       interpret: bool = False):
+    """Fused G = (AR)^T (AR), h = (AR)^T b without materializing AR in HBM.
+
+    A: (n, d), b: (n,), R: (d, m) with block_n | n and block_d | d. m rides
+    whole in the lane axis (callers pad it to >= 128 lanes via
+    ``ops.sketch_gram``). Returns (G (m, m) f32, h (m,) f32).
+    """
+    n, d = A.shape
+    m = R.shape[1]
+    assert R.shape[0] == d, (A.shape, R.shape)
+    assert n % block_n == 0 and d % block_d == 0, (A.shape, block_n, block_d)
+    grid = (n // block_n, d // block_d)
+
+    return pl.pallas_call(
+        _sketch_gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_d), lambda k, j: (k, j)),
+            pl.BlockSpec((block_n,), lambda k, j: (k,)),
+            pl.BlockSpec((block_d, m), lambda k, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m, m), lambda k, j: (0, 0)),
+            pl.BlockSpec((m,), lambda k, j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, m), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_n, m), jnp.float32)],
+        interpret=interpret,
+    )(A, b, R)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_valid", "true_dim", "block_d", "block_n", "interpret"))
+def rff_gram_pallas(X: jax.Array, b: jax.Array, W: jax.Array, c: jax.Array,
+                    *, n_valid: int | None = None, true_dim: int | None = None,
+                    block_d: int = 128, block_n: int = 512,
+                    interpret: bool = False):
+    """Fused RFF Gram: T = sqrt(2/D) cos(X W + c), G = T^T T, h = T^T b.
+
+    X: (n, d), b: (n,), W: (d, D), c: (D,). n_valid (static) masks padded
+    rows — defaults to n. true_dim (static) is the UNPADDED feature count
+    used in the sqrt(2/D) scale: when ``ops.rff_gram`` pads the lane axis
+    with zero W columns, the kept features must still carry the original
+    D's scale (padded columns compute cos(c)*scale but only touch G/h
+    entries the wrapper slices away). Defaults to W.shape[1].
+    """
+    n, d = X.shape
+    D = W.shape[1]
+    assert W.shape[0] == d and c.shape == (D,), (X.shape, W.shape, c.shape)
+    assert n % block_n == 0 and d % block_d == 0, (X.shape, block_n, block_d)
+    if n_valid is None:
+        n_valid = n
+    if true_dim is None:
+        true_dim = D
+    grid = (n // block_n, d // block_d)
+
+    return pl.pallas_call(
+        functools.partial(_rff_gram_kernel,
+                          float((2.0 / true_dim) ** 0.5), n_valid, block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_d), lambda k, j: (k, j)),
+            pl.BlockSpec((block_n,), lambda k, j: (k,)),
+            pl.BlockSpec((block_d, D), lambda k, j: (j, 0)),
+            pl.BlockSpec((D,), lambda k, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((D, D), lambda k, j: (0, 0)),
+            pl.BlockSpec((D,), lambda k, j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((D, D), jnp.float32),
+            jax.ShapeDtypeStruct((D,), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_n, D), jnp.float32)],
+        interpret=interpret,
+    )(X, b, W, c)
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "block_n", "interpret"))

@@ -68,6 +68,71 @@ def gram_moment(A: jax.Array, b: jax.Array, *, block_d: int = 128,
     return G[:d, :d], h[:d]
 
 
+def _feature_blocks(n: int, d: int, m_padded: int,
+                    block_d: int, block_n: int) -> tuple[int, int]:
+    """Clamp (block_d, block_n) for the fused featurize->Gram kernels.
+
+    Same pow2 clamping as :func:`gram_moment`, then halve block_n until the
+    (block_n, m_padded) f32 T scratch fits a 4 MB VMEM budget (block_n stays
+    a multiple of 8, the fp32 sublane tile).
+    """
+    block_d = min(block_d, max(128, 1 << (d - 1).bit_length()))
+    block_n = min(block_n, max(8, 1 << (n - 1).bit_length()))
+    while block_n > 8 and block_n * m_padded * 4 > 4 * 1024 * 1024:
+        block_n //= 2
+    return block_d, block_n
+
+
+def sketch_gram(A: jax.Array, b: jax.Array, R: jax.Array, *,
+                block_d: int = 128, block_n: int = 512,
+                interpret: bool | None = None):
+    """Fused §IV-F sketch ingest: (G, h) = ((AR)^T AR, (AR)^T b).
+
+    Pads ragged shapes exactly: padded rows of A are zero (zero feature
+    rows contribute nothing), padded d is zero A cols x zero R rows, and
+    padded sketch columns land in G rows/cols that are sliced away. The
+    (n x m) sketch T never materializes in HBM.
+    """
+    n, d = A.shape
+    m = R.shape[1]
+    mp = max(128, 1 << (m - 1).bit_length())
+    block_d, block_n = _feature_blocks(n, d, mp, block_d, block_n)
+    Ap = _pad_to(_pad_to(A, 0, block_n), 1, block_d)
+    bp = _pad_to(b, 0, block_n)
+    Rp = _pad_to(_pad_to(R, 0, block_d), 1, mp)
+    interpret = _interpret_default() if interpret is None else interpret
+    G, h = gram_kernel.sketch_gram_pallas(
+        Ap, bp, Rp, block_d=block_d, block_n=block_n, interpret=interpret)
+    return G[:m, :m], h[:m]
+
+
+def rff_gram(X: jax.Array, b: jax.Array, W: jax.Array, c: jax.Array, *,
+             block_d: int = 128, block_n: int = 512,
+             interpret: bool | None = None):
+    """Fused RFF ingest: T = sqrt(2/D) cos(X W + c), (G, h) = (T^T T, T^T b).
+
+    Ragged padding needs two corrections beyond the sketch case, both
+    handled here/in-kernel: padded rows are masked inside the kernel
+    (cos(0 + c) != 0, so zero-padding X rows is NOT exact), and the
+    sqrt(2/D) scale is pinned to the true D via ``true_dim`` while the lane
+    axis pads to >= 128 (padded feature columns only touch sliced-away
+    G/h entries).
+    """
+    n, d = X.shape
+    D = W.shape[1]
+    Dp = max(128, 1 << (D - 1).bit_length())
+    block_d, block_n = _feature_blocks(n, d, Dp, block_d, block_n)
+    Xp = _pad_to(_pad_to(X, 0, block_n), 1, block_d)
+    bp = _pad_to(b, 0, block_n)
+    Wp = _pad_to(_pad_to(W, 0, block_d), 1, Dp)
+    cp = _pad_to(c, 0, Dp)
+    interpret = _interpret_default() if interpret is None else interpret
+    G, h = gram_kernel.rff_gram_pallas(
+        Xp, bp, Wp, cp, n_valid=n, true_dim=D,
+        block_d=block_d, block_n=block_n, interpret=interpret)
+    return G[:D, :D], h[:D]
+
+
 def gemm_nt(C: jax.Array, A: jax.Array, B: jax.Array, *, alpha: float = -1.0,
             block_m: int = 128, block_n: int = 128,
             interpret: bool | None = None) -> jax.Array:

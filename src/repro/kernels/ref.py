@@ -11,6 +11,27 @@ def gram_moment_ref(A: jnp.ndarray, b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.nd
     return G, h
 
 
+def sketch_gram_ref(A: jnp.ndarray, b: jnp.ndarray,
+                    R: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Unfused two-pass §IV-F sketch: materialize T = A R, then Gram it.
+
+    This is exactly the HBM-traffic pattern the fused kernel removes — T
+    (n x m) is written out by pass 1 and re-read by pass 2.
+    """
+    T = jnp.einsum("nd,dm->nm", A, R, preferred_element_type=jnp.float32)
+    return gram_moment_ref(T, b)
+
+
+def rff_gram_ref(X: jnp.ndarray, b: jnp.ndarray, W: jnp.ndarray,
+                 c: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Unfused two-pass RFF: T = sqrt(2/D) cos(X W + c), then Gram it."""
+    D = W.shape[1]
+    Z = jnp.einsum("nd,dD->nD", X, W, preferred_element_type=jnp.float32)
+    T = jnp.sqrt(2.0 / D).astype(jnp.float32) * jnp.cos(
+        Z + c.astype(jnp.float32)[None, :])
+    return gram_moment_ref(T, b)
+
+
 def swa_attention_ref(q, k, v, *, window: int, causal: bool = True):
     """Sliding-window masked-softmax attention.
 

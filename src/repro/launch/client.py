@@ -29,10 +29,10 @@ import numpy as np
 
 
 def run_client(args: argparse.Namespace) -> dict:
-    from repro.core import projection
+    from repro.core.features import FeatureMap
     from repro.core.sufficient_stats import compute_stats
     from repro.data import synthetic
-    from repro.fed import transport, wire
+    from repro.fed import transport
     from repro.fed.protocol import PackedStats
 
     # This client's shard of the shared dataset: every participant generates
@@ -56,17 +56,33 @@ def run_client(args: argparse.Namespace) -> dict:
         offers = tuple(args.offer.split(","))
         report["negotiated_dtype"] = client.hello(args.tenant, offers)
 
-        if args.projected:
-            m = args.projected
-            R = projection.make_projection(
-                jax.random.PRNGKey(args.proj_seed), args.dim, m)
-            packed = PackedStats.pack(projection.projected_stats(A, b, R))
-            client.upload_projected(packed, d_orig=args.dim,
-                                    seed=args.proj_seed,
-                                    rhash=wire.projection_hash(R),
-                                    client_id=args.client_id)
-            report["uploaded"] = {"frame": "proj", "m": m,
-                                  "proj_seed": args.proj_seed}
+        features = args.features
+        if args.projected and features == "none":
+            # Legacy spelling: --projected M == --features sketch
+            # --feature-dim M (same wire frames either way).
+            features, args.feature_dim = "sketch", args.projected
+        if features != "none":
+            # §IV-F feature upload: featurize->Gram runs through the fused
+            # Pallas ingest kernel (the (n x m) feature matrix never
+            # materializes) unless --unfused-ingest asks for the two-pass
+            # XLA path; both produce the same m-space statistics.
+            fm = FeatureMap(features, seed=args.proj_seed, d_orig=args.dim,
+                            m=args.feature_dim, lengthscale=args.lengthscale)
+            packed = PackedStats.pack(
+                fm.stats(A, b, use_pallas=not args.unfused_ingest))
+            if features == "sketch":
+                client.upload_projected(packed, d_orig=args.dim,
+                                        seed=args.proj_seed, rhash=fm.fhash,
+                                        client_id=args.client_id)
+            else:
+                client.upload_rff(packed, d_orig=args.dim,
+                                  seed=args.proj_seed, fhash=fm.fhash,
+                                  lengthscale=args.lengthscale,
+                                  client_id=args.client_id)
+            report["uploaded"] = {
+                "frame": "proj" if features == "sketch" else "rff",
+                "m": args.feature_dim, "proj_seed": args.proj_seed,
+                "fused_ingest": not args.unfused_ingest}
         elif args.delta_batches:
             # §VI-C: the same rows, shipped as raw delta batches instead of
             # one packed statistic (Thm 1 makes the union identical).
@@ -125,10 +141,24 @@ def make_parser() -> argparse.ArgumentParser:
     ap.add_argument("--dim", type=int, default=32)
     ap.add_argument("--projected", type=int, default=0, metavar="M",
                     help="upload the §IV-F m-dim sketched statistics instead "
-                         "of the full Thm-4 payload")
+                         "of the full Thm-4 payload (legacy alias for "
+                         "--features sketch --feature-dim M)")
+    ap.add_argument("--features", choices=("none", "sketch", "rff"),
+                    default="none",
+                    help="§IV-F feature map: 'sketch' ships the m-dim JL "
+                         "projection statistics, 'rff' the D-dim random-"
+                         "Fourier statistics; both via the fused Pallas "
+                         "featurize->Gram ingest")
+    ap.add_argument("--feature-dim", type=int, default=16, metavar="M",
+                    help="feature count (sketch m / rff D)")
+    ap.add_argument("--lengthscale", type=float, default=1.0,
+                    help="RBF lengthscale for --features rff")
+    ap.add_argument("--unfused-ingest", action="store_true",
+                    help="compute feature statistics via the two-pass XLA "
+                         "reference instead of the fused Pallas kernel")
     ap.add_argument("--proj-seed", type=int, default=0,
-                    help="shared sketch seed (all projected clients must "
-                         "agree; the server verifies the R-hash)")
+                    help="shared feature-map seed (all feature clients must "
+                         "agree; the server verifies the map hash)")
     ap.add_argument("--delta-batches", type=int, default=0, metavar="N",
                     help="ship the shard as N §VI-C delta-row frames instead "
                          "of one packed statistic")

@@ -134,6 +134,8 @@ def serve_fusion(*, num_clients: int = 4, samples_per_client: int = 128,
                  dim: int = 128, tenants: int = 8, sigmas_per_tenant: int = 4,
                  queries: int = 256, query_rows: int = 8,
                  sharded_tenants: int = 0, auto_tenants: int = 0, mesh=None,
+                 sketched_tenants: int = 0, rff_tenants: int = 0,
+                 feature_dim: int = 16, lengthscale: float = 1.0,
                  stream_deltas: int = 0, coalesce_rank: int = 32,
                  flush_staleness_s: float = 0.05, max_warm: int | None = None,
                  seed: int = 0) -> dict:
@@ -159,8 +161,20 @@ def serve_fusion(*, num_clients: int = 4, samples_per_client: int = 128,
     waits for the queues to drain, records how many flushes the background
     thread performed and the worst delta age it observed, and re-verifies
     every tenant against its cold reference including the streamed rows.
+
+    With ``sketched_tenants`` / ``rff_tenants`` > 0 the LAST that many
+    tenants are §IV-F feature tenants: their client uploads are m-space
+    statistics produced by the fused Pallas featurize->Gram ingest
+    (``core.FeatureMap.stats(..., use_pallas=True)`` — the (n x m) feature
+    matrix never materializes), their engines solve in m (D) dimensions,
+    queries and §VI-C deltas are featurized before they touch the pool, and
+    their cold reference is ``core.fusion`` over the *featurized* union of
+    their rows — so the mixed pool's exactness check covers every kind in
+    its own solve space. Feature tenants are always dense-placed (their
+    whole point is a solve too small to shard).
     """
     from repro.core import fusion
+    from repro.core.features import FeatureMap
     from repro.core.sufficient_stats import compute_stats
     from repro.data import synthetic
     from repro.fed.protocol import PackedStats
@@ -168,25 +182,45 @@ def serve_fusion(*, num_clients: int = 4, samples_per_client: int = 128,
 
     sharded_tenants = min(sharded_tenants, tenants)
     auto_tenants = min(auto_tenants, tenants - sharded_tenants)
+    rff_tenants = min(rff_tenants, tenants)
+    sketched_tenants = min(sketched_tenants, tenants - rff_tenants)
     policy = CoalescerPolicy(max_rank=coalesce_rank,
                              max_staleness_s=flush_staleness_s)
     pool = EnginePool(mesh=mesh, max_warm=max_warm, default_coalesce=policy)
 
     # Admit every tenant from packed payloads; keep its raw rows so the
-    # exactness check below can rebuild the cold reference.
+    # exactness check below can rebuild the cold reference. The last
+    # sketched_tenants + rff_tenants tenants are §IV-F feature tenants whose
+    # payloads are m-space statistics off the fused Pallas ingest.
     tenant_rows: dict[str, list[tuple[jax.Array, jax.Array]]] = {}
+    feature_maps: dict[str, FeatureMap] = {}
     for t in range(tenants):
         name = f"tenant{t}"
         ds_t = synthetic.generate(jax.random.PRNGKey(seed + 7919 * t),
                                   num_clients=num_clients,
                                   samples_per_client=samples_per_client,
                                   dim=dim)
-        payloads = {k: PackedStats.pack(compute_stats(A_k, b_k))
-                    for k, (A_k, b_k) in enumerate(ds_t.clients)}
-        placement = ("sharded" if t < sharded_tenants
-                     else "auto" if t < sharded_tenants + auto_tenants
-                     else "dense")
-        pool.create_tenant(name, payloads=payloads, placement=placement)
+        fm = None
+        if t >= tenants - rff_tenants:
+            fm = FeatureMap("rff", seed=seed + t, d_orig=dim, m=feature_dim,
+                            lengthscale=lengthscale)
+        elif t >= tenants - rff_tenants - sketched_tenants:
+            fm = FeatureMap("sketch", seed=seed + t, d_orig=dim,
+                            m=min(feature_dim, dim))
+        if fm is None:
+            payloads = {k: PackedStats.pack(compute_stats(A_k, b_k))
+                        for k, (A_k, b_k) in enumerate(ds_t.clients)}
+            placement = ("sharded" if t < sharded_tenants
+                         else "auto" if t < sharded_tenants + auto_tenants
+                         else "dense")
+        else:
+            payloads = {k: PackedStats.pack(
+                            fm.stats(A_k, b_k, use_pallas=True))
+                        for k, (A_k, b_k) in enumerate(ds_t.clients)}
+            placement = "dense"
+            feature_maps[name] = fm
+        pool.create_tenant(name, payloads=payloads, placement=placement,
+                           features=fm)
         tenant_rows[name] = list(ds_t.clients)
 
     # Tenant t's grid: sigmas_per_tenant points on a per-tenant log range.
@@ -198,11 +232,20 @@ def serve_fusion(*, num_clients: int = 4, samples_per_client: int = 128,
         name = f"tenant{int(rng.integers(tenants))}"
         sigma = grids[name][int(rng.integers(sigmas_per_tenant))]
         X = jnp.asarray(rng.standard_normal((query_rows, dim)), jnp.float32)
+        if name in feature_maps:
+            # Feature tenants serve in their map's space: featurize the
+            # query once, up front, so naive and pooled time the same work.
+            X = feature_maps[name](X)
         stream.append((name, sigma, X))
 
     def cold_ref(name: str, sigma: float) -> jax.Array:
         A_all = jnp.concatenate([a for a, _ in tenant_rows[name]])
         b_all = jnp.concatenate([b for _, b in tenant_rows[name]])
+        if name in feature_maps:
+            # Cold reference lives in the tenant's own solve space: the
+            # two-pass XLA featurize (feature matrix materialized) feeding
+            # core.fusion — what the fused Pallas ingest must reproduce.
+            A_all = feature_maps[name](A_all)
         return fusion.solve_ridge(compute_stats(A_all, b_all), sigma)
 
     # Naive: cold factorization per query, per tenant.
@@ -229,6 +272,14 @@ def serve_fusion(*, num_clients: int = 4, samples_per_client: int = 128,
 
     exact_err = max_err()
 
+    # §IV-F metadata per feature tenant: solve_report carries the Prop-3
+    # error bound and the upload-float count next to the served weights.
+    feature_reports = {
+        name: {k: v for k, v in
+               pool.solve_report(name, grids[name][0]).items()
+               if k != "weights"}
+        for name in feature_maps}
+
     streaming = None
     if stream_deltas:
         names = list(pool.tenant_names)
@@ -243,7 +294,12 @@ def serve_fusion(*, num_clients: int = 4, samples_per_client: int = 128,
         try:
             t0 = time.perf_counter()
             for name, dA, db in deltas:
-                pool.ingest_rows_async(name, dA, db)
+                # A feature tenant's coalescer queue lives in m-space too:
+                # featurize the delta rows (row-wise map, so featurizing
+                # per-delta == featurizing the union) before they enqueue.
+                dA_in = (feature_maps[name](dA) if name in feature_maps
+                         else dA)
+                pool.ingest_rows_async(name, dA_in, db)
                 tenant_rows[name].append((dA, db))
             # NO reads from here on: only the background flusher drains.
             deadline = time.monotonic() + max(10.0, 100 * flush_staleness_s)
@@ -277,6 +333,9 @@ def serve_fusion(*, num_clients: int = 4, samples_per_client: int = 128,
         "placements": pool.summary()["placements"],
         "sharded_tenants": sharded_tenants,
         "auto_tenants": auto_tenants,
+        "sketched_tenants": sketched_tenants,
+        "rff_tenants": rff_tenants,
+        "feature_reports": feature_reports,
         "queries": queries,
         "distinct_sigmas": len({sigma for _, sigma, _ in stream}),
         "naive_qps": queries / t_naive,
@@ -334,11 +393,16 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
                 break
             time.sleep(0.02)
         solves = {}
+        tenant_reports = {}
         for name in pool.tenant_names:
-            # solve_lifted == what SOLVE frames served: the report's weights
-            # and the clients' WEIGHTS downloads can never diverge.
-            w = pool.solve_lifted(name, sigma)
+            # solve_report rides solve_lifted == what SOLVE frames served:
+            # the report's weights and the clients' WEIGHTS downloads can
+            # never diverge. For §IV-F tenants it also carries the map
+            # dimensions, upload-float count and Prop-3 error bound.
+            rep = pool.solve_report(name, sigma)
+            w = rep.pop("weights")
             solves[name] = np.asarray(jax.device_get(w), np.float64).tolist()
+            tenant_reports[name] = rep
         ledger = pool.ledger()
         report = {
             "port": srv.port,
@@ -347,6 +411,7 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
             "tenants": list(pool.tenant_names),
             "sigma": sigma,
             "weights": solves,
+            "tenant_reports": tenant_reports,
             "ledger": ledger,
             "pool": pool.summary(),
         }
@@ -387,6 +452,20 @@ def main() -> None:
     ap.add_argument("--auto-tenants", type=int, default=2,
                     help="place the next M tenants by the measured "
                          "crossover_d (server/select.py)")
+    ap.add_argument("--sketched-tenants", type=int, default=0,
+                    help="make the last N tenants §IV-F sketched: m-space "
+                         "uploads off the fused Pallas featurize->Gram "
+                         "ingest, m-space solves, Prop-3 error bound in "
+                         "the report")
+    ap.add_argument("--rff-tenants", type=int, default=0,
+                    help="make the last M tenants random-Fourier-feature "
+                         "tenants (D-space uploads/solves; D may exceed "
+                         "--dim)")
+    ap.add_argument("--feature-dim", type=int, default=16, metavar="M",
+                    help="feature count for sketched/rff tenants (sketch m "
+                         "is clamped to --dim)")
+    ap.add_argument("--lengthscale", type=float, default=1.0,
+                    help="RBF lengthscale for --rff-tenants")
     ap.add_argument("--stream-deltas", type=int, default=0,
                     help="queue N §VI-C row deltas through the coalescers "
                          "with NO reads; the pool's background flusher is "
@@ -439,6 +518,10 @@ def main() -> None:
                            queries=args.queries,
                            sharded_tenants=args.sharded_tenants,
                            auto_tenants=args.auto_tenants,
+                           sketched_tenants=args.sketched_tenants,
+                           rff_tenants=args.rff_tenants,
+                           feature_dim=args.feature_dim,
+                           lengthscale=args.lengthscale,
                            stream_deltas=args.stream_deltas,
                            coalesce_rank=args.coalesce_rank,
                            flush_staleness_s=args.flush_staleness,
@@ -452,6 +535,13 @@ def main() -> None:
               f"{res['pool_qps']:.0f} qps ({res['speedup']:.1f}x)")
         print(f"[serve_fusion] exact: max|dw|={res['exact_max_abs_err']:.2e} "
               f"vs cold per-tenant references")
+        for name, rep in res["feature_reports"].items():
+            bound = rep.get("error_bound")
+            print(f"[serve_fusion] {name}: kind={rep['kind']} "
+                  f"solve_dim={rep['solve_dim']} "
+                  f"upload_floats={rep['upload_floats']}"
+                  + (f" prop3_bound={bound:.3f}" if bound is not None
+                     else ""))
         if res["streaming"] is not None:
             s = res["streaming"]
             print(f"[serve_fusion] streaming {s['deltas']} deltas, no reads: "
@@ -466,6 +556,11 @@ def main() -> None:
               f"bytes + {led['streamed_bytes']} streamed + "
               f"{led['cross_shard_bytes']} cross-shard over "
               f"{led['tenants']} tenants")
+        if len(led.get("by_kind", {})) > 1:
+            split = ", ".join(
+                f"{kind}: {v['upload_bytes']}B/{v['tenants']} tenants"
+                for kind, v in sorted(led["by_kind"].items()))
+            print(f"[serve_fusion] upload bytes by kind: {split}")
         print(f"[serve_fusion] pool: meshes_built="
               f"{res['pool']['meshes_built']} "
               f"warm_tenants={res['pool']['warm_tenants']} "

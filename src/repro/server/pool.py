@@ -48,6 +48,7 @@ from typing import Any, Callable, Hashable, Mapping, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.features import FeatureMap
 from repro.core.privacy import psd_repair
 from repro.core.sufficient_stats import SuffStats
 from repro.server.backends import solve_snapshot
@@ -83,8 +84,7 @@ class Tenant:
     wire_frames: int = 0           # decoded wire frames admitted (fed.wire)
     wire_upload_bytes: int = 0     # encoded bytes of admitted upload frames
     wire_download_bytes: int = 0   # encoded bytes of replies (weights/acks)
-    projection: dict | None = None  # §IV-F sketch identity (seed/d_orig/m/rhash)
-    projection_matrix: Any = None  # the R rebuilt from the seed (solve cache)
+    feature_map: FeatureMap | None = None  # §IV-F map identity (sketch / rff)
     background_flushes: int = 0    # flushes driven by the pool's thread
     max_flush_age_s: float = 0.0   # oldest delta age ever seen at a drain
     factor_evictions: int = 0      # LRU evictions of this tenant's factors
@@ -95,11 +95,37 @@ class Tenant:
     def backend_name(self) -> str:
         return self.engine.backend.name
 
+    @property
+    def kind(self) -> str:
+        """Ledger kind: "dense", "sketched" (§IV-F JL sketch), or "rff"."""
+        if self.feature_map is None:
+            return "dense"
+        return "sketched" if self.feature_map.kind == "sketch" else "rff"
+
+    @property
+    def projection(self) -> dict | None:
+        """Legacy §IV-F sketch identity view (seed/d_orig/m/rhash) — derived
+        from ``feature_map``; None for dense and rff tenants."""
+        fm = self.feature_map
+        if fm is None or fm.kind != "sketch":
+            return None
+        return {"seed": fm.seed, "d_orig": fm.d_orig, "m": fm.m,
+                "rhash": fm.fhash}
+
+    @property
+    def projection_matrix(self) -> Any:
+        """The sketch R (materialized lazily, cached per map identity)."""
+        fm = self.feature_map
+        if fm is None or fm.kind != "sketch":
+            return None
+        return fm.materialize()[0]
+
     def summary(self) -> dict:
         with self.lock:
             return {
                 "placement": self.placement,
                 "backend": self.backend_name,
+                "kind": self.kind,
                 "streamed_floats": self.streamed_floats,
                 "wire_frames": self.wire_frames,
                 "wire_upload_bytes": self.wire_upload_bytes,
@@ -214,6 +240,7 @@ class EnginePool:
                       dim: int | None = None,
                       placement: str = "auto",
                       dtype=None,
+                      features: FeatureMap | None = None,
                       coalesce: CoalescerPolicy | None = None,
                       max_update_rank: int | None = None,
                       psd_guard: bool = False,
@@ -227,6 +254,13 @@ class EnginePool:
         runs the Remark-4 check on the admitted Gram: if DP noise made it
         indefinite, ``privacy.psd_repair`` is applied (DP post-processing,
         free) and the firing is counted in the tenant record.
+
+        ``features`` declares a §IV-F sketched/rff tenant: the engine lives
+        in the map's m-dimensional solve space (``dim`` defaults to
+        ``features.m`` and must equal it if given — any statistics passed
+        here must already BE feature-space statistics), serving lifts
+        through the cached map (``solve_lifted`` / ``solve_report``), and
+        the pool ledger accounts the tenant under its kind.
         """
         if placement not in PLACEMENTS:
             raise ValueError(f"placement must be one of {PLACEMENTS}, "
@@ -257,7 +291,15 @@ class EnginePool:
         elif stats is not None:
             dim = stats.dim
         elif dim is None:
-            raise ValueError("need clients, payloads, stats, or dim")
+            if features is None:
+                raise ValueError("need clients, payloads, stats, dim, "
+                                 "or features")
+            dim = features.m
+        if features is not None and dim != features.m:
+            raise ValueError(
+                f"tenant {name!r}: admitted statistics have dim {dim} but "
+                f"the feature map solves in m={features.m} — feature tenants "
+                f"take feature-space statistics only")
 
         # The backend must be built with the dtype the engine will infer
         # from the admitted statistics, or FusionEngine's dtype consistency
@@ -287,6 +329,9 @@ class EnginePool:
             engine = FusionEngine(dim, **kwargs)
 
         t = Tenant(name, engine, placement)
+        if features is not None:
+            t.feature_map = features
+            features.materialize()     # warm the per-map cache at admission
         if unpacked is not None:
             # Uploads actually happened (per-client stats or wire payloads);
             # stats=/dim= admissions shipped nothing and record nothing.
@@ -439,15 +484,17 @@ class EnginePool:
             raise TypeError("HELLO is a session frame; the transport "
                             "negotiates it before admission")
         try:
-            if isinstance(frame, (wire.StatsFrame, wire.ProjectedFrame)):
+            if isinstance(frame, (wire.StatsFrame, wire.ProjectedFrame,
+                                  wire.RFFFrame)):
                 packed = frame.to_packed()
                 t = self._ensure_wire_tenant(name, packed.dim, placement)
                 # One lock acquisition spans guard AND ingest (RLock — the
                 # nested _locked re-acquire is free): a concurrent upload
                 # cannot flip the tenant's space between check and fuse.
                 with t.lock:
-                    if isinstance(frame, wire.ProjectedFrame):
-                        err = self._check_projection(t, frame)
+                    if isinstance(frame, (wire.ProjectedFrame,
+                                          wire.RFFFrame)):
+                        err = self._check_feature_frame(t, frame)
                     else:
                         err = self._check_unsketched(t)
                     if err is not None:
@@ -518,74 +565,106 @@ class EnginePool:
 
     @staticmethod
     def _check_unsketched(t: Tenant) -> str | None:
-        """A plain (Thm-4 / §VI-C) upload may not land on a sketched tenant:
+        """A plain (Thm-4 / §VI-C) upload may not land on a feature tenant:
         m-dim statistics from different spaces fuse without a shape error and
         serve silent garbage. Returns an error string (reject) or None."""
         with t.lock:
-            if t.projection is not None:
-                return (f"tenant holds §IV-F sketched statistics "
-                        f"(seed={t.projection['seed']}); plain uploads "
+            if t.feature_map is not None:
+                return (f"tenant holds §IV-F {t.kind} statistics "
+                        f"(seed={t.feature_map.seed}); plain uploads "
                         f"would silently mix spaces")
         return None
 
-    def _check_projection(self, t: Tenant, frame) -> str | None:
-        """§IV-F sketch consistency: every projected upload for a tenant must
-        name the SAME (seed, d_orig, rhash) — and the rhash must match the R
-        the server rebuilds from the seed, or the two sides only believe
-        they share a sketch. A tenant already holding *unsketched* statistics
-        rejects projected uploads outright (the mirror of
-        :meth:`_check_unsketched`). Returns an error string or None."""
-        from repro.core import projection as proj_lib
+    @staticmethod
+    def _frame_map(frame) -> tuple[FeatureMap, int]:
+        """A wire feature frame's declared map identity + claimed hash."""
         from repro.fed import wire
 
+        if isinstance(frame, wire.RFFFrame):
+            return (FeatureMap("rff", seed=frame.seed, d_orig=frame.d_orig,
+                               m=frame.dim, lengthscale=frame.lengthscale),
+                    frame.fhash)
+        return (FeatureMap("sketch", seed=frame.seed, d_orig=frame.d_orig,
+                           m=frame.dim), frame.rhash)
+
+    def _check_feature_frame(self, t: Tenant, frame) -> str | None:
+        """§IV-F feature-map consistency for PROJ and RFF uploads.
+
+        Every feature upload for a tenant must declare the SAME map identity
+        (kind, seed, d_orig, m, lengthscale) — and the claimed hash must
+        match the arrays the server derives from that identity, or the two
+        sides only *believe* they share a map (jax version skew, wrong
+        seed). A tenant already holding unsketched statistics rejects
+        feature uploads outright (the mirror of :meth:`_check_unsketched`).
+        The map identity is write-once under the tenant lock. Returns an
+        error string (reject) or None.
+        """
+        try:
+            cand, claimed = self._frame_map(frame)
+        except ValueError as e:    # un-constructible identity (bad params)
+            return str(e)
         with t.lock:
-            if t.projection is None:
+            if t.feature_map is None:
                 if t.engine.client_ids or int(t.engine.backend.count) != 0:
                     return ("tenant already holds unsketched statistics; "
                             "a §IV-F upload would silently mix spaces")
-                R = proj_lib.make_projection(
-                    jax.random.PRNGKey(frame.seed), frame.d_orig, frame.dim)
-                server_hash = wire.projection_hash(R)
-                if server_hash != frame.rhash:
-                    return (f"projection hash mismatch: frame says "
-                            f"{frame.rhash:#010x}, server derived "
-                            f"{server_hash:#010x} from seed {frame.seed}")
-                t.projection = {"seed": frame.seed, "d_orig": frame.d_orig,
-                                "m": frame.dim, "rhash": frame.rhash}
-                t.projection_matrix = R
+                if cand.fhash != claimed:
+                    return (f"feature-map hash mismatch: frame says "
+                            f"{claimed:#010x}, server derived "
+                            f"{cand.fhash:#010x} from seed {frame.seed}")
+                t.feature_map = cand
                 return None
-            p = t.projection
-            if (frame.seed, frame.d_orig, frame.rhash) != (
-                    p["seed"], p["d_orig"], p["rhash"]):
-                return (f"conflicting sketch: tenant fused seed={p['seed']} "
-                        f"d_orig={p['d_orig']}, frame has seed={frame.seed} "
-                        f"d_orig={frame.d_orig}")
+            p = t.feature_map
+            if p != cand or claimed != p.fhash:
+                what = "sketch" if p.kind == "sketch" else "rff map"
+                return (f"conflicting {what}: tenant fused kind={p.kind} "
+                        f"seed={p.seed} d_orig={p.d_orig} m={p.m}, frame "
+                        f"has kind={cand.kind} seed={cand.seed} "
+                        f"d_orig={cand.d_orig} m={cand.m}")
             return None
 
     def _lift(self, t: Tenant, v: jax.Array) -> jax.Array:
-        """Prop 3 lift w~ = R v for a projected tenant's served weights.
-
-        R is cached on the tenant at admission (the sketch identity is
-        write-once), so the serving hot path never regenerates it.
-        """
-        from repro.core import projection as proj_lib
-
-        if t.projection_matrix is None:
-            p = t.projection
-            t.projection_matrix = proj_lib.make_projection(
-                jax.random.PRNGKey(p["seed"]), p["d_orig"], p["m"])
-        return proj_lib.lift(v, t.projection_matrix)
+        """Solve-space solution -> served weights through the tenant's map
+        (Prop 3's w~ = R v for sketched tenants; identity for rff — its
+        weights live in feature space). The map's arrays are cached per
+        identity, so the serving hot path never regenerates them."""
+        if t.feature_map is None:
+            return v
+        return t.feature_map.lift(v)
 
     def solve_lifted(self, name: str, sigma: float) -> jax.Array:
         """Phase-3 solve in the tenant's *serving* space: the fused solve,
-        lifted through the tenant's §IV-F sketch when it has one (Prop 3's
-        w~ = R v) — what a WEIGHTS frame carries. Identical to ``solve`` for
-        unsketched tenants."""
+        lifted through the tenant's §IV-F feature map when it has one
+        (Prop 3's w~ = R v for sketches; identity for rff) — what a WEIGHTS
+        frame carries. Identical to ``solve`` for dense tenants."""
         t = self.tenant(name)
         w = self.solve(name, sigma)
-        if t.projection is not None:
+        if t.feature_map is not None:
             w = self._lift(t, w)
         return w
+
+    def solve_report(self, name: str, sigma: float) -> dict:
+        """``solve_lifted`` plus §IV-F metadata: the served weights, the
+        tenant's kind and map dimensions, and — for sketched tenants — the
+        Prop-3 error bound c·sqrt(d/m)·||w|| evaluated at c=1 with the
+        lifted solution's own norm standing in for ||w|| (the true
+        full-dimension solution is exactly what a sketched tenant never
+        computes, so the bound is a self-reported scale, not an oracle
+        comparison — documented in the README table)."""
+        t = self.tenant(name)
+        v = self.solve(name, sigma)
+        w = self._lift(t, v)
+        report = {"sigma": float(sigma), "kind": t.kind,
+                  "solve_dim": int(t.engine.dim), "weights": w}
+        fm = t.feature_map
+        if fm is not None:
+            report["d_orig"] = fm.d_orig
+            report["m"] = fm.m
+            report["upload_floats"] = fm.upload_floats()
+            bound = fm.error_bound(float(jnp.linalg.norm(w)))
+            if bound is not None:
+                report["error_bound"] = bound
+        return report
 
     def drop_tenant(self, name: str) -> FusionEngine:
         """Remove a tenant entirely; returns its engine (caller may archive)."""
@@ -712,6 +791,11 @@ class EnginePool:
         state (pinned by tests). Backends that decline the snapshot
         (sharded) solve under their lock and skip the stack. ``lifted``
         applies each tenant's §IV-F lift (Prop 3) like ``solve_lifted``.
+
+        Buckets key on the *solve-space* dimension: a sketched/rff tenant
+        snapshots its m-space factor, so it rides the SAME stacked sweep as
+        dense dim-m tenants — the lift back to d_orig happens per-tenant
+        after the sweep, outside the jit dispatch.
         """
         reqs = [(name, float(sigma)) for name, sigma in requests]
         results: list[jax.Array | None] = [None] * len(reqs)
@@ -738,7 +822,7 @@ class EnginePool:
         if lifted:
             for i, (name, _) in enumerate(reqs):
                 t = self.tenant(name)
-                if t.projection is not None:
+                if t.feature_map is not None:
                     results[i] = self._lift(t, results[i])
         self._maybe_evict()
         return results
@@ -895,15 +979,19 @@ class EnginePool:
         payloads were given), streamed §VI-C bytes, and — for tenants fed
         through ``admit_frame`` — the actual encoded byte lengths of the wire
         frames that moved (upload direction) and of the replies (download),
-        per tenant and total."""
+        per tenant, per tenant *kind* (dense / sketched / rff — the §IV-F
+        O(d²) -> O(m²) reduction read straight off ``by_kind``), and total."""
         from repro.fed import comm as fed_comm
 
         snapshot = self._snapshot()
         out = fed_comm.aggregate_records(
-            {t.name: t.comm for t in snapshot if t.comm is not None})
+            {t.name: t.comm for t in snapshot if t.comm is not None},
+            kinds={t.name: t.kind for t in snapshot})
         streamed = wire_up = wire_down = 0
+        by_kind = out["by_kind"]
         for t in snapshot:
             entry = out["per_tenant"].setdefault(t.name, {})
+            entry["kind"] = t.kind
             entry["streamed_bytes"] = t.streamed_floats * fed_comm.FLOAT_BYTES
             streamed += entry["streamed_bytes"]
             if t.wire_frames:
@@ -912,6 +1000,22 @@ class EnginePool:
                 entry["wire_download_bytes"] = t.wire_download_bytes
             wire_up += t.wire_upload_bytes
             wire_down += t.wire_download_bytes
+            # Tenants admitted over the wire carry no CommRecord, so the
+            # kind split must fold their measured bytes in here.
+            k = by_kind.setdefault(t.kind, {"tenants": 0,
+                                            "upload_download_bytes": 0,
+                                            "analytic_bytes": 0})
+            if t.comm is None:
+                k["tenants"] += 1
+            k["streamed_bytes"] = (k.get("streamed_bytes", 0)
+                                   + entry["streamed_bytes"])
+            k["wire_upload_bytes"] = (k.get("wire_upload_bytes", 0)
+                                      + t.wire_upload_bytes)
+            k["wire_download_bytes"] = (k.get("wire_download_bytes", 0)
+                                        + t.wire_download_bytes)
+            k["upload_bytes"] = (k["upload_download_bytes"]
+                                 + k["streamed_bytes"]
+                                 + k["wire_upload_bytes"])
         out["streamed_bytes"] = streamed
         out["wire_upload_bytes"] = wire_up
         out["wire_download_bytes"] = wire_down

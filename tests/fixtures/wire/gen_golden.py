@@ -75,6 +75,7 @@ def main() -> None:
                        "frame_type": type(decoded).__name__,
                        "wire_dtype": dtype}
         for field in ("dim", "count", "client_id", "d_orig", "seed", "rhash",
+                      "fhash", "lengthscale",
                       "sigma", "op", "ok", "message", "tenant", "offers"):
             if hasattr(decoded, field):
                 v = getattr(decoded, field)
@@ -139,6 +140,24 @@ def main() -> None:
     emit("ack", wire.AckFrame(True, "ingested d=6 count=16"), dtype="f32")
     emit("ack_error", wire.AckFrame(False, "ChecksumMismatch: crc"),
          dtype="f32")
+
+    # --- §IV-F RFF x {f32, bf16} --------------------------------------------
+    # Appended AFTER the original sections so the rng stream feeding every
+    # pre-existing fixture is untouched (their bytes must not change).
+    # dim = 12 > d_orig = 10: the widening path the RFF layout explicitly
+    # allows (a sketch frame would reject it) is part of the pinned contract.
+    D_RFF = 12
+    Gr, hr, nr = _spd_stats(rng, D_RFF, 20)
+    for dt in ("f32", "bf16"):
+        frame = wire.RFFFrame(tri=_tri(Gr), moment=hr, count=nr,
+                              dim=D_RFF, d_orig=D_ORIG, seed=PROJ_SEED,
+                              fhash=0xFEEDC0DE, lengthscale=1.5,
+                              client_id="fourier", wire_dtype=dt)
+        dec = wire.decode_frame(wire.encode_frame(frame, dtype=dt))
+        w = _ridge(_unpack(dec.tri.astype("<f8"), D_RFF),
+                   dec.moment.astype("<f8"), SIGMA)
+        emit(f"rff_{dt}", frame, dtype=dt,
+             extra={"sigma_ref": SIGMA, "weights_ref": w.tolist()})
 
     (HERE / "expected.json").write_text(json.dumps(expected, indent=1,
                                                    sort_keys=True))

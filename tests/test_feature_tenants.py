@@ -1,0 +1,445 @@
+"""§IV-F feature tenants end-to-end: sketched and RFF statistics over the
+wire, served off the pool, pinned against cold references.
+
+Acceptance gates for the feature-tenant stack:
+
+  * A sketched tenant's upload costs exactly the §IV-F formula
+    (m(m+1)/2 + m floats) plus the fixed frame overhead, and its served
+    weights are BIT-identical to a cold mirror built from
+    ``core.projection``-derived statistics replayed through a fresh pool —
+    the client-side ``FeatureMap`` path and the raw ``core.projection``
+    path must produce the same bytes on the wire, hence the same serving.
+  * An RFF tenant's predictions match the exact-RBF ``kernel_gram_exact``
+    kernel-ridge oracle within the documented O(1/sqrt(D)) tolerance —
+    including D > d_orig, which the wire codec explicitly allows.
+  * Map-identity negotiation is typed: hash mismatches, conflicting maps,
+    and plain/feature space mixing are rejections, never fused garbage.
+  * ``solve_report`` carries the Prop-3 error bound; ``ledger()['by_kind']``
+    splits upload bytes per tenant kind; ``solve_many`` buckets a sketched
+    tenant's m-space factor with dense dim-m tenants into ONE sweep.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fusion, projection, rff
+from repro.core.features import FeatureMap, feature_hash
+from repro.core.sufficient_stats import SuffStats, compute_stats
+from repro.data import synthetic
+from repro.fed import transport, wire
+from repro.fed.protocol import PackedStats
+from repro.server import EnginePool
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+CLIENT_CLI = REPO / "src" / "repro" / "launch" / "client.py"
+
+SIGMA = 0.1
+D_ORIG = 16
+
+
+def _dataset(num_clients=3, samples=48, dim=D_ORIG, seed=0):
+    return synthetic.generate(jax.random.PRNGKey(seed),
+                              num_clients=num_clients,
+                              samples_per_client=samples, dim=dim)
+
+
+def _client(dispatcher, tenant, offers=("f32",)):
+    c = transport.FrameClient(transport.LoopbackChannel(dispatcher))
+    c.hello(tenant, offers)
+    return c
+
+
+class TestSketchedWireBytesAndBitIdentity:
+    def test_upload_bytes_equal_prop2_formula_plus_overhead(self):
+        """Measured §IV-F upload == m(m+1)/2 + m floats + fixed framing,
+        byte for byte — the O(d^2) -> O(m^2) claim as an exact equality."""
+        ds = _dataset(num_clients=1)
+        m = 6
+        fm = FeatureMap("sketch", seed=3, d_orig=D_ORIG, m=m)
+        with EnginePool() as pool:
+            c = _client(transport.WireDispatcher(pool), "sk")
+            p = PackedStats.pack(fm.stats(*ds.clients[0]))
+            c.upload_projected(p, d_orig=D_ORIG, seed=3, rhash=fm.fhash,
+                               client_id="c0")
+            meta = 4 + 4 + 8 + 8 + 8 + 2 + len(b"c0")
+            formula = (wire.OVERHEAD_BYTES + meta
+                       + fm.upload_floats() * 4)        # f32 scalars
+            assert fm.upload_floats() == m * (m + 1) // 2 + m
+            assert c.bytes_uploaded == formula
+            assert c.bytes_uploaded == wire.projected_frame_nbytes(
+                m, "f32", client_id="c0")
+            led = pool.ledger()
+            assert led["wire_upload_bytes"] == formula
+            assert led["by_kind"]["sketched"]["wire_upload_bytes"] == formula
+
+    def test_rff_upload_bytes_exact(self):
+        ds = _dataset(num_clients=1)
+        D = 24    # > d_orig: RFF frames may widen, the codec allows it
+        fm = FeatureMap("rff", seed=5, d_orig=D_ORIG, m=D, lengthscale=1.5)
+        with EnginePool() as pool:
+            c = _client(transport.WireDispatcher(pool), "rf")
+            p = PackedStats.pack(fm.stats(*ds.clients[0]))
+            c.upload_rff(p, d_orig=D_ORIG, seed=5, fhash=fm.fhash,
+                         lengthscale=1.5, client_id="c0")
+            meta = 4 + 4 + 8 + 8 + 8 + 8 + 2 + len(b"c0")
+            formula = (wire.OVERHEAD_BYTES + meta
+                       + (D * (D + 1) // 2 + D) * 4)
+            assert c.bytes_uploaded == formula
+            assert c.bytes_uploaded == wire.rff_frame_nbytes(
+                D, "f32", client_id="c0")
+            assert pool.ledger()["by_kind"]["rff"]["wire_upload_bytes"] == \
+                formula
+
+    def test_featuremap_stats_and_projection_stats_same_wire_bytes(self):
+        """The client-side FeatureMap path and raw core.projection produce
+        byte-identical frames — so everything downstream (admission, fusion,
+        serving) is trivially identical too."""
+        ds = _dataset(num_clients=1)
+        m, seed = 6, 41
+        fm = FeatureMap("sketch", seed=seed, d_orig=D_ORIG, m=m)
+        R = projection.make_projection(jax.random.PRNGKey(seed), D_ORIG, m)
+        A, b = ds.clients[0]
+        p_fm = PackedStats.pack(fm.stats(A, b))
+        p_raw = PackedStats.pack(projection.projected_stats(A, b, R))
+
+        def frame(p, rhash):
+            return wire.encode_frame(wire.ProjectedFrame(
+                tri=np.asarray(p.tri), moment=np.asarray(p.moment),
+                count=int(p.count), dim=int(p.dim), d_orig=D_ORIG,
+                seed=seed, rhash=rhash, client_id="c0"))
+
+        assert fm.fhash == wire.projection_hash(R)
+        assert frame(p_fm, fm.fhash) == frame(p_raw, wire.projection_hash(R))
+
+    def test_served_weights_bit_identical_to_replayed_mirror(self):
+        """Same §IV-F frames into two independent pools serve bit-identical
+        lifted weights (deterministic admission + solve), and both match the
+        pure cold ``fusion.solve_ridge`` + ``projection.lift`` reference."""
+        ds = _dataset()
+        m, seed = 6, 41
+        fm = FeatureMap("sketch", seed=seed, d_orig=D_ORIG, m=m)
+        R = projection.make_projection(jax.random.PRNGKey(seed), D_ORIG, m)
+        packed = [PackedStats.pack(projection.projected_stats(A, b, R))
+                  for A, b in ds.clients]
+
+        def serve(pool):
+            c = _client(transport.WireDispatcher(pool), "sk")
+            for i, p in enumerate(packed):
+                c.upload_projected(p, d_orig=D_ORIG, seed=seed,
+                                   rhash=fm.fhash, client_id=f"c{i}")
+            return np.asarray(pool.solve_lifted("sk", SIGMA))
+
+        with EnginePool() as pool_a, EnginePool() as pool_b:
+            w_a, w_b = serve(pool_a), serve(pool_b)
+        np.testing.assert_array_equal(w_a, w_b)
+        assert w_a.shape == (D_ORIG,)
+
+        fused = packed[0].unpack() + packed[1].unpack() + packed[2].unpack()
+        ref = projection.lift(fusion.solve_ridge(fused, SIGMA), R)
+        np.testing.assert_allclose(w_a, np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_fused_pallas_ingest_serves_like_unfused(self):
+        """use_pallas=True client statistics admit and serve to the same
+        solution as the two-pass XLA statistics (f32 accumulation order is
+        the only difference)."""
+        ds = _dataset()
+        m, seed = 8, 7
+        fm = FeatureMap("sketch", seed=seed, d_orig=D_ORIG, m=m)
+        with EnginePool() as pa, EnginePool() as pb:
+            ca = _client(transport.WireDispatcher(pa), "fused")
+            cb = _client(transport.WireDispatcher(pb), "unfused")
+            for i, (A, b) in enumerate(ds.clients):
+                ca.upload_projected(
+                    PackedStats.pack(fm.stats(A, b, use_pallas=True)),
+                    d_orig=D_ORIG, seed=seed, rhash=fm.fhash,
+                    client_id=f"c{i}")
+                cb.upload_projected(
+                    PackedStats.pack(fm.stats(A, b, use_pallas=False)),
+                    d_orig=D_ORIG, seed=seed, rhash=fm.fhash,
+                    client_id=f"c{i}")
+            wa = np.asarray(pa.solve_lifted("fused", SIGMA))
+            wb = np.asarray(pb.solve_lifted("unfused", SIGMA))
+        np.testing.assert_allclose(wa, wb, rtol=1e-4, atol=1e-5)
+
+
+class TestRFFWireFederation:
+    def test_rff_tenant_matches_kernel_ridge_oracle(self):
+        """RFF statistics over the wire, fused across clients, served as
+        D-space weights: predictions phi(X*) w match the exact-RBF kernel
+        ridge k*^T (K + sigma I)^{-1} b within the O(1/sqrt(D)) gap.
+        D = 512 >> d_orig = 8 — the widening path, allowed by the codec.
+
+        The identity behind the tolerance: with K_hat = Phi Phi^T,
+        Phi^T (K_hat + sI)^{-1} b == (Phi^T Phi + sI)^{-1} Phi^T b exactly;
+        all remaining error is K_hat vs the true RBF kernel. Documented
+        tolerance: max|pred - oracle| < 0.25 * max|oracle| at D = 512 on
+        this n = 48 problem (empirically ~0.16 of it), and the gap must
+        SHRINK vs a D = 128 map — the O(1/sqrt(D)) trend, not just a
+        loose ceiling.
+        """
+        d, D, ls, sigma = 8, 512, 2.0, 0.5
+        ds = _dataset(num_clients=2, samples=24, dim=d, seed=2)
+        fm = FeatureMap("rff", seed=11, d_orig=d, m=D, lengthscale=ls)
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            for i, (A, b) in enumerate(ds.clients):
+                c = _client(disp, "krr")
+                c.upload_rff(PackedStats.pack(fm.stats(A, b, use_pallas=True)),
+                             d_orig=d, seed=11, fhash=fm.fhash,
+                             lengthscale=ls, client_id=f"c{i}")
+            w = c.solve(sigma)
+            assert np.asarray(w).shape == (D,)
+            assert pool.tenant("krr").kind == "rff"
+
+            A_all = jnp.concatenate([a for a, _ in ds.clients])
+            b_all = jnp.concatenate([b for _, b in ds.clients])
+            rng = np.random.default_rng(0)
+            X_test = jnp.asarray(rng.standard_normal((16, d)), jnp.float32)
+
+            pred = np.asarray(fm.predict(X_test, jnp.asarray(w)))
+            K = rff.kernel_gram_exact(A_all, A_all, lengthscale=ls)
+            alpha = jnp.linalg.solve(
+                K + sigma * jnp.eye(K.shape[0]), b_all)
+            oracle = np.asarray(
+                rff.kernel_gram_exact(X_test, A_all, lengthscale=ls) @ alpha)
+            scale = max(1.0, float(np.abs(oracle).max()))
+            gap = float(np.abs(pred - oracle).max())
+            assert gap < 0.25 * scale, (pred[:4], oracle[:4])
+
+            # O(1/sqrt(D)) trend: a 4x narrower map must do worse.
+            fm_small = FeatureMap("rff", seed=11, d_orig=d, m=128,
+                                  lengthscale=ls)
+            w_small = fusion.solve_ridge(fm_small.stats(A_all, b_all), sigma)
+            pred_small = np.asarray(fm_small.predict(X_test, w_small))
+            assert gap < float(np.abs(pred_small - oracle).max())
+
+    def test_rff_hash_mismatch_and_conflicts_rejected(self):
+        ds = _dataset(num_clients=2)
+        D, seed, ls = 12, 9, 1.0
+        fm = FeatureMap("rff", seed=seed, d_orig=D_ORIG, m=D, lengthscale=ls)
+        p = PackedStats.pack(fm.stats(*ds.clients[0]))
+        with EnginePool() as pool:
+            c = _client(transport.WireDispatcher(pool), "rf")
+            with pytest.raises(transport.TransportError,
+                               match="hash mismatch"):
+                c.upload_rff(p, d_orig=D_ORIG, seed=seed, fhash=fm.fhash ^ 1,
+                             lengthscale=ls, client_id="bad")
+            c.upload_rff(p, d_orig=D_ORIG, seed=seed, fhash=fm.fhash,
+                         lengthscale=ls, client_id="good")
+            # Same seed, different lengthscale: a different feature map —
+            # fusing would silently mix kernels.
+            fm2 = FeatureMap("rff", seed=seed, d_orig=D_ORIG, m=D,
+                             lengthscale=2.5)
+            p2 = PackedStats.pack(fm2.stats(*ds.clients[1]))
+            with pytest.raises(transport.TransportError,
+                               match="conflicting rff"):
+                c.upload_rff(p2, d_orig=D_ORIG, seed=seed, fhash=fm2.fhash,
+                             lengthscale=2.5, client_id="worse")
+            # Plain Thm-4 stats with d == D onto the RFF tenant: spaces
+            # never mix even when the shapes collide.
+            small = _dataset(dim=D)
+            with pytest.raises(transport.TransportError,
+                               match="rff statistics"):
+                c.upload_stats(compute_stats(*small.clients[0]),
+                               client_id="plain")
+            # And an RFF frame onto a plain tenant whose d happens to equal
+            # D is the mirror rejection (shape-silent garbage otherwise).
+            c2 = _client(transport.WireDispatcher(pool), "plain")
+            c2.upload_stats(compute_stats(*small.clients[0]), client_id="c")
+            with pytest.raises(transport.TransportError,
+                               match="unsketched statistics"):
+                c2.upload_rff(p, d_orig=D_ORIG, seed=seed, fhash=fm.fhash,
+                              lengthscale=ls, client_id="p")
+
+    def test_sketch_and_rff_frames_never_cross(self):
+        """A ProjectedFrame landing on an RFF tenant (and vice versa) is a
+        conflicting-map rejection even if every dimension matches."""
+        ds = _dataset(num_clients=2)
+        k = 8
+        fm_s = FeatureMap("sketch", seed=4, d_orig=D_ORIG, m=k)
+        fm_r = FeatureMap("rff", seed=4, d_orig=D_ORIG, m=k)
+        p_s = PackedStats.pack(fm_s.stats(*ds.clients[0]))
+        p_r = PackedStats.pack(fm_r.stats(*ds.clients[1]))
+        with EnginePool() as pool:
+            c = _client(transport.WireDispatcher(pool), "sk")
+            c.upload_projected(p_s, d_orig=D_ORIG, seed=4, rhash=fm_s.fhash,
+                               client_id="c0")
+            with pytest.raises(transport.TransportError,
+                               match="conflicting sketch"):
+                c.upload_rff(p_r, d_orig=D_ORIG, seed=4, fhash=fm_r.fhash,
+                             client_id="c1")
+
+
+class TestSolveReportLedgerAndBatching:
+    def test_solve_report_carries_prop3_bound(self):
+        ds = _dataset()
+        m = 6
+        fm = FeatureMap("sketch", seed=2, d_orig=D_ORIG, m=m)
+        with EnginePool() as pool:
+            pool.create_tenant(
+                "sk", payloads=[PackedStats.pack(fm.stats(A, b))
+                                for A, b in ds.clients],
+                features=fm)
+            rep = pool.solve_report("sk", SIGMA)
+            assert rep["kind"] == "sketched"
+            assert rep["solve_dim"] == m
+            assert rep["d_orig"] == D_ORIG and rep["m"] == m
+            assert rep["upload_floats"] == m * (m + 1) // 2 + m
+            w = np.asarray(rep["weights"])
+            assert w.shape == (D_ORIG,)
+            np.testing.assert_array_equal(
+                w, np.asarray(pool.solve_lifted("sk", SIGMA)))
+            # Prop 3 at c=1 with the lifted solution's own norm for ||w||.
+            assert rep["error_bound"] == pytest.approx(
+                np.sqrt(D_ORIG / m) * np.linalg.norm(w), rel=1e-6)
+
+    def test_solve_report_rff_has_no_weightspace_bound(self):
+        ds = _dataset(num_clients=1)
+        fm = FeatureMap("rff", seed=2, d_orig=D_ORIG, m=10)
+        with EnginePool() as pool:
+            pool.create_tenant(
+                "rf", payloads=[PackedStats.pack(fm.stats(*ds.clients[0]))],
+                features=fm)
+            rep = pool.solve_report("rf", SIGMA)
+            assert rep["kind"] == "rff" and rep["solve_dim"] == 10
+            assert "error_bound" not in rep
+        # Dense tenants report their kind too, nothing §IV-F.
+        with EnginePool() as pool:
+            pool.create_tenant("dense",
+                               stats=compute_stats(*_dataset().clients[0]))
+            rep = pool.solve_report("dense", SIGMA)
+            assert rep["kind"] == "dense"
+            assert "error_bound" not in rep and "m" not in rep
+
+    def test_ledger_by_kind_splits_mixed_pool(self):
+        ds = _dataset()
+        m = 6
+        fm_s = FeatureMap("sketch", seed=1, d_orig=D_ORIG, m=m)
+        fm_r = FeatureMap("rff", seed=1, d_orig=D_ORIG, m=m)
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            cd = _client(disp, "dense")
+            cd.upload_stats(compute_stats(*ds.clients[0]), client_id="c")
+            cs = _client(disp, "sk")
+            cs.upload_projected(PackedStats.pack(fm_s.stats(*ds.clients[1])),
+                                d_orig=D_ORIG, seed=1, rhash=fm_s.fhash,
+                                client_id="c")
+            cr = _client(disp, "rf")
+            cr.upload_rff(PackedStats.pack(fm_r.stats(*ds.clients[2])),
+                          d_orig=D_ORIG, seed=1, fhash=fm_r.fhash,
+                          client_id="c")
+            led = pool.ledger()
+            bk = led["by_kind"]
+            assert set(bk) == {"dense", "sketched", "rff"}
+            for kind, client in (("dense", cd), ("sketched", cs),
+                                 ("rff", cr)):
+                assert bk[kind]["tenants"] == 1
+                assert bk[kind]["wire_upload_bytes"] == client.bytes_uploaded
+                assert bk[kind]["upload_bytes"] == client.bytes_uploaded
+            # The split is exhaustive: kinds sum to the pool totals.
+            assert sum(v["wire_upload_bytes"] for v in bk.values()) == \
+                led["wire_upload_bytes"]
+            # And the §IV-F reduction is visible: feature tenants upload
+            # O(m^2), the dense tenant O(d^2).
+            assert bk["sketched"]["upload_bytes"] < \
+                bk["dense"]["upload_bytes"]
+
+    def test_solve_many_buckets_sketched_with_dense_same_dim(self):
+        """A sketched tenant's m-space factor rides the SAME stacked sweep
+        as a dense dim-m tenant: one cross-tenant dispatch, lifts applied
+        per tenant after."""
+        ds = _dataset()
+        m = 6
+        fm = FeatureMap("sketch", seed=8, d_orig=D_ORIG, m=m)
+        small = _dataset(dim=m)
+        with EnginePool() as pool:
+            pool.create_tenant(
+                "sk", payloads=[PackedStats.pack(fm.stats(A, b))
+                                for A, b in ds.clients],
+                features=fm)
+            pool.create_tenant("dense_m",
+                               stats=compute_stats(*small.clients[0]))
+            before = pool.batched_sweeps
+            ws = pool.solve_many([("sk", SIGMA), ("dense_m", SIGMA)],
+                                 lifted=True)
+            assert pool.batched_sweeps == before + 1   # one dim-m bucket
+            assert ws[0].shape == (D_ORIG,)            # lifted to d_orig
+            assert ws[1].shape == (m,)
+            np.testing.assert_array_equal(
+                np.asarray(ws[0]),
+                np.asarray(pool.solve_lifted("sk", SIGMA)))
+
+
+class TestFeatureMapCore:
+    def test_feature_hash_single_array_matches_wire_projection_hash(self):
+        R = projection.make_projection(jax.random.PRNGKey(0), 12, 4)
+        assert feature_hash(R) == wire.projection_hash(R)
+
+    def test_create_tenant_rejects_original_space_stats(self):
+        fm = FeatureMap("sketch", seed=0, d_orig=D_ORIG, m=6)
+        stats = compute_stats(*_dataset().clients[0])   # d-space, not m
+        with EnginePool() as pool:
+            with pytest.raises(ValueError, match="feature-space statistics"):
+                pool.create_tenant("bad", stats=stats, features=fm)
+
+    def test_feature_tenant_streams_feature_space_rows(self):
+        """§VI-C deltas into a feature tenant are m-space rows; the fused
+        state equals recomputing the map's statistics over the union."""
+        ds = _dataset(num_clients=1, samples=32)
+        A, b = ds.clients[0]
+        m = 6
+        fm = FeatureMap("sketch", seed=3, d_orig=D_ORIG, m=m)
+        with EnginePool() as pool:
+            pool.create_tenant(
+                "sk", payloads=[PackedStats.pack(fm.stats(A[:20], b[:20]))],
+                features=fm)
+            pool.ingest_rows(  # rows featurized client-side before shipping
+                "sk", fm(A[20:]), b[20:])
+            w = np.asarray(pool.solve_lifted("sk", SIGMA))
+        ref = fm.lift(fusion.solve_ridge(fm.stats(A, b), SIGMA))
+        np.testing.assert_allclose(w, np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+class TestClientCLIFeatures:
+    def test_subprocess_rff_client_end_to_end(self):
+        """launch/client.py --features rff against an in-proc FrameServer:
+        the frame admits, the tenant is an rff tenant, the received weights
+        are the server's lifted solve, and the measured upload bytes are the
+        exact encoded RFF frame length."""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (str(REPO / "src")
+                             + os.pathsep + env.get("PYTHONPATH", ""))
+        D, ls = 12, 1.5
+        with EnginePool() as pool, transport.FrameServer(pool) as srv:
+            proc = subprocess.Popen(
+                [sys.executable, str(CLIENT_CLI),
+                 "--connect", f"127.0.0.1:{srv.port}",
+                 "--tenant", "rf", "--seed", "0", "--num-clients", "1",
+                 "--client-index", "0", "--samples", "48",
+                 "--dim", str(D_ORIG), "--features", "rff",
+                 "--feature-dim", str(D), "--lengthscale", str(ls),
+                 "--proj-seed", "6", "--solve", str(SIGMA)],
+                stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+                env=env)
+            out, err = proc.communicate(timeout=180)
+            assert proc.returncode == 0, f"client failed:\n{err}"
+            rep = json.loads(out.strip().splitlines()[-1])
+            assert rep["uploaded"]["frame"] == "rff"
+            assert rep["uploaded"]["fused_ingest"] is True
+            t = pool.tenant("rf")
+            assert t.kind == "rff"
+            assert t.feature_map == FeatureMap(
+                "rff", seed=6, d_orig=D_ORIG, m=D, lengthscale=ls)
+            np.testing.assert_array_equal(
+                np.asarray(rep["solve"]["weights"], np.float32),
+                np.asarray(pool.solve_lifted("rf", SIGMA), np.float32))
+            assert rep["bytes_uploaded"] == wire.rff_frame_nbytes(
+                D, "f32", client_id="client0")

@@ -5,11 +5,14 @@ are T independent fusion problems, and no interleaving of
 create / ingest / ingest_rows_async / drop / restore / flush / solve across
 them may let one tenant's mutations perturb another's weights beyond fp
 tolerance. The interpreter here drives arbitrary op sequences against a
-3-tenant pool with mixed placements (one pinned sharded, one auto, one
-dense) while mirroring every tenant's active rows in plain python, and after
-EVERY op checks EVERY solvable tenant against a cold ``core.fusion``
-solve over exactly its own mirror — checking the untouched tenants is the
-isolation assertion, checking the touched one is Thm 1/Thm 8/§VI-C.
+5-tenant pool with mixed placements (one pinned sharded, one auto, one
+dense) AND mixed kinds (one §IV-F sketched, one RFF — their mirrors hold
+rows already pushed through the tenant's feature map, so every read is
+pinned to a cold reference in the map's own solve space) while mirroring
+every tenant's active rows in plain python, and after EVERY op checks EVERY
+solvable tenant against a cold ``core.fusion`` solve over exactly its own
+mirror — checking the untouched tenants is the isolation assertion,
+checking the touched one is Thm 1/Thm 8/§VI-C/§IV-F.
 
 The hypothesis-driven variant runs through the ``_hypo`` shim (skipped where
 hypothesis isn't installed); a seeded deterministic variant drives the same
@@ -27,23 +30,37 @@ import pytest
 from _hypo import hypothesis, st
 from repro import core
 from repro.core import fusion
+from repro.core.features import FeatureMap
 from repro.fed.protocol import PackedStats
 from repro.server import CoalescerPolicy, EnginePool
 
 D = 6
 SIGMA = 0.1
-TENANTS = ("dense0", "sharded0", "auto0")
-PLACEMENT = {"dense0": "dense", "sharded0": "sharded", "auto0": "auto"}
+TENANTS = ("dense0", "sharded0", "auto0", "sketch0", "rff0")
+PLACEMENT = {"dense0": "dense", "sharded0": "sharded", "auto0": "auto",
+             "sketch0": "dense", "rff0": "dense"}
+# §IV-F tenants solve in their map's feature space; every ingest/mirror row
+# below is featurized first, so the interpreter and its cold references stay
+# uniform across kinds (the reference solve just runs in m (D) dimensions).
+FMAPS = {"sketch0": FeatureMap("sketch", seed=123, d_orig=D, m=4),
+         "rff0": FeatureMap("rff", seed=321, d_orig=D, m=8)}
 
 # (kind, tenant slot, client slot, data seed). Kinds: 0 ingest new client,
 # 1 drop, 2 restore, 3 ingest_rows, 4 ingest_rows_async, 5 flush, 6 solve.
-_OP = st.tuples(st.integers(0, 6), st.integers(0, 2), st.integers(0, 7),
+_OP = st.tuples(st.integers(0, 6), st.integers(0, 4), st.integers(0, 7),
                 st.integers(0, 2**16))
 
 
 def _rows(seed, n=8):
     k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
     return (jax.random.normal(k1, (n, D)), jax.random.normal(k2, (n,)))
+
+
+def _tenant_rows(name, seed, n=8):
+    """Rows in ``name``'s solve space: featurized for §IV-F tenants."""
+    A, b = _rows(seed, n)
+    fm = FMAPS.get(name)
+    return (fm(A) if fm is not None else A), b
 
 
 def _make_pool() -> EnginePool:
@@ -53,9 +70,10 @@ def _make_pool() -> EnginePool:
         warnings.simplefilter("ignore")   # 1-device host mesh degradation
         pool = EnginePool(default_coalesce=CoalescerPolicy(max_rank=5))
         for t, name in enumerate(TENANTS):
-            A, b = _rows(1000 + t)
+            A, b = _tenant_rows(name, 1000 + t)
             pool.create_tenant(name, clients={0: core.compute_stats(A, b)},
                                placement=PLACEMENT[name], max_update_rank=100,
+                               features=FMAPS.get(name),
                                backend_kwargs={"block_size": 8}
                                if PLACEMENT[name] == "sharded" else None)
     return pool
@@ -64,7 +82,8 @@ def _make_pool() -> EnginePool:
 def _interpret(ops):
     """Drive ops against a fresh pool; assert every tenant after every op."""
     pool = _make_pool()
-    active = {n: {0: [_rows(1000 + t)]} for t, n in enumerate(TENANTS)}
+    active = {n: {0: [_tenant_rows(n, 1000 + t)]}
+              for t, n in enumerate(TENANTS)}
     dropped = {n: {} for n in TENANTS}
     anon = {n: [] for n in TENANTS}
     next_id = {n: 1 for n in TENANTS}
@@ -72,7 +91,7 @@ def _interpret(ops):
     for kind, tslot, cslot, seed in ops:
         name = TENANTS[tslot % len(TENANTS)]
         if kind == 0:                                  # ingest a new client
-            A, b = _rows(seed)
+            A, b = _tenant_rows(name, seed)
             cid = next_id[name]
             pool.ingest(name, core.compute_stats(A, b), client_id=cid)
             active[name][cid] = [(A, b)]
@@ -86,11 +105,11 @@ def _interpret(ops):
             pool.restore(name, cid)
             active[name][cid] = dropped[name].pop(cid)
         elif kind == 3:                                # anonymous rows
-            A, b = _rows(seed, n=3)
+            A, b = _tenant_rows(name, seed, n=3)
             pool.ingest_rows(name, A, b)
             anon[name].append((A, b))
         elif kind == 4:                                # queued rows
-            A, b = _rows(seed, n=3)
+            A, b = _tenant_rows(name, seed, n=3)
             pool.ingest_rows_async(name, A, b)
             anon[name].append((A, b))
         elif kind == 5:                                # explicit flush
@@ -115,6 +134,15 @@ def _interpret(ops):
                 rtol=2e-4, atol=2e-4,
                 err_msg=f"tenant {other} diverged after {kind=} on {name}")
             assert pool.get(other).count == A_all.shape[0]
+            fm = FMAPS.get(other)
+            if fm is not None:
+                # The serving read: solve-space weights lifted through the
+                # tenant's map must match lifting the cold reference.
+                np.testing.assert_allclose(
+                    np.asarray(pool.solve_lifted(other, SIGMA)),
+                    np.asarray(fm.lift(w_ref)), rtol=2e-4, atol=5e-4,
+                    err_msg=f"lifted read on {other} diverged after "
+                            f"{kind=} on {name}")
 
 
 @hypothesis.given(ops=st.lists(_OP, min_size=1, max_size=6))
@@ -128,7 +156,7 @@ def test_tenant_isolation_seeded_interleavings(seed):
     """Deterministic fallback: same interpreter, fixed random programs, so
     the isolation property is exercised even without hypothesis."""
     rng = np.random.default_rng(seed)
-    ops = [(int(rng.integers(7)), int(rng.integers(3)),
+    ops = [(int(rng.integers(7)), int(rng.integers(5)),
             int(rng.integers(8)), int(rng.integers(2**16)))
            for _ in range(8)]
     _interpret(ops)

@@ -7,7 +7,10 @@ Three contracts, each probed rather than assumed:
     flusher runs; every concurrent read (under the tenant lock) must observe
     a state that is exact for some *prefix* of the delta stream — the row
     count names the prefix, and a cold ``core.fusion`` solve over exactly
-    those rows must match. Nothing half-applied is ever visible.
+    those rows must match. Nothing half-applied is ever visible. The
+    property is parametrized over tenant kind: §IV-F sketched and RFF
+    tenants stream *featurized* rows and their prefix references solve in
+    the map's own feature space.
   * **Staleness is actually bounded without reads.** After a burst of
     queued deltas and NO reads, the flusher alone must drain every queue;
     a monotonic-clock probe checks the queue emptied within the policy's
@@ -27,16 +30,29 @@ import pytest
 
 from repro import core
 from repro.core import fusion
+from repro.core.features import FeatureMap
 from repro.server import CoalescerPolicy, EnginePool
 
 D = 12
 SIGMA = 0.1
 STALENESS = 0.1
 
+# Tenant kinds the prefix-exactness property runs under: feature tenants
+# stream featurized rows, so their solve space (and reference) is m-dim.
+FMAPS = {"dense": None,
+         "sketch": FeatureMap("sketch", seed=77, d_orig=D, m=6),
+         "rff": FeatureMap("rff", seed=78, d_orig=D, m=8)}
+
 
 def _rows(seed, n):
     k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
     return (jax.random.normal(k1, (n, D)), jax.random.normal(k2, (n,)))
+
+
+def _solve_rows(seed, n, fm=None):
+    """A row batch in the tenant's solve space (featurized when mapped)."""
+    A, b = _rows(seed, n)
+    return (fm(A) if fm is not None else A), b
 
 
 def _flusher_threads():
@@ -51,21 +67,23 @@ def no_flusher_leak():
     assert not _flusher_threads(), "flusher leaked out of this test"
 
 
-def _make_pool(**kwargs) -> EnginePool:
+def _make_pool(fm=None, **kwargs) -> EnginePool:
     pool = EnginePool(default_coalesce=CoalescerPolicy(
         max_rank=10**6, max_staleness_s=STALENESS), **kwargs)
-    A, b = _rows(0, 24)
+    A, b = _solve_rows(0, 24, fm)
     pool.create_tenant("t", clients={0: core.compute_stats(A, b)},
-                       placement="dense", max_update_rank=10**6)
+                       placement="dense", max_update_rank=10**6,
+                       features=fm)
     return pool, (A, b)
 
 
 def _warm(pool, deltas):
     """Compile the factor + flush programs before anything is timed."""
     pool.solve("t", SIGMA)
+    dim = pool.get("t").dim
     for r in (1, 2, 4):
         for _ in range(r):
-            pool.ingest_rows_async("t", jnp.zeros((1, D)), jnp.zeros((1,)))
+            pool.ingest_rows_async("t", jnp.zeros((1, dim)), jnp.zeros((1,)))
         pool.flush("t")
     del deltas
 
@@ -73,9 +91,11 @@ def _warm(pool, deltas):
 class TestConcurrentProducer:
     N_DELTAS = 32
 
-    def test_reads_always_see_exact_prefix_state(self):
-        pool, (A0, b0) = _make_pool()
-        deltas = [_rows(100 + i, 1) for i in range(self.N_DELTAS)]
+    @pytest.mark.parametrize("kind", list(FMAPS))
+    def test_reads_always_see_exact_prefix_state(self, kind):
+        fm = FMAPS[kind]
+        pool, (A0, b0) = _make_pool(fm)
+        deltas = [_solve_rows(100 + i, 1, fm) for i in range(self.N_DELTAS)]
         _warm(pool, deltas)
         base_rows = int(pool.get("t").count)
 

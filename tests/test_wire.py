@@ -83,6 +83,7 @@ class TestGoldenFrames:
         frame = wire.decode_frame(data)
         assert type(frame).__name__ == exp["frame_type"]
         for field in ("dim", "count", "client_id", "d_orig", "seed", "rhash",
+                      "fhash", "lengthscale",
                       "sigma", "op", "ok", "message", "tenant"):
             if field in exp:
                 assert getattr(frame, field) == exp[field], field
@@ -119,8 +120,8 @@ class TestGoldenFrames:
     def test_golden_covers_every_frame_type_and_dtype(self):
         types = {e["frame_type"] for e in EXPECTED.values()}
         assert types == {"Hello", "StatsFrame", "ProjectedFrame",
-                         "DeltaRowsFrame", "ControlFrame", "SolveFrame",
-                         "WeightsFrame", "AckFrame"}
+                         "RFFFrame", "DeltaRowsFrame", "ControlFrame",
+                         "SolveFrame", "WeightsFrame", "AckFrame"}
         stats_dtypes = {e["wire_dtype"] for e in EXPECTED.values()
                         if e["frame_type"] == "StatsFrame"}
         assert stats_dtypes == {"f32", "f64", "bf16"}
@@ -162,6 +163,34 @@ class TestRoundtrip:
         assert (g.dim, g.d_orig, g.seed, g.rhash) == \
             (m, d_orig, f.seed, f.rhash)
         assert wire.encode_frame(g) == data
+
+    @pytest.mark.parametrize("D,d_orig", [(1, 1), (4, 10), (64, 8), (12, 12)])
+    @pytest.mark.parametrize("dtype", ["f32", "bf16"])
+    def test_rff_roundtrip(self, D, d_orig, dtype):
+        """RFF frames roundtrip, including D > d_orig (widening maps) —
+        which the sketch layout forbids but this one must carry."""
+        rng = np.random.default_rng(D * 131 + d_orig)
+        f = wire.RFFFrame(
+            tri=_random_stats_frame(rng, D, dtype).tri,
+            moment=rng.standard_normal(D), count=9, dim=D, d_orig=d_orig,
+            seed=int(rng.integers(2**63)), fhash=int(rng.integers(2**32)),
+            lengthscale=float(rng.uniform(0.1, 5.0)),
+            client_id="rff", wire_dtype=dtype)
+        data = wire.encode_frame(f, dtype=dtype)
+        assert len(data) == wire.rff_frame_nbytes(D, dtype, client_id="rff")
+        g = wire.decode_frame(data)
+        assert (g.dim, g.d_orig, g.seed, g.fhash, g.lengthscale) == \
+            (D, d_orig, f.seed, f.fhash, f.lengthscale)
+        assert wire.encode_frame(g) == data
+        assert _frames_equal(wire.decode_frame(wire.encode_frame(g)), g)
+
+    def test_rff_bad_lengthscale_rejected(self):
+        f = _random_stats_frame(np.random.default_rng(0), 4, "f32")
+        for bad in (0.0, -1.0, float("nan"), float("inf")):
+            with pytest.raises(wire.PayloadError):
+                wire.encode_frame(wire.RFFFrame(
+                    tri=f.tri, moment=f.moment, count=f.count, dim=4,
+                    d_orig=8, seed=1, fhash=2, lengthscale=bad))
 
     @pytest.mark.parametrize("n,d", [(1, 1), (3, 7), (17, 5), (128, 2)])
     @pytest.mark.parametrize("dtype", ["f32", "f64"])
