@@ -10,10 +10,12 @@ PY ?= python
 # (bytes-on-wire vs the Thm-4/§IV-F formulas + loopback admission path),
 # the QPS smoke (closed-loop batched-vs-unbatched serving: stacked
 # sweep beats sequential per-tenant solves on wave p99 at T=32, zero
-# bitwise exactness violations), and the sketch smoke (fused
+# bitwise exactness violations), the sketch smoke (fused
 # featurize->Gram ingest vs the unfused XLA reference, §IV-F wire-byte
-# closed forms, mixed dense/sketched solve_many bucketing) so
-# experiments/repro/ tracks serving, write-path, and wire perf per PR.
+# closed forms, mixed dense/sketched solve_many bucketing), and the chaos
+# smoke (WAL crash-recovery replay rate + bit-identical restore, snapshot-
+# bounded replay, seeded-fault federation exactness) so experiments/repro/
+# tracks serving, write-path, wire, and durability perf per PR.
 .PHONY: tier1
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -24,6 +26,7 @@ tier1:
 	PYTHONPATH=src $(PY) benchmarks/wire_bench.py --smoke
 	PYTHONPATH=src $(PY) benchmarks/qps_bench.py --smoke
 	PYTHONPATH=src $(PY) benchmarks/sketch_bench.py --smoke
+	PYTHONPATH=src $(PY) benchmarks/chaos_bench.py --smoke
 
 # Standalone wire gate: the codec suite (golden frames, roundtrip fuzz,
 # mutation fuzz) plus the out-of-process federation e2e (loopback, TCP,
@@ -76,6 +79,17 @@ sketch-smoke:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_sketch_kernels.py \
 		tests/test_feature_tenants.py
 	PYTHONPATH=src $(PY) benchmarks/sketch_bench.py --smoke
+
+# Standalone durability/chaos gate: the crash-recovery suite (WAL scan +
+# torn-tail truncation, SIGKILL-mid-stream subprocess restart with
+# bit-identical weights and zero re-uploads, dedup'd duplicate retries) and
+# the seeded chaos suite (every fault class >=10%, bit-exact convergence
+# over loopback and a TCP byte-mangling proxy), then the chaos bench smoke.
+.PHONY: chaos-smoke
+chaos-smoke:
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_durability.py \
+		tests/test_chaos.py tests/test_checkpoint.py
+	PYTHONPATH=src $(PY) benchmarks/chaos_bench.py --smoke
 
 .PHONY: test
 test:

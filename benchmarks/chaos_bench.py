@@ -1,0 +1,247 @@
+"""Durability & chaos benchmark: crash-recovery cost and exactness claims.
+
+Three measurement axes for the journaled ``EnginePool`` + chaos harness:
+
+  * **recovery time vs journal length** — ingest N wire frames through the
+    WAL, crash without a snapshot, time the restore-from-journal
+    construction; records replay frames/s. Claims gate that every frame
+    replays and the recovered Phase-3 weights are BIT-identical to the
+    pre-crash pool's — recovery is exact, not approximate. The largest
+    journal also gets a torn tail (garbage appended after the crash) that
+    the CRC scan must truncate without affecting replay.
+  * **snapshot compaction** — the same ingest with ``snapshot_every`` set:
+    the restore replays at most ``snapshot_every`` frames no matter how
+    long the history is (bounded recovery), still bit-identical.
+  * **chaos convergence** — a loopback federation of retrying clients
+    behind a seeded ``ChaosChannel`` with EVERY fault class at a >=10%
+    rate; claims the pool still lands on the bit-exact cold
+    ``core.fusion`` solution with each duplicate fused exactly once.
+
+Usage: PYTHONPATH=src python benchmarks/chaos_bench.py [--smoke]
+Emits a CSV + BENCH JSON under experiments/repro/ and prints a BENCH line.
+"""
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/chaos_bench.py`
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import common
+from repro.fed import wire
+
+SIGMA = 0.1
+D = 32          # frame dimension for the journal benches
+ROWS = 8        # rows per client frame
+
+
+def _int_stats_raw(rng, client_id: str) -> bytes:
+    """An encoded StatsFrame over small-integer rows (f32 sums stay exact
+    under any fuse order, so bitwise claims survive replay/retry order)."""
+    A = rng.integers(-3, 4, (ROWS, D)).astype(np.float64)
+    b = rng.integers(-3, 4, (ROWS,)).astype(np.float64)
+    frame = wire.StatsFrame(tri=(A.T @ A)[np.tril_indices(D)],
+                            moment=A.T @ b, count=ROWS, dim=D,
+                            client_id=client_id, wire_dtype="f32")
+    return wire.encode_frame(frame, dtype="f32")
+
+
+def _ingest(pool, raws) -> None:
+    for raw in raws:
+        pool.admit_frame("t", wire.decode_frame(raw), encoded_len=len(raw),
+                         placement="dense", raw=raw)
+
+
+def _crash(pool) -> None:
+    """Simulate SIGKILL: journal fd gone, no final snapshot, no clean close."""
+    pool._journal.close()
+    pool._closed = True
+    pool.stop_flusher()
+
+
+def _weights(pool) -> bytes:
+    return np.asarray(pool.solve("t", SIGMA)).tobytes()
+
+
+def _bench_recovery(claims: common.Claims, rows: list, smoke: bool) -> None:
+    from repro.server import EnginePool
+
+    lengths = [32, 128] if smoke else [64, 256, 1024]
+    rng = np.random.default_rng(0)
+
+    # Warm the jit caches (admission fuse + solve at dimension D) so the
+    # first timed restore measures replay, not compilation.
+    with tempfile.TemporaryDirectory() as tmp:
+        with EnginePool(journal_dir=tmp, journal_fsync=False) as warm:
+            _ingest(warm, [_int_stats_raw(rng, "warm")])
+            _weights(warm)
+
+    for n in lengths:
+        torn = n == max(lengths)
+        raws = [_int_stats_raw(rng, f"c{i}") for i in range(n)]
+        with tempfile.TemporaryDirectory() as tmp:
+            pool = EnginePool(journal_dir=tmp, journal_fsync=False)
+            t0 = time.perf_counter()
+            _ingest(pool, raws)
+            ingest_s = time.perf_counter() - t0
+            ref = _weights(pool)
+            _crash(pool)
+            if torn:
+                # A torn live tail (the crash landed mid-append): the CRC
+                # scan must truncate it without touching committed records.
+                seg = max(Path(tmp).glob("wal_*.log"))
+                with seg.open("ab") as f:
+                    f.write(b"\x7f" * 37)
+
+            t0 = time.perf_counter()
+            restored = EnginePool(journal_dir=tmp, journal_fsync=False)
+            recovery_s = time.perf_counter() - t0
+            got = _weights(restored)
+            rows.append({
+                "name": f"replay_n{n}" + ("_torn" if torn else ""),
+                "journal_frames": n, "torn_tail": torn,
+                "ingest_s": ingest_s,
+                "recovery_s": recovery_s,
+                "replay_fps": n / recovery_s,
+                "replayed_frames": restored.replayed_frames,
+            })
+            claims.check(
+                f"recovery_replays_all_n{n}",
+                restored.replayed_frames == n,
+                f"replayed {restored.replayed_frames}/{n} in "
+                f"{recovery_s * 1e3:.0f} ms ({n / recovery_s:.0f} frames/s)")
+            claims.check(f"recovery_bit_identical_n{n}", got == ref,
+                         "recovered Phase-3 weights == pre-crash bits")
+            restored.close()
+
+
+def _bench_snapshot(claims: common.Claims, rows: list, smoke: bool) -> None:
+    from repro.server import EnginePool
+
+    n = 128 if smoke else 512
+    every = 32
+    rng = np.random.default_rng(1)
+    raws = [_int_stats_raw(rng, f"c{i}") for i in range(n)]
+    with tempfile.TemporaryDirectory() as tmp:
+        pool = EnginePool(journal_dir=tmp, journal_fsync=False,
+                          snapshot_every=every)
+        _ingest(pool, raws)
+        ref = _weights(pool)
+        snaps = pool.snapshots_taken
+        _crash(pool)
+
+        t0 = time.perf_counter()
+        restored = EnginePool(journal_dir=tmp, journal_fsync=False)
+        recovery_s = time.perf_counter() - t0
+        rows.append({
+            "name": f"snapshot_every{every}_n{n}",
+            "journal_frames": n, "snapshot_every": every,
+            "snapshots_taken": snaps,
+            "recovery_s": recovery_s,
+            "replayed_frames": restored.replayed_frames,
+            "restored_tenants": restored.restored_tenants,
+        })
+        claims.check(
+            "snapshot_bounds_replay",
+            restored.restored_tenants == 1
+            and restored.replayed_frames <= every <= n,
+            f"{n}-frame history recovered from snapshot + "
+            f"{restored.replayed_frames} replayed (bound {every}) in "
+            f"{recovery_s * 1e3:.0f} ms")
+        claims.check("snapshot_recovery_bit_identical",
+                     _weights(restored) == ref, "")
+        restored.close()
+
+
+def _bench_chaos(claims: common.Claims, rows: list, smoke: bool) -> None:
+    from repro.core import fusion
+    from repro.core.sufficient_stats import compute_stats
+    from repro.fed import chaos, transport
+    from repro.server import EnginePool
+
+    clients = 6 if smoke else 12
+    rate = 0.15
+    sched = chaos.ChaosSchedule(chaos.ChaosConfig.uniform(rate), seed=42)
+    rng = np.random.default_rng(2)
+    retries = 0
+    t0 = time.perf_counter()
+    with EnginePool() as pool:
+        disp = transport.WireDispatcher(pool)
+        stats = []
+        for i in range(clients):
+            A = rng.integers(-3, 4, (ROWS, D)).astype(np.float32)
+            b = rng.integers(-3, 4, (ROWS,)).astype(np.float32)
+            s = compute_stats(A, b)
+            stats.append(s)
+            client = transport.ResilientClient(
+                chaos.chaos_channel_factory(
+                    lambda: transport.LoopbackChannel(disp), sched,
+                    sleep=lambda _s: None),
+                tenant="t", offers=("f32",), retries=100,
+                backoff_s=0.001, jitter=0.5, seed=100 + i,
+                sleep=lambda _s: None)
+            client.upload_stats(s, client_id=f"c{i}")
+            retries += client.retries_used
+            client.close()
+        wall_s = time.perf_counter() - t0
+
+        fused = stats[0]
+        for s in stats[1:]:
+            fused = fused + s
+        ref = np.asarray(fusion.solve_ridge(fused, SIGMA)).tobytes()
+        eng = pool.get("t")
+        summary = sched.summary()
+        rows.append({
+            "name": f"chaos_rate{rate}_clients{clients}",
+            "clients": clients, "fault_rate": rate,
+            "requests": summary["requests"],
+            "faults_fired": sum(summary["fired"].values()),
+            "client_retries": retries,
+            "dedup_hits": pool.tenant("t").duplicates,
+            "wall_s": wall_s,
+        })
+        claims.check(
+            f"chaos_bit_exact_rate{rate}",
+            _weights(pool) == ref
+            and int(eng.backend.count) == ROWS * clients
+            and len(eng.client_ids) == clients,
+            f"{clients} clients exact under {sum(summary['fired'].values())} "
+            f"faults / {summary['requests']} requests "
+            f"({retries} retries, {pool.tenant('t').duplicates} dedup hits)")
+
+
+def run(smoke: bool = False) -> list[dict]:
+    claims = common.Claims("chaos")
+    rows: list[dict] = []
+    _bench_recovery(claims, rows, smoke)
+    _bench_snapshot(claims, rows, smoke)
+    _bench_chaos(claims, rows, smoke)
+
+    common.write_csv("chaos_bench", rows)
+    common.write_json("chaos_bench",
+                      {"smoke": smoke, "rows": rows, "claims": claims.rows()})
+    print("BENCH " + json.dumps({
+        r["name"]: round(r["recovery_s"] * 1e3, 1) if "recovery_s" in r
+        else r["requests"]
+        for r in rows}))
+    return claims.rows()
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small journals / few clients for CI")
+    args = ap.parse_args()
+    failed = [c for c in run(smoke=args.smoke) if not c["pass"]]
+    sys.exit(1 if failed else 0)

@@ -20,11 +20,12 @@ import time
 
 
 def main(smoke: bool = False) -> None:
-    from benchmarks import (extensions, fig_3, fusion_engine_bench,
-                            kernels_bench, mutation_bench, pool_bench,
-                            qps_bench, sharded_fusion_bench, sketch_bench,
-                            table_ii, table_iii, table_iv, table_v,
-                            table_vi, table_vii, wire_bench)
+    from benchmarks import (chaos_bench, extensions, fig_3,
+                            fusion_engine_bench, kernels_bench,
+                            mutation_bench, pool_bench, qps_bench,
+                            sharded_fusion_bench, sketch_bench, table_ii,
+                            table_iii, table_iv, table_v, table_vi,
+                            table_vii, wire_bench)
 
     modules = [
         ("table_ii", table_ii), ("table_iii", table_iii),
@@ -38,6 +39,7 @@ def main(smoke: bool = False) -> None:
         ("wire", wire_bench),
         ("qps", qps_bench),
         ("sketch", sketch_bench),
+        ("chaos", chaos_bench),
     ]
     all_claims = []
     for name, mod in modules:

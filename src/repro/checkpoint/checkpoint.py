@@ -21,7 +21,15 @@ def _flatten(tree) -> dict[str, np.ndarray]:
     out = {}
     for path, leaf in flat:
         key = jax.tree_util.keystr(path)
-        out[key] = np.asarray(leaf)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" and arr.dtype.names is None:
+            # ml_dtypes extension types (bfloat16, float8_*) round-trip
+            # through npz as raw void bytes that np.load cannot cast back.
+            # Every such type embeds exactly in float32, and load_pytree
+            # casts onto the template's dtype anyway, so widening here is
+            # lossless.
+            arr = arr.astype(np.float32)
+        out[key] = arr
     return out
 
 

@@ -1,4 +1,4 @@
-from repro.fed import transport, wire
+from repro.fed import chaos, transport, wire
 from repro.fed.comm import (
     CommRecord,
     ShardedCommRecord,
@@ -24,5 +24,5 @@ __all__ = [
     "PackedStats", "RunResult", "run_centralized", "run_loco_cv",
     "run_one_shot", "run_one_shot_projected",
     "IterativeConfig", "one_gradient_step", "run_iterative",
-    "wire", "transport",
+    "wire", "transport", "chaos",
 ]

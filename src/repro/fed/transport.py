@@ -29,18 +29,36 @@ tests can pin the server's ledger against what clients actually sent.
 """
 from __future__ import annotations
 
+import logging
+import random
 import socket
 import threading
-from typing import Sequence
+import time
+import traceback
+from typing import Callable, Sequence
 
 import numpy as np
 
 from repro.fed import wire
 
+logger = logging.getLogger(__name__)
+
 
 class TransportError(RuntimeError):
     """A reply the protocol does not allow (rejection where success was
     required, or an unexpected frame type)."""
+
+
+class RejectedError(TransportError):
+    """A typed server rejection: the reply was a well-formed
+    ``AckFrame(ok=False)``. Carries the ACK so callers can branch on its
+    ``retryable`` flag — the server's claim about whether a byte-identical
+    re-send could succeed (transient corruption / internal error) or is
+    pointless (dim mismatch, unknown client, quota)."""
+
+    def __init__(self, ack: wire.AckFrame):
+        super().__init__(f"rejected: {ack.message}")
+        self.ack = ack
 
 
 # ACK messages can embed client-controlled text (a 64KB client id inside an
@@ -54,7 +72,9 @@ def _bounded_ack(frame):
         raw = frame.message.encode("utf-8")
         if len(raw) > MAX_ACK_MESSAGE_BYTES:
             msg = raw[:MAX_ACK_MESSAGE_BYTES].decode("utf-8", "ignore")
-            return wire.AckFrame(frame.ok, msg + "...[truncated]")
+            return wire.AckFrame(frame.ok, msg + "...[truncated]",
+                                 retryable=frame.retryable,
+                                 duplicate=frame.duplicate)
     return frame
 
 
@@ -106,8 +126,11 @@ class WireDispatcher:
         self.frames_handled = 0
         self.frames_rejected = 0
         self.uploads_admitted = 0
+        self.duplicates_acked = 0
+        self.connection_errors = 0
         self.bytes_in = 0
         self.bytes_out = 0
+        self._conn_error_logged = False
 
     def _count(self, **deltas: int) -> None:
         with self._lock:
@@ -123,6 +146,8 @@ class WireDispatcher:
                 "frames_handled": self.frames_handled,
                 "frames_rejected": self.frames_rejected,
                 "uploads_admitted": self.uploads_admitted,
+                "duplicates_acked": self.duplicates_acked,
+                "connection_errors": self.connection_errors,
                 "bytes_in": self.bytes_in,
                 "bytes_out": self.bytes_out,
             }
@@ -147,9 +172,12 @@ class _Session:
         try:
             frame = wire.decode_frame(data)
         except wire.WireError as e:
+            # Decode failures are transient from the client's view: the
+            # frame may have been corrupted in transit, and a clean re-send
+            # of the same bytes can succeed (dedup makes the retry safe).
             d._count(frames_rejected=1)
             return self._reply(wire.AckFrame(
-                False, f"{type(e).__name__}: {e}"))
+                False, f"{type(e).__name__}: {e}", retryable=True))
         if isinstance(frame, wire.Hello):
             self.tenant = frame.tenant or self.tenant
             try:
@@ -174,14 +202,21 @@ class _Session:
             else:
                 reply = d.pool.admit_frame(self.tenant, frame,
                                            encoded_len=len(data),
-                                           placement=d.placement)
+                                           placement=d.placement, raw=data)
         except Exception as e:  # noqa: BLE001 - a frame must never kill the
             # session thread; the protocol contract is a typed-error ACK.
+            # Internal errors (including a journal I/O failure, which raises
+            # BEFORE anything was applied) are retryable by WAL ordering.
             d._count(frames_rejected=1)
             return self._reply(wire.AckFrame(
-                False, f"internal error: {type(e).__name__}: {e}"))
+                False, f"internal error: {type(e).__name__}: {e}",
+                retryable=True))
         if isinstance(reply, wire.AckFrame) and not reply.ok:
             d._count(frames_rejected=1)
+        elif isinstance(reply, wire.AckFrame) and reply.duplicate:
+            # A dedup hit fused nothing: counted separately so admission
+            # loops ("wait for N uploads") never double-count a retry.
+            d._count(duplicates_acked=1)
         elif isinstance(frame, (wire.StatsFrame, wire.ProjectedFrame,
                                 wire.RFFFrame, wire.DeltaRowsFrame)):
             d._count(uploads_admitted=1)
@@ -371,11 +406,12 @@ class FrameServer:
                     # header: report the typed error, then hang up. Counted
                     # like any other rejected frame (handled + rejected +
                     # reply bytes) so the dispatcher summary stays
-                    # consistent with what clients observed.
+                    # consistent with what clients observed. Retryable: the
+                    # client reconnects and re-sends on a clean stream.
                     self.dispatcher._count(frames_handled=1,
                                            frames_rejected=1)
                     ack = wire.encode_frame(_bounded_ack(wire.AckFrame(
-                        False, f"{type(e).__name__}: {e}")))
+                        False, f"{type(e).__name__}: {e}", retryable=True)))
                     self.dispatcher._count(bytes_out=len(ack))
                     try:
                         conn.sendall(ack)
@@ -386,6 +422,17 @@ class FrameServer:
                     conn.sendall(session.handle(data))
                 except OSError:
                     break
+        except Exception:  # noqa: BLE001 - a connection thread must never
+            # vanish silently: count the death, log the traceback once per
+            # dispatcher (the first occurrence is the diagnostic; repeats
+            # under load would just flood the log).
+            with self.dispatcher._lock:
+                self.dispatcher.connection_errors += 1
+                first = not self.dispatcher._conn_error_logged
+                self.dispatcher._conn_error_logged = True
+            if first:
+                logger.error("connection thread died unexpectedly:\n%s",
+                             traceback.format_exc())
         finally:
             try:
                 conn.close()
@@ -489,7 +536,7 @@ class FrameClient:
         """Phase-3 query: the fused ridge weights at ``sigma``."""
         reply = self._roundtrip(wire.SolveFrame(float(sigma)))
         if isinstance(reply, wire.AckFrame):
-            raise TransportError(f"solve rejected: {reply.message}")
+            raise RejectedError(reply)
         if not isinstance(reply, wire.WeightsFrame):
             raise TransportError(f"bad SOLVE reply: {type(reply).__name__}")
         return reply.w
@@ -519,5 +566,173 @@ class FrameClient:
         if not isinstance(reply, wire.AckFrame):
             raise TransportError(f"expected ACK, got {type(reply).__name__}")
         if not reply.ok:
-            raise TransportError(f"rejected: {reply.message}")
+            raise RejectedError(reply)
         return reply
+
+
+# -- resilient client --------------------------------------------------------
+
+class ResilientClient:
+    """A :class:`FrameClient` that survives crashes, partitions, and lost
+    ACKs: reconnect-and-resume with bounded exponential backoff.
+
+    The retry loop leans entirely on the server's idempotency machinery —
+    a re-sent frame is byte-identical (same negotiated dtype, deterministic
+    encoding), so a retry whose original actually landed (the lost-ACK
+    case) answers ``duplicate=True`` and fuses nothing twice. Retryable
+    events: connection drops/timeouts, garbage replies, and server ACKs
+    with the ``retryable`` flag (transient corruption, internal errors).
+    Terminal events: rejections with ``retryable=False`` (dim mismatch,
+    unknown client, quota, negotiation) — retrying those re-fails forever.
+
+    Backoff is ``backoff_s * 2**attempt``, capped at ``max_backoff_s``,
+    scaled by ``1 + jitter * U(-1, 1)`` from a dedicated seeded
+    ``random.Random`` — schedules are reproducible per (seed, attempt
+    sequence), never synchronized across clients (pick distinct seeds).
+    """
+
+    def __init__(self, channel_factory: Callable[[], object], *,
+                 tenant: str = "default",
+                 offers: Sequence[str] = ("f32",),
+                 retries: int = 5, backoff_s: float = 0.05,
+                 jitter: float = 0.5, max_backoff_s: float = 2.0,
+                 seed: int = 0,
+                 sleep: Callable[[float], None] = time.sleep):
+        self._factory = channel_factory
+        self._tenant = tenant
+        self._offers = tuple(offers)
+        self.retries = int(retries)
+        self.backoff_s = float(backoff_s)
+        self.jitter = float(jitter)
+        self.max_backoff_s = float(max_backoff_s)
+        self._rng = random.Random(seed)
+        self._sleep = sleep
+        self.client: FrameClient | None = None
+        self.retries_used = 0
+        self.reconnects = 0
+        self.duplicate_acks = 0
+        # Totals folded in from every connection this client has owned.
+        self.bytes_uploaded = 0
+        self.frames_sent = 0
+        self.bytes_sent = 0
+        self.bytes_received = 0
+
+    # -- protocol (same surface as FrameClient) ------------------------------
+
+    def hello(self) -> str:
+        return self._call(lambda c: c.dtype)
+
+    def upload_stats(self, stats, client_id: str = "") -> wire.AckFrame:
+        return self._call(lambda c: c.upload_stats(stats, client_id))
+
+    def upload_packed(self, packed, client_id: str = "") -> wire.AckFrame:
+        return self._call(lambda c: c.upload_packed(packed, client_id))
+
+    def upload_projected(self, packed, **kw) -> wire.AckFrame:
+        return self._call(lambda c: c.upload_projected(packed, **kw))
+
+    def upload_rff(self, packed, **kw) -> wire.AckFrame:
+        return self._call(lambda c: c.upload_rff(packed, **kw))
+
+    def stream_rows(self, A, b, client_id: str = "") -> wire.AckFrame:
+        return self._call(lambda c: c.stream_rows(A, b, client_id))
+
+    def control(self, op: str, client_id: str) -> wire.AckFrame:
+        return self._call(lambda c: c.control(op, client_id))
+
+    def solve(self, sigma: float) -> np.ndarray:
+        return self._call(lambda c: c.solve(sigma))
+
+    def close(self) -> None:
+        self._drop_connection()
+
+    def __enter__(self) -> "ResilientClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def dtype(self) -> str:
+        return self.client.dtype if self.client is not None else "f32"
+
+    def summary(self) -> dict:
+        out = {"retries": self.retries_used,
+               "reconnects": self.reconnects,
+               "duplicate_acks": self.duplicate_acks,
+               "bytes_uploaded": self.bytes_uploaded,
+               "frames_sent": self.frames_sent,
+               "bytes_sent": self.bytes_sent,
+               "bytes_received": self.bytes_received}
+        c = self.client
+        if c is not None:    # fold the live connection's counters in
+            out["bytes_uploaded"] += c.bytes_uploaded
+            out["frames_sent"] += c.frames_sent
+            out["bytes_sent"] += c.bytes_sent
+            out["bytes_received"] += c.bytes_received
+        return out
+
+    # -- plumbing ------------------------------------------------------------
+
+    def _connect(self) -> FrameClient:
+        if self.client is None:
+            client = FrameClient(self._factory())
+            try:
+                # Re-HELLO on every (re)connect: the session's tenant binding
+                # and negotiated dtype are connection-scoped server state.
+                client.hello(self._tenant, self._offers)
+            except BaseException:
+                client.close()
+                raise
+            self.client = client
+            self.reconnects += 1
+        return self.client
+
+    def _drop_connection(self) -> None:
+        if self.client is not None:
+            self.bytes_uploaded += self.client.bytes_uploaded
+            self.frames_sent += self.client.frames_sent
+            self.bytes_sent += self.client.bytes_sent
+            self.bytes_received += self.client.bytes_received
+            try:
+                self.client.close()
+            except OSError:
+                pass
+            self.client = None
+
+    def _backoff(self, attempt: int) -> None:
+        delay = min(self.backoff_s * (2.0 ** attempt), self.max_backoff_s)
+        delay *= 1.0 + self.jitter * self._rng.uniform(-1.0, 1.0)
+        if delay > 0:
+            self._sleep(delay)
+
+    def _call(self, op: Callable[[FrameClient], object]):
+        """Run one protocol operation with retry/reconnect. ``op`` closes
+        over frame *inputs*, not encoded bytes: a resend re-encodes under
+        the (re)negotiated dtype, which the server dedups by content CRC."""
+        last: BaseException | None = None
+        for attempt in range(self.retries + 1):
+            if attempt:
+                self.retries_used += 1
+                self._backoff(attempt - 1)
+            try:
+                out = op(self._connect())
+            except RejectedError as e:
+                last = e
+                if not e.ack.retryable:
+                    raise
+                continue   # session survived a typed rejection: same conn
+            except (ConnectionError, socket.timeout, OSError,
+                    wire.WireError, TransportError) as e:
+                # Stream-level failure: the connection's state (and whether
+                # the request applied) is unknowable — reconnect and re-send;
+                # the dedup index makes the ambiguity safe.
+                last = e
+                self._drop_connection()
+                continue
+            if isinstance(out, wire.AckFrame) and out.duplicate:
+                self.duplicate_acks += 1
+            return out
+        raise TransportError(
+            f"gave up after {self.retries} retries: "
+            f"{type(last).__name__}: {last}") from last

@@ -96,6 +96,13 @@ FT_HELLO, FT_STATS, FT_PROJ, FT_DELTA = 0x01, 0x02, 0x03, 0x04
 FT_CONTROL, FT_SOLVE, FT_WEIGHTS, FT_ACK = 0x05, 0x06, 0x07, 0x08
 FT_RFF = 0x09
 
+# Header flags bits defined for ACK frames only (append-only extension: every
+# other frame type still requires flags == 0, so pre-existing encodings of
+# all frame types — including old ACKs — are byte-identical).
+ACK_FLAG_RETRYABLE = 0x01    # transient rejection: safe to re-send, dedup'd
+ACK_FLAG_DUPLICATE = 0x02    # upload was already fused; nothing applied twice
+_ACK_FLAGS_MASK = ACK_FLAG_RETRYABLE | ACK_FLAG_DUPLICATE
+
 # -- dtype registry ----------------------------------------------------------
 
 DTYPE_TAGS = {"f32": 1, "f64": 2, "bf16": 3}
@@ -367,10 +374,30 @@ class WeightsFrame:
 
 @dataclasses.dataclass(frozen=True)
 class AckFrame:
-    """Status reply. Payload: u8 ok, u16 msg_len, message utf-8."""
+    """Status reply. Payload: u8 ok, u16 msg_len, message utf-8.
+
+    Two append-only bits ride the header's flags byte (ACK frames only;
+    every other frame type still requires flags == 0, so all pre-existing
+    encodings are untouched):
+
+      * bit 0 — ``retryable``: the rejection is transient (transit damage,
+        an internal hiccup); the client may re-send the SAME frame and rely
+        on server-side dedup. Cleared for semantic rejections (dimension
+        mismatch, space mixing, quota, negotiation failure) — retrying those
+        can never succeed.
+      * bit 1 — ``duplicate``: this upload was already journaled and fused;
+        the server deduplicated it (idempotent replay after a lost ACK) and
+        nothing was applied twice. Always paired with ``ok=True``.
+
+    A v1 peer that predates these bits decodes them as a reserved-flags
+    rejection only for NON-ACK frames; old ACK bytes (flags=0) decode to
+    ``retryable=False, duplicate=False`` and re-encode byte-identically.
+    """
 
     ok: bool
     message: str = ""
+    retryable: bool = False
+    duplicate: bool = False
 
 
 Frame = (Hello | StatsFrame | ProjectedFrame | RFFFrame | DeltaRowsFrame
@@ -487,8 +514,12 @@ def encode_frame(frame: Frame, *, dtype: str | None = None) -> bytes:
     else:
         raise BadFrameType(f"cannot encode {type(frame).__name__}")
 
+    flags = 0
+    if isinstance(frame, AckFrame):
+        flags = ((ACK_FLAG_RETRYABLE if frame.retryable else 0)
+                 | (ACK_FLAG_DUPLICATE if frame.duplicate else 0))
     header = _HEADER.pack(MAGIC, VERSION, _FRAME_TYPES[type(frame)],
-                          DTYPE_TAGS[name], 0, len(payload))
+                          DTYPE_TAGS[name], flags, len(payload))
     body = header + payload
     return body + struct.pack("<I", zlib.crc32(body) & 0xFFFFFFFF)
 
@@ -580,7 +611,12 @@ def decode_frame(buf: bytes) -> Frame:
     if len(buf) > total:
         raise BadLength(f"{len(buf) - total} trailing bytes after frame")
     _, _, ftype, dtag, flags, plen = _HEADER.unpack(buf[:HEADER_BYTES])
-    if flags != 0:
+    if ftype == FT_ACK:
+        if flags & ~_ACK_FLAGS_MASK:
+            raise PayloadError(
+                f"unknown ACK flags bits {flags:#04x} "
+                f"(defined mask {_ACK_FLAGS_MASK:#04x})")
+    elif flags != 0:
         raise PayloadError(f"reserved flags byte must be 0, got {flags}")
     (crc,) = struct.unpack("<I", buf[total - TRAILER_BYTES:total])
     actual = zlib.crc32(buf[:total - TRAILER_BYTES]) & 0xFFFFFFFF
@@ -670,7 +706,9 @@ def decode_frame(buf: bytes) -> Frame:
         (ok,) = cur.unpack("<B")
         if ok > 1:
             raise PayloadError(f"ack status must be 0/1, got {ok}")
-        frame = AckFrame(ok=bool(ok), message=cur.string())
+        frame = AckFrame(ok=bool(ok), message=cur.string(),
+                         retryable=bool(flags & ACK_FLAG_RETRYABLE),
+                         duplicate=bool(flags & ACK_FLAG_DUPLICATE))
     else:
         raise BadFrameType(f"unknown frame type {ftype:#04x}")
     cur.done()
@@ -720,6 +758,22 @@ def encoded_nbytes(payload, *, frame: str = "tri",
     if frame == "rff":
         return rff_frame_nbytes(payload.dim, name, client_id=client_id)
     raise ValueError(f"frame must be 'tri', 'proj', or 'rff', got {frame!r}")
+
+
+def frame_crc(data: bytes) -> int:
+    """A frame's own CRC32 trailer (the last 4 bytes of its encoding).
+
+    This is the payload fingerprint the server's idempotent-replay index
+    keys on: two byte-identical uploads share it by construction, and a
+    frame that differs in any byte (different stats, different count,
+    different client id) differs in it with CRC32 confidence. No re-hash:
+    the trailer was already computed at encode time.
+    """
+    if len(data) < OVERHEAD_BYTES:
+        raise TruncatedFrame(f"frame needs >= {OVERHEAD_BYTES} bytes, "
+                             f"got {len(data)}")
+    (crc,) = struct.unpack("<I", data[-TRAILER_BYTES:])
+    return crc
 
 
 def projection_hash(R) -> int:

@@ -47,14 +47,30 @@ def run_client(args: argparse.Namespace) -> dict:
     A, b = ds.clients[args.client_index]
 
     host, _, port = args.connect.rpartition(":")
-    channel = transport.TCPChannel(host or "127.0.0.1", int(port),
-                                   timeout_s=args.timeout)
-    client = transport.FrameClient(channel)
+    offers = tuple(args.offer.split(","))
+    resilient = args.retries > 0
+
+    def connect():
+        return transport.TCPChannel(host or "127.0.0.1", int(port),
+                                    timeout_s=args.timeout)
+
+    if resilient:
+        # Crash/partition-tolerant path: reconnect-and-resume with seeded
+        # exponential backoff. Safe to re-send blind after a lost ACK —
+        # the server dedups byte-identical frames (duplicate=True).
+        seed = (args.retry_seed if args.retry_seed is not None
+                else 1000 + args.client_index)   # distinct jitter per client
+        client = transport.ResilientClient(
+            connect, tenant=args.tenant, offers=offers,
+            retries=args.retries, backoff_s=args.backoff,
+            jitter=args.jitter, seed=seed)
+    else:
+        client = transport.FrameClient(connect())
     report: dict = {"tenant": args.tenant, "client_id": args.client_id,
                     "client_index": args.client_index}
     try:
-        offers = tuple(args.offer.split(","))
-        report["negotiated_dtype"] = client.hello(args.tenant, offers)
+        report["negotiated_dtype"] = (client.hello() if resilient
+                                      else client.hello(args.tenant, offers))
 
         features = args.features
         if args.projected and features == "none":
@@ -110,10 +126,19 @@ def run_client(args: argparse.Namespace) -> dict:
             report["solve"] = {"sigma": args.solve,
                                "weights": np.asarray(w, np.float64).tolist()}
 
-        report.update(bytes_uploaded=client.bytes_uploaded,
-                      bytes_sent=client.bytes_sent,
-                      bytes_received=client.bytes_received,
-                      frames_sent=client.frames_sent, ok=True)
+        if resilient:
+            s = client.summary()
+            report.update(bytes_uploaded=s["bytes_uploaded"],
+                          bytes_sent=s["bytes_sent"],
+                          bytes_received=s["bytes_received"],
+                          frames_sent=s["frames_sent"],
+                          retries=s["retries"], reconnects=s["reconnects"],
+                          duplicate_acks=s["duplicate_acks"], ok=True)
+        else:
+            report.update(bytes_uploaded=client.bytes_uploaded,
+                          bytes_sent=client.bytes_sent,
+                          bytes_received=client.bytes_received,
+                          frames_sent=client.frames_sent, ok=True)
     finally:
         client.close()
     return report
@@ -170,6 +195,20 @@ def make_parser() -> argparse.ArgumentParser:
     ap.add_argument("--timeout", type=float, default=120.0,
                     help="socket timeout awaiting each server reply (the "
                          "server may be jit-compiling its first solve)")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="max retries per operation (0 = fail fast); >0 "
+                         "switches to the resilient client: reconnect, "
+                         "re-HELLO, and re-send on transient failures, "
+                         "relying on server-side dedup for lost ACKs")
+    ap.add_argument("--backoff", type=float, default=0.05, metavar="S",
+                    help="base retry backoff in seconds (doubles per "
+                         "attempt, capped at 2s)")
+    ap.add_argument("--jitter", type=float, default=0.5,
+                    help="backoff jitter fraction in [0,1]: each delay is "
+                         "scaled by 1 + jitter*U(-1,1) from --retry-seed")
+    ap.add_argument("--retry-seed", type=int, default=None,
+                    help="seed for the jitter schedule (default: derived "
+                         "from --client-index so clients desynchronize)")
     return ap
 
 

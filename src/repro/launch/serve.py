@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import threading
 import time
 
 import jax
@@ -354,7 +355,11 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
                flush_staleness_s: float = 0.05,
                max_warm: int | None = None,
                solve_window_s: float | None = None,
-               dtype_preference: tuple[str, ...] | None = None) -> dict:
+               dtype_preference: tuple[str, ...] | None = None,
+               journal_dir: str | None = None,
+               snapshot_every: int | None = None,
+               journal_fsync: bool = True,
+               chaos=None, chaos_seed: int = 0) -> dict:
     """Run the out-of-process federation server: an ``EnginePool`` behind a
     ``fed.transport.FrameServer`` speaking the ``fed.wire`` binary protocol.
 
@@ -370,7 +375,19 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
     window on the SOLVE path: queries from concurrent sessions landing
     within the window coalesce into one cross-tenant stacked sweep (a lone
     request on an idle server still dispatches immediately).
+
+    ``journal_dir`` makes the pool crash-safe: every admitted frame is
+    write-ahead-journaled before it fuses, the pool snapshots/compacts every
+    ``snapshot_every`` appends, a restart with the same directory restores
+    bit-exact state with zero client re-uploads, and SIGTERM triggers a
+    final snapshot before exit (so a clean shutdown replays nothing).
+    ``chaos`` (a ``fed.chaos.ChaosConfig``) puts a seeded fault-injecting
+    TCP proxy in front of the server — clients connect to the printed proxy
+    port and experience drops, duplicates, corruption, delays, and mid-frame
+    kills by deterministic schedule.
     """
+    import signal
+
     from repro.fed import transport
     from repro.server import CoalescerPolicy, EnginePool
 
@@ -380,41 +397,78 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
           if dtype_preference is not None else {})
     if solve_window_s is not None:
         kw["solve_window_s"] = solve_window_s
-    pool = EnginePool(max_warm=max_warm, default_coalesce=policy)
-    with pool, transport.FrameServer(pool, port=port, placement=placement,
-                                     **kw) as srv:
-        print(f"[serve_wire] listening on {srv.host}:{srv.port}", flush=True)
-        deadline = time.monotonic() + timeout_s
-        while time.monotonic() < deadline:
-            done = (expect_uploads
-                    and srv.dispatcher.uploads_admitted >= expect_uploads
-                    and srv.active_connections == 0)
-            if done:
-                break
-            time.sleep(0.02)
-        solves = {}
-        tenant_reports = {}
-        for name in pool.tenant_names:
-            # solve_report rides solve_lifted == what SOLVE frames served:
-            # the report's weights and the clients' WEIGHTS downloads can
-            # never diverge. For §IV-F tenants it also carries the map
-            # dimensions, upload-float count and Prop-3 error bound.
-            rep = pool.solve_report(name, sigma)
-            w = rep.pop("weights")
-            solves[name] = np.asarray(jax.device_get(w), np.float64).tolist()
-            tenant_reports[name] = rep
-        ledger = pool.ledger()
-        report = {
-            "port": srv.port,
-            "transport": srv.dispatcher.summary(),
-            "connections_total": srv.connections_total,
-            "tenants": list(pool.tenant_names),
-            "sigma": sigma,
-            "weights": solves,
-            "tenant_reports": tenant_reports,
-            "ledger": ledger,
-            "pool": pool.summary(),
-        }
+    pool = EnginePool(max_warm=max_warm, default_coalesce=policy,
+                      journal_dir=journal_dir, snapshot_every=snapshot_every,
+                      journal_fsync=journal_fsync)
+    if pool.replayed_frames or pool.restored_tenants:
+        print(f"[serve_wire] recovered {pool.restored_tenants} tenants from "
+              f"snapshot + {pool.replayed_frames} replayed journal frames",
+              flush=True)
+    term = threading.Event()
+    installed = False
+    try:
+        # Final-snapshot-then-exit on SIGTERM: the handler only sets a flag;
+        # the actual snapshot runs on the main thread via pool.close() (the
+        # context-manager exit), which is idempotent and flusher-safe.
+        signal.signal(signal.SIGTERM, lambda signum, frame: term.set())
+        installed = True
+    except ValueError:        # not the main thread (in-process test driver)
+        pass
+    proxy = None
+    try:
+        with pool, transport.FrameServer(pool, port=port,
+                                         placement=placement, **kw) as srv:
+            if chaos is not None:
+                from repro.fed.chaos import ChaosProxy, ChaosSchedule
+
+                proxy = ChaosProxy(srv.host, srv.port,
+                                   ChaosSchedule(chaos, chaos_seed)).start()
+                print(f"[serve_wire] chaos proxy on "
+                      f"{proxy.host}:{proxy.port} (seed={chaos_seed})",
+                      flush=True)
+            print(f"[serve_wire] listening on {srv.host}:{srv.port}",
+                  flush=True)
+            deadline = time.monotonic() + timeout_s
+            while time.monotonic() < deadline and not term.is_set():
+                done = (expect_uploads
+                        and srv.dispatcher.uploads_admitted >= expect_uploads
+                        and srv.active_connections == 0)
+                if done:
+                    break
+                time.sleep(0.02)
+            solves = {}
+            tenant_reports = {}
+            for name in pool.tenant_names:
+                # solve_report rides solve_lifted == what SOLVE frames
+                # served: the report's weights and the clients' WEIGHTS
+                # downloads can never diverge. For §IV-F tenants it also
+                # carries the map dims, upload floats and Prop-3 bound.
+                rep = pool.solve_report(name, sigma)
+                w = rep.pop("weights")
+                solves[name] = np.asarray(jax.device_get(w),
+                                          np.float64).tolist()
+                tenant_reports[name] = rep
+            ledger = pool.ledger()
+            report = {
+                "port": srv.port,
+                "proxy_port": proxy.port if proxy is not None else None,
+                "sigterm": term.is_set(),
+                "transport": srv.dispatcher.summary(),
+                "connections_total": srv.connections_total,
+                "tenants": list(pool.tenant_names),
+                "sigma": sigma,
+                "weights": solves,
+                "tenant_reports": tenant_reports,
+                "ledger": ledger,
+                "pool": pool.summary(),
+            }
+            if proxy is not None:
+                report["chaos"] = proxy.schedule.summary()
+    finally:
+        if proxy is not None:
+            proxy.stop()
+        if installed:
+            signal.signal(signal.SIGTERM, signal.SIG_DFL)
     tr = report["transport"]
     print(f"[serve_wire] {tr['frames_handled']} frames "
           f"({tr['uploads_admitted']} uploads admitted, "
@@ -500,16 +554,55 @@ def main() -> None:
                          "restarted server replays compiled executables "
                          "from disk instead of re-paying every jit compile "
                          "in its first requests' tail latencies")
+    ap.add_argument("--journal-dir", type=str, default=None, metavar="DIR",
+                    help="with --listen: write-ahead journal + snapshot "
+                         "directory; every admitted frame is journaled "
+                         "before it fuses, and a restart with the same DIR "
+                         "restores bit-exact state with zero re-uploads")
+    ap.add_argument("--snapshot-every", type=int, default=None, metavar="N",
+                    help="with --journal-dir: snapshot/compact after every "
+                         "N journaled frames (default: only at shutdown)")
+    ap.add_argument("--no-journal-fsync", action="store_true",
+                    help="skip fsync per journal append (faster; crash "
+                         "window widens to OS flush semantics)")
+    for fault in ("drop", "corrupt", "kill", "duplicate", "reorder",
+                  "delay", "drop-reply"):
+        ap.add_argument(f"--chaos-{fault}", type=float, default=0.0,
+                        metavar="RATE",
+                        help=f"with --listen: per-frame {fault} probability "
+                             f"injected by the chaos proxy")
+    ap.add_argument("--chaos-rate", type=float, default=0.0, metavar="RATE",
+                    help="with --listen: shorthand setting EVERY chaos "
+                         "fault to RATE")
+    ap.add_argument("--chaos-delay-s", type=float, default=0.005,
+                    help="injected latency per delay fault")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed of the chaos proxy's fault schedule")
     args = ap.parse_args()
     if args.compilation_cache:
         enable_compilation_cache(args.compilation_cache)
     if args.mode == "fusion" and args.listen is not None:
+        from repro.fed.chaos import ChaosConfig
+
+        if args.chaos_rate > 0:
+            chaos = ChaosConfig.uniform(args.chaos_rate,
+                                        delay_s=args.chaos_delay_s)
+        else:
+            rates = {f: getattr(args, f"chaos_{f}")
+                     for f in ("drop", "corrupt", "kill", "duplicate",
+                               "reorder", "delay", "drop_reply")}
+            chaos = (ChaosConfig(**rates, delay_s=args.chaos_delay_s)
+                     if any(r > 0 for r in rates.values()) else None)
         serve_wire(port=args.listen, expect_uploads=args.expect_uploads,
                    timeout_s=args.serve_timeout, sigma=args.sigma,
                    coalesce_rank=args.coalesce_rank,
                    flush_staleness_s=args.flush_staleness,
                    max_warm=args.max_warm,
-                   solve_window_s=args.solve_window)
+                   solve_window_s=args.solve_window,
+                   journal_dir=args.journal_dir,
+                   snapshot_every=args.snapshot_every,
+                   journal_fsync=not args.no_journal_fsync,
+                   chaos=chaos, chaos_seed=args.chaos_seed)
         return
     if args.mode == "fusion":
         res = serve_fusion(dim=args.dim, tenants=args.tenants,

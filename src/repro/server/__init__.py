@@ -33,11 +33,16 @@ from repro.server.cholesky import (chol_rank1, chol_update,
                                    psd_update_vectors)
 from repro.server.distributed import ShardedBackend, ShardedFactor
 from repro.server.engine import CoalescerPolicy, FusionEngine
+# durability (and pool) pull in repro.fed for the wire codec, and
+# fed.protocol imports FusionEngine/LinalgBackend/ShardedBackend back from
+# this package — those names must be bound before the cycle re-enters here.
+from repro.server.durability import DurableStore, Journal, scan_segment
 from repro.server.pool import AdmissionError, EnginePool, Tenant
 from repro.server.select import auto_backend, backend_threshold, prefer_sharded
 
 __all__ = ["FusionEngine", "CoalescerPolicy", "EnginePool", "Tenant",
-           "AdmissionError", "SolveBatcher", "solve_stacked", "solve_snapshot",
+           "AdmissionError", "DurableStore", "Journal", "scan_segment",
+           "SolveBatcher", "solve_stacked", "solve_snapshot",
            "LinalgBackend", "DenseBackend",
            "ShardedBackend", "ShardedFactor", "auto_backend",
            "backend_threshold", "prefer_sharded", "chol_rank1", "chol_update",

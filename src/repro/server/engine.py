@@ -397,6 +397,40 @@ class FusionEngine:
         self._clients[client_id] = s if prev is None else prev + s
         self._touch_factors(s, vectors, sign=1.0)
 
+    def export_ledger(self) -> tuple[dict[Hashable, SuffStats],
+                                     dict[Hashable, SuffStats]]:
+        """Snapshot of the retained ledger: ``(clients, dropped)`` stats.
+
+        Drains the coalescer queue first, so the export is consistent with
+        ``stats`` read at the same point. Dropped clients export their
+        statistics only — the drop-time update vectors are a factor-cache
+        optimization, and a restored process starts with cold factors anyway.
+        """
+        self.flush()
+        return (dict(self._clients),
+                {cid: s for cid, (s, _) in self._dropped.items()})
+
+    def import_ledger(self, clients: Mapping[Hashable, SuffStats],
+                      dropped: Mapping[Hashable, SuffStats]) -> None:
+        """Install a retained ledger (crash-recovery restore path).
+
+        The fused backend state is NOT touched: the caller restored it via
+        ``from_stats`` and this re-attaches the per-client decomposition the
+        snapshot captured alongside it. Only valid on an engine whose ledger
+        is still empty — anything else would double-count contributions.
+        """
+        if self._clients or self._dropped or self._pending:
+            raise ValueError("import_ledger requires an empty ledger "
+                             f"({len(self._clients)} clients, "
+                             f"{len(self._dropped)} dropped, "
+                             f"{len(self._pending)} pending)")
+        for cid, s in list(clients.items()) + list(dropped.items()):
+            if s.dim != self.dim:
+                raise ValueError(f"client {cid!r} stats dim {s.dim} != "
+                                 f"engine dim {self.dim}")
+        self._clients = dict(clients)
+        self._dropped = {cid: (s, None) for cid, s in dropped.items()}
+
     def apply(self, fn: Callable[[SuffStats], SuffStats]) -> None:
         """Post-process fused stats (e.g. privacy.psd_repair); drops caches.
 

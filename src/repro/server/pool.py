@@ -85,6 +85,12 @@ class Tenant:
     wire_upload_bytes: int = 0     # encoded bytes of admitted upload frames
     wire_download_bytes: int = 0   # encoded bytes of replies (weights/acks)
     feature_map: FeatureMap | None = None  # §IV-F map identity (sketch / rff)
+    # Idempotent-replay index: (client_id, frame CRC32) of every upload frame
+    # journaled+fused so far. A byte-identical re-send (client retry after a
+    # lost ACK) hits this set and gets a duplicate=True ACK instead of fusing
+    # twice. Persisted in snapshots, rebuilt by journal replay.
+    dedup: set = dataclasses.field(default_factory=set)
+    duplicates: int = 0            # retried frames answered duplicate=True
     background_flushes: int = 0    # flushes driven by the pool's thread
     max_flush_age_s: float = 0.0   # oldest delta age ever seen at a drain
     factor_evictions: int = 0      # LRU evictions of this tenant's factors
@@ -130,6 +136,7 @@ class Tenant:
                 "wire_frames": self.wire_frames,
                 "wire_upload_bytes": self.wire_upload_bytes,
                 "wire_download_bytes": self.wire_download_bytes,
+                "duplicates": self.duplicates,
                 "background_flushes": self.background_flushes,
                 "max_flush_age_s": self.max_flush_age_s,
                 "factor_evictions": self.factor_evictions,
@@ -147,7 +154,11 @@ class EnginePool:
                  max_tenants: int | None = None,
                  stat_budget_bytes: int | None = None,
                  max_clients_per_tenant: int | None = None,
-                 default_coalesce: CoalescerPolicy | None = None):
+                 default_coalesce: CoalescerPolicy | None = None,
+                 journal_dir: str | None = None,
+                 snapshot_every: int | None = None,
+                 journal_fsync: bool = True,
+                 journal_placement: str = "dense"):
         """Args:
           mesh: mesh shared by every sharded tenant; built lazily
             (``launch.mesh.make_cpu_mesh(mesh_devices)``) when omitted and a
@@ -169,6 +180,23 @@ class EnginePool:
             cap are refused (anonymous and repeat-id ingests always pass).
           default_coalesce: coalescer policy for tenants that don't pass
             their own.
+          journal_dir: directory for crash-safe state (``server.durability``):
+            every upload/control frame admitted through :meth:`admit_frame`
+            is write-ahead journaled before it is applied, and construction
+            RESTORES the pool from the directory's latest committed snapshot
+            plus a replay of the journal tail (a torn tail is CRC-detected
+            and truncated, never half-applied). ``None`` (default) keeps the
+            pool purely in-memory. Python-API mutations (``ingest`` etc.)
+            are NOT journaled — they become durable at the next snapshot.
+          snapshot_every: journal appends between automatic
+            snapshot/compaction cycles (``None``: only :meth:`snapshot` and
+            ``close()`` snapshot).
+          journal_fsync: fsync every journal append (default — an ACKed
+            frame survives power loss) vs OS-flush only (faster; a crash
+            may lose the last few ACKed frames, which retrying clients
+            re-send and the dedup index absorbs).
+          journal_placement: placement for tenants recreated by journal
+            replay that no snapshot covers yet.
         """
         self._tenants: dict[str, Tenant] = {}
         self._reg_lock = threading.RLock()
@@ -187,6 +215,24 @@ class EnginePool:
         self.admission_rejections = 0
         self._flusher: threading.Thread | None = None
         self._stop = threading.Event()
+        # -- durability (server.durability) ---------------------------------
+        self.snapshot_every = snapshot_every
+        self._journal_placement = journal_placement
+        self._store = None
+        self._journal = None
+        self._snap_lock = threading.Lock()
+        self._close_lock = threading.Lock()
+        self._closed = False
+        self._replaying = False
+        self._appends_since_snap = 0
+        self.snapshots_taken = 0
+        self.replayed_frames = 0
+        self.restored_tenants = 0
+        if journal_dir is not None:
+            from repro.server.durability import DurableStore
+
+            self._store = DurableStore(journal_dir, fsync=journal_fsync)
+            self._restore_durable()
 
     # -- registry ------------------------------------------------------------
 
@@ -457,10 +503,196 @@ class EnginePool:
                 return True
         return False
 
+    # -- durability: WAL + snapshot/compaction (server.durability) ------------
+
+    @property
+    def journaled(self) -> bool:
+        return self._store is not None
+
+    def _restore_durable(self) -> None:
+        """Rebuild pool state from the journal directory (construction path).
+
+        Latest committed snapshot first (bitwise-exact fused arrays, ledger,
+        feature maps, dedup index, wire counters), then replay of every
+        journaled frame the snapshot has not absorbed: the snapshot recorded,
+        per tenant, its offset into the segment it switched to, so replay
+        skips exactly the frames captured inside it. Frames re-admit through
+        :meth:`admit_frame` with journaling suppressed — same guards, same
+        counters, same fuse order (the journal serialized them under the
+        tenant lock), zero client re-uploads.
+        """
+        journal, plan = self._store.open_journal()
+        snap = self._store.load_snapshot()
+        offsets: dict[str, int] = {}
+        placements: dict[str, str] = {}
+        snap_seq = None
+        if snap is not None:
+            snap_seq, meta, tree = snap
+            self._restore_snapshot(meta, tree)
+            offsets = {t["name"]: t["offset"] for t in meta["tenants"]}
+            placements = {t["name"]: t["placement"]
+                          for t in meta["tenants"]}
+        self._journal = journal
+        self._replaying = True
+        try:
+            for seg_seq, res in plan:
+                for rec in res.records:
+                    if (seg_seq == snap_seq
+                            and rec.offset < offsets.get(rec.tenant, 0)):
+                        continue   # already inside the snapshot
+                    self.admit_frame(
+                        rec.tenant, rec.frame, encoded_len=len(rec.raw),
+                        placement=placements.get(rec.tenant,
+                                                 self._journal_placement),
+                        raw=rec.raw)
+                    self.replayed_frames += 1
+        finally:
+            self._replaying = False
+
+    def _restore_snapshot(self, meta: dict, tree: dict) -> None:
+        from repro.server.durability import _untag_id
+
+        def unstats(entry) -> SuffStats:
+            return SuffStats(gram=entry["gram"], moment=entry["moment"],
+                             count=jnp.asarray(int(entry["count"]),
+                                               jnp.int32))
+
+        for ti, tm in enumerate(meta["tenants"]):
+            entry = tree[f"t{ti}"]
+            fm = (FeatureMap(**tm["feature_map"])
+                  if tm.get("feature_map") else None)
+            engine = self.create_tenant(
+                tm["name"], stats=unstats(entry["fused"]),
+                placement=tm["placement"], dtype=jnp.dtype(tm["dtype"]),
+                features=fm)
+            clients = {_untag_id(tag): unstats(entry["clients"][f"c{i}"])
+                       for i, tag in enumerate(tm["clients"])}
+            dropped = {_untag_id(tag): unstats(entry["dropped"][f"d{i}"])
+                       for i, tag in enumerate(tm["dropped"])}
+            engine.import_ledger(clients, dropped)
+            t = self.tenant(tm["name"])
+            t.dedup = {(cid, crc) for cid, crc in tm["dedup"]}
+            c = tm["counters"]
+            t.wire_frames = c["wire_frames"]
+            t.wire_upload_bytes = c["wire_upload_bytes"]
+            # Download bytes are snapshot-only: replay produces no replies,
+            # so replies sent after the capture are not re-counted.
+            t.wire_download_bytes = c["wire_download_bytes"]
+            t.streamed_floats = c["streamed_floats"]
+            t.duplicates = c.get("duplicates", 0)
+            self.restored_tenants += 1
+
+    def snapshot(self) -> int | None:
+        """Commit one snapshot + compaction cycle; returns its sequence
+        number (``None`` on a non-journaled pool).
+
+        The journal first switches to a fresh segment, then every tenant is
+        captured one lock at a time — recording the new segment's offset at
+        its capture, so the snapshot plus the segment tail is always a
+        consistent cut (see ``server.durability``). Older segments and
+        snapshots are pruned after the commit record lands.
+        """
+        if self._store is None:
+            return None
+        with self._snap_lock:
+            return self._snapshot_durable()
+
+    def _snapshot_durable(self) -> int:
+        import dataclasses as _dc
+
+        from repro.server.durability import _tag_id, stats_entry
+
+        seq = self._store.next_seq()
+        if self._journal is not None and not self._journal.closed:
+            self._journal.switch(self._store.segment_path(seq))
+        self._appends_since_snap = 0
+        tree: dict = {}
+        tenants_meta: list[dict] = []
+        for ti, t in enumerate(self._snapshot()):
+            with t.lock:
+                eng = t.engine
+                clients, dropped = eng.export_ledger()
+                fused = eng.backend.stats()
+                cids, dids = list(clients), list(dropped)
+                tree[f"t{ti}"] = {
+                    "fused": stats_entry(fused.gram, fused.moment,
+                                         fused.count),
+                    "clients": {f"c{i}": stats_entry(clients[c].gram,
+                                                     clients[c].moment,
+                                                     clients[c].count)
+                                for i, c in enumerate(cids)},
+                    "dropped": {f"d{i}": stats_entry(dropped[c].gram,
+                                                     dropped[c].moment,
+                                                     dropped[c].count)
+                                for i, c in enumerate(dids)},
+                }
+                tenants_meta.append({
+                    "name": t.name,
+                    "placement": t.placement,
+                    "dim": eng.dim,
+                    "dtype": str(jnp.dtype(eng.dtype)),
+                    "offset": (self._journal.size
+                               if self._journal is not None
+                               and not self._journal.closed else 0),
+                    "clients": [_tag_id(c) for c in cids],
+                    "dropped": [_tag_id(c) for c in dids],
+                    "feature_map": (_dc.asdict(t.feature_map)
+                                    if t.feature_map is not None else None),
+                    "dedup": sorted([cid, crc] for cid, crc in t.dedup),
+                    "counters": {
+                        "wire_frames": t.wire_frames,
+                        "wire_upload_bytes": t.wire_upload_bytes,
+                        "wire_download_bytes": t.wire_download_bytes,
+                        "streamed_floats": t.streamed_floats,
+                        "duplicates": t.duplicates,
+                    },
+                })
+        self._store.commit_snapshot(seq, tree, {"seq": seq,
+                                                "tenants": tenants_meta})
+        self._store.prune(seq)
+        self.snapshots_taken += 1
+        return seq
+
+    def _maybe_snapshot(self) -> None:
+        """Deferred compaction trigger — called with NO tenant lock held
+        (the ``_maybe_evict`` pattern); skips when a snapshot is running."""
+        if (self._store is None or self.snapshot_every is None
+                or self._appends_since_snap < self.snapshot_every):
+            return
+        if not self._snap_lock.acquire(blocking=False):
+            return
+        try:
+            if self._appends_since_snap >= self.snapshot_every:
+                self._snapshot_durable()
+        finally:
+            self._snap_lock.release()
+
+    @staticmethod
+    def _frame_raw(frame, raw: bytes | None) -> bytes:
+        """The frame's canonical encoded bytes (what transports received, or
+        a re-encode at the frame's own wire dtype — byte-identical by the
+        decode/re-encode contract the golden fixtures pin)."""
+        if raw is not None:
+            return raw
+        from repro.fed import wire
+
+        return wire.encode_frame(
+            frame, dtype=getattr(frame, "wire_dtype", None))
+
+    def _journal_append(self, name: str, frame,
+                        raw: bytes | None) -> None:
+        """WAL ordering: durably journal BEFORE applying. Raises on I/O
+        failure — the transport answers with a retryable internal-error ACK
+        and nothing was applied, so a retry is safe."""
+        if self._journal is None or self._replaying:
+            return
+        self._journal.append(name, self._frame_raw(frame, raw))
+        self._appends_since_snap += 1
+
     # -- wire-frame admission (fed.wire / fed.transport) ----------------------
 
     def admit_frame(self, name: str, frame, *, encoded_len: int = 0,
-                    placement: str = "dense"):
+                    placement: str = "dense", raw: bytes | None = None):
         """Feed one decoded ``fed.wire`` frame into tenant ``name``.
 
         This is the server half of the wire protocol: upload frames
@@ -473,11 +705,42 @@ class EnginePool:
         for upload frames, so ``ledger()['wire_upload_bytes']`` is the sum
         of real encoded frame lengths, not a float-count formula.
 
+        ``raw`` is the frame's encoded wire bytes when the caller has them
+        (transports always do). When present — or when the pool is
+        journaled — uploads are deduplicated on ``(client_id, frame CRC)``:
+        a byte-identical re-send after a lost ACK answers
+        ``AckFrame(duplicate=True)`` and fuses nothing twice. Journaled
+        pools write the raw frame to the WAL *before* applying it, so a
+        crash between the two replays the frame on restart rather than
+        losing it.
+
         Returns the reply frame (``AckFrame`` or ``WeightsFrame``).
         Protocol-level problems (dim mismatch, unknown tenant/client,
         conflicting sketch) come back as ``AckFrame(ok=False)`` — the
         session survives; only programming errors raise.
         """
+        reply = self._admit_frame_inner(name, frame,
+                                        encoded_len=encoded_len,
+                                        placement=placement, raw=raw)
+        if self._store is not None and not self._replaying:
+            # Deferred compaction: runs with no tenant lock held, so the
+            # snapshot's one-lock-at-a-time capture cannot deadlock against
+            # the admission path that triggered it.
+            self._maybe_snapshot()
+        return reply
+
+    def _dedup_key(self, frame, raw: bytes | None):
+        """The idempotency key for an upload, or None on the Python-API
+        fast path (no wire bytes anywhere: nothing to dedup against, and a
+        non-journaled in-process caller never retries blind)."""
+        if raw is None and self._store is None:
+            return None
+        from repro.fed import wire
+
+        return (frame.client_id, wire.frame_crc(self._frame_raw(frame, raw)))
+
+    def _admit_frame_inner(self, name: str, frame, *, encoded_len: int,
+                           placement: str, raw: bytes | None):
         from repro.fed import wire
 
         if isinstance(frame, wire.Hello):
@@ -500,10 +763,24 @@ class EnginePool:
                     if err is not None:
                         return wire.AckFrame(False, err)
                     cid = frame.client_id or None
+                    key = self._dedup_key(frame, raw)
+                    if key is not None and key in t.dedup:
+                        t.duplicates += 1
+                        return wire.AckFrame(
+                            True, f"duplicate upload d={packed.dim} already "
+                                  f"fused", duplicate=True)
+                    # Quota BEFORE the WAL: a refused frame must never be
+                    # journaled (replay would re-refuse, but the journal
+                    # should hold only applied frames). The re-check inside
+                    # _locked is free under the held RLock.
+                    self._check_client_quota(t, cid)
+                    self._journal_append(name, frame, raw)
                     self._locked(name,
                                  lambda e: e.ingest(packed.unpack(),
                                                     client_id=cid),
                                  wire_bytes=encoded_len, quota_client=cid)
+                    if key is not None:
+                        t.dedup.add(key)
                 return wire.AckFrame(True, f"ingested d={packed.dim} "
                                            f"count={int(packed.count)}")
             if isinstance(frame, wire.DeltaRowsFrame):
@@ -515,16 +792,47 @@ class EnginePool:
                     if err is not None:
                         return wire.AckFrame(False, err)
                     cid = frame.client_id or None
+                    key = self._dedup_key(frame, raw)
+                    if key is not None and key in t.dedup:
+                        t.duplicates += 1
+                        return wire.AckFrame(
+                            True, f"duplicate rows already fused",
+                            duplicate=True)
+                    self._check_client_quota(t, cid)
+                    self._journal_append(name, frame, raw)
                     self._locked(name,
                                  lambda e: e.ingest_rows(A, b, client_id=cid),
                                  wire_bytes=encoded_len, quota_client=cid)
+                    if key is not None:
+                        t.dedup.add(key)
                 return wire.AckFrame(True, f"ingested {A.shape[0]} rows")
             if isinstance(frame, wire.ControlFrame):
                 if name not in self:
                     return wire.AckFrame(False, f"unknown tenant {name!r}")
+                t = self.tenant(name)
                 op = (FusionEngine.drop if frame.op == "drop"
                       else FusionEngine.restore)
-                self._locked(name, lambda e: op(e, frame.client_id))
+                with t.lock:
+                    # Idempotency needs the engine's *settled* membership:
+                    # drain queued deltas first (with staleness accounting).
+                    self._locked(name, lambda e: e.flush())
+                    eng = t.engine
+                    cid = frame.client_id
+                    already = (cid in eng.dropped_ids
+                               and cid not in eng.client_ids
+                               if frame.op == "drop"
+                               else cid in eng.client_ids
+                               and cid not in eng.dropped_ids)
+                    if already:
+                        t.duplicates += 1
+                        return wire.AckFrame(
+                            True, f"{frame.op} {cid!r} already applied",
+                            duplicate=True)
+                    if (cid not in eng.client_ids
+                            and cid not in eng.dropped_ids):
+                        raise KeyError(cid)
+                    self._journal_append(name, frame, raw)
+                    self._locked(name, lambda e: op(e, cid))
                 return wire.AckFrame(True, f"{frame.op} {frame.client_id!r}")
             if isinstance(frame, wire.SolveFrame):
                 if name not in self:
@@ -954,23 +1262,54 @@ class EnginePool:
         return self._flusher is not None and self._flusher.is_alive()
 
     def stop_flusher(self, timeout: float = 5.0) -> None:
-        """Stop and join the flusher thread (no daemon leak across tests)."""
-        if self._flusher is None:
+        """Stop and join the flusher thread (no daemon leak across tests).
+
+        Idempotent and re-entrant: safe from ``__del__``, ``atexit``, and
+        signal handlers — calling it twice (or from the flusher having
+        already stopped) is a no-op, never an error.
+        """
+        flusher = self._flusher
+        if flusher is None:
             return
         self._stop.set()
-        self._flusher.join(timeout=timeout)
-        if self._flusher.is_alive():   # pragma: no cover - join timed out
+        if flusher is threading.current_thread():  # pragma: no cover
+            self._flusher = None    # signal handler ran ON the flusher
+            return
+        flusher.join(timeout=timeout)
+        if flusher.is_alive():   # pragma: no cover - join timed out
             raise RuntimeError("EnginePool flusher failed to stop")
         self._flusher = None
 
     def close(self) -> None:
+        """Shut the pool down: stop the flusher, commit a final snapshot
+        (journaled pools), and close the journal. Idempotent and safe from
+        ``__exit__``, ``__del__``, ``atexit``, and signal handlers in any
+        combination: every call stops a (re)started flusher, but the
+        durability finalization runs exactly once."""
         self.stop_flusher()
+        if self._store is None:
+            return
+        with self._close_lock:
+            if self._closed:
+                return
+            self._closed = True
+        try:
+            self.snapshot()    # final durable cut: restart replays zero
+        finally:
+            if self._journal is not None:
+                self._journal.close()
 
     def __enter__(self) -> "EnginePool":
         return self
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+    def __del__(self) -> None:   # pragma: no cover - interpreter teardown
+        try:
+            self.close()
+        except Exception:
+            pass
 
     # -- observability --------------------------------------------------------
 
@@ -1043,5 +1382,10 @@ class EnginePool:
             "admission_rejections": self.admission_rejections,
             "resident_stat_bytes": self.resident_stat_bytes(),
             "warm_tenants": len(self.warm_tenants()),
+            "journaled": self.journaled,
+            "snapshots_taken": self.snapshots_taken,
+            "replayed_frames": self.replayed_frames,
+            "restored_tenants": self.restored_tenants,
+            "duplicates": sum(t.duplicates for t in snapshot),
             "per_tenant": {t.name: t.summary() for t in snapshot},
         }

@@ -76,7 +76,8 @@ def main() -> None:
                        "wire_dtype": dtype}
         for field in ("dim", "count", "client_id", "d_orig", "seed", "rhash",
                       "fhash", "lengthscale",
-                      "sigma", "op", "ok", "message", "tenant", "offers"):
+                      "sigma", "op", "ok", "message", "tenant", "offers",
+                      "retryable", "duplicate"):
             if hasattr(decoded, field):
                 v = getattr(decoded, field)
                 entry[field] = list(v) if isinstance(v, tuple) else v
@@ -158,6 +159,18 @@ def main() -> None:
                    dec.moment.astype("<f8"), SIGMA)
         emit(f"rff_{dt}", frame, dtype=dt,
              extra={"sigma_ref": SIGMA, "weights_ref": w.tolist()})
+
+    # --- ACK flag bits (retryable / duplicate) ------------------------------
+    # Appended after everything above (ACK fixtures consume no rng, so the
+    # earlier fixtures' bytes are untouched). The flags live in the header's
+    # previously-always-zero flags byte: old fixtures decode to False/False
+    # and re-encode byte-identically; these pin the two new bits' layout.
+    emit("ack_retryable",
+         wire.AckFrame(False, "internal error: transient", retryable=True),
+         dtype="f32")
+    emit("ack_duplicate",
+         wire.AckFrame(True, "duplicate upload d=6 already fused",
+                       duplicate=True), dtype="f32")
 
     (HERE / "expected.json").write_text(json.dumps(expected, indent=1,
                                                    sort_keys=True))

@@ -1,0 +1,263 @@
+"""Seeded chaos harness: federation converges EXACTLY under injected faults.
+
+The acceptance pin: with every fault class firing at >= 10% per request —
+drops, lost ACKs, duplicated frames, stale reorders, bit corruption, delays,
+mid-frame kills — retrying clients plus the server's dedup index still drive
+the pool to the **bit-exact** cold ``core.fusion`` solution, with every
+duplicate fused exactly once. Runs at two depths:
+
+  * ``ChaosChannel`` over loopback — no sockets; the schedule/retry/dedup
+    interplay pinned fast enough for tier-1.
+  * ``ChaosProxy`` over real TCP — the same faults as mangled bytes between
+    real sockets, including the mid-frame kill whose torn stream the server
+    must shrug off.
+
+Everything is drawn from one seeded ``random.Random``: a failing schedule
+replays exactly from its seed (determinism is itself pinned below).
+"""
+import numpy as np
+import pytest
+
+from repro.core import fusion
+from repro.core.sufficient_stats import compute_stats
+from repro.fed import chaos, transport, wire
+from repro.server import EnginePool
+
+SIGMA = 0.1
+
+
+def _int_rows(rng, n, d):
+    """Small-integer rows: f32 sums are exact regardless of fuse order, so
+    a chaos run (arbitrary retry interleaving) stays bitwise comparable."""
+    A = rng.integers(-3, 4, (n, d)).astype(np.float32)
+    b = rng.integers(-3, 4, (n,)).astype(np.float32)
+    return A, b
+
+
+class TestScheduleDeterminism:
+    def test_same_seed_same_schedule(self):
+        cfg = chaos.ChaosConfig.uniform(0.3)
+        a = chaos.ChaosSchedule(cfg, seed=123)
+        b = chaos.ChaosSchedule(cfg, seed=123)
+        draws_a = [a.draw(200 + i) for i in range(50)]
+        draws_b = [b.draw(200 + i) for i in range(50)]
+        assert draws_a == draws_b
+        assert a.summary() == b.summary()
+        assert sum(a.fired.values()) > 0
+
+    def test_different_seed_differs(self):
+        cfg = chaos.ChaosConfig.uniform(0.3)
+        a = chaos.ChaosSchedule(cfg, seed=1)
+        b = chaos.ChaosSchedule(cfg, seed=2)
+        assert ([a.draw(300) for _ in range(50)]
+                != [b.draw(300) for _ in range(50)])
+
+    def test_earlier_faults_stable_under_later_rate_changes(self):
+        """The fixed drawing order: fault k's decisions do not move when the
+        rates of faults AFTER it change (schedules stay comparable)."""
+        lo = chaos.ChaosConfig(drop=0.3, corrupt=0.3)
+        hi = chaos.ChaosConfig(drop=0.3, corrupt=0.3, delay=0.9,
+                               drop_reply=0.9)
+        a = chaos.ChaosSchedule(lo, seed=7)
+        b = chaos.ChaosSchedule(hi, seed=7)
+        for _ in range(100):
+            fa, _ = a.draw(500)
+            fb, _ = b.draw(500)
+            assert ([f for f in fa if f in ("drop", "corrupt")]
+                    == [f for f in fb if f in ("drop", "corrupt")])
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            chaos.ChaosConfig(drop=1.5)
+        with pytest.raises(ValueError):
+            chaos.ChaosConfig(delay_s=-0.1)
+        u = chaos.ChaosConfig.uniform(0.25)
+        assert all(u.rate(f) == 0.25 for f in chaos.FAULTS)
+
+    def test_flip_bit_flips_exactly_one(self):
+        data = bytes(range(32))
+        bit = 13 * 8 + 5
+        flipped = chaos.flip_bit(data, bit)
+        assert flipped != data
+        assert chaos.flip_bit(flipped, bit) == data
+        diff = [i for i in range(len(data)) if flipped[i] != data[i]]
+        assert diff == [13]
+
+    def test_corrupt_bit_lands_past_header(self):
+        cfg = chaos.ChaosConfig(corrupt=1.0)
+        sched = chaos.ChaosSchedule(cfg, seed=0)
+        for _ in range(50):
+            faults, bit = sched.draw(100)
+            assert faults == ["corrupt"]
+            assert bit >= wire.HEADER_BYTES * 8
+
+
+def _run_chaos_clients(pool, make_factory, *, num_clients, dim, seed,
+                      retries=80):
+    """Drive ``num_clients`` resilient uploads through chaos channels; returns
+    (client summaries, per-client stats used)."""
+    rng = np.random.default_rng(seed)
+    stats, summaries = [], []
+    for i in range(num_clients):
+        A, b = _int_rows(rng, 15, dim)
+        s = compute_stats(A, b)
+        stats.append(s)
+        client = transport.ResilientClient(
+            make_factory(i), tenant="t", offers=("f32",),
+            retries=retries, backoff_s=0.001, jitter=0.5, seed=100 + i,
+            sleep=lambda s: None)
+        ack = client.upload_stats(s, client_id=f"c{i}")
+        assert ack.ok
+        summaries.append(client.summary())
+        client.close()
+    return summaries, stats
+
+
+def _assert_exact(pool, stats, *, num_clients, sigma=SIGMA):
+    """The chaos pin: bit-exact vs the cold reference, duplicates fused once."""
+    fused = stats[0]
+    for s in stats[1:]:
+        fused = fused + s
+    ref = np.asarray(fusion.solve_ridge(fused, sigma))
+    w = np.asarray(pool.solve("t", sigma))
+    assert w.tobytes() == ref.tobytes()
+    eng = pool.get("t")
+    assert sorted(eng.client_ids) == [f"c{i}" for i in range(num_clients)]
+    assert int(eng.backend.count) == 15 * num_clients   # each row fused once
+
+
+class TestChaosChannelLoopback:
+    def test_ten_percent_everything_converges_bit_exact(self):
+        """6 clients, EVERY fault at 15%, seed 42: retries + dedup land the
+        pool on the bit-exact cold solution; all fault classes fired."""
+        cfg = chaos.ChaosConfig.uniform(0.15)
+        sched = chaos.ChaosSchedule(cfg, seed=42)
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+
+            def make_factory(i):
+                return chaos.chaos_channel_factory(
+                    lambda: transport.LoopbackChannel(disp), sched,
+                    sleep=lambda s: None)
+
+            summaries, stats = _run_chaos_clients(
+                pool, make_factory, num_clients=6, dim=6, seed=0)
+            _assert_exact(pool, stats, num_clients=6)
+
+            fired = sched.summary()["fired"]
+            assert all(fired[f] >= 1 for f in chaos.FAULTS), fired
+            assert sum(s["retries"] for s in summaries) > 0
+            assert sum(s["reconnects"] for s in summaries) >= 6
+            # Network-level retransmits (the duplicate/reorder faults) were
+            # absorbed by the dedup index, not re-fused.
+            assert pool.tenant("t").duplicates >= 1
+            assert disp.duplicates_acked == pool.tenant("t").duplicates
+
+    def test_lost_ack_heavy_schedule(self):
+        """kill + drop_reply at 40% — almost every upload's first ACK dies;
+        dedup is the only thing between this and double-fusion."""
+        cfg = chaos.ChaosConfig(kill=0.4, drop_reply=0.4)
+        sched = chaos.ChaosSchedule(cfg, seed=9)
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+
+            def make_factory(i):
+                return chaos.chaos_channel_factory(
+                    lambda: transport.LoopbackChannel(disp), sched,
+                    sleep=lambda s: None)
+
+            summaries, stats = _run_chaos_clients(
+                pool, make_factory, num_clients=4, dim=5, seed=1)
+            _assert_exact(pool, stats, num_clients=4)
+            assert pool.tenant("t").duplicates >= 1
+            # The client-visible side of the same story: re-sent uploads
+            # whose originals landed came back duplicate=True.
+            assert sum(s["duplicate_acks"] for s in summaries) >= 1
+            assert sum(s["reconnects"] for s in summaries) > 4  # re-dials
+
+    def test_corruption_answered_retryable_and_absorbed(self):
+        """corrupt=1.0 on the first request: the CRC catches the flip, the
+        server answers retryable=True, and the re-send (clean, by schedule)
+        succeeds on the same connection."""
+        cfg = chaos.ChaosConfig(corrupt=0.5)
+        sched = chaos.ChaosSchedule(cfg, seed=3)
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            factory = chaos.chaos_channel_factory(
+                lambda: transport.LoopbackChannel(disp), sched,
+                sleep=lambda s: None)
+            client = transport.ResilientClient(
+                factory, tenant="t", retries=50, backoff_s=0.0, jitter=0.0)
+            rng = np.random.default_rng(2)
+            for i in range(4):
+                s = compute_stats(*_int_rows(rng, 6, 4))
+                assert client.upload_stats(s, client_id=f"c{i}").ok
+            client.close()
+            assert sched.fired["corrupt"] >= 1
+            assert disp.frames_rejected >= sched.fired["corrupt"]
+            assert len(pool.get("t").client_ids) == 4
+
+
+@pytest.mark.slow
+class TestChaosProxyTCP:
+    def test_tcp_proxy_ten_percent_converges_bit_exact(self):
+        """Real sockets, every fault at 12% (mid-frame kills included): the
+        e2e chaos pin over actual mangled bytes."""
+        cfg = chaos.ChaosConfig.uniform(0.12, delay_s=0.001)
+        sched = chaos.ChaosSchedule(cfg, seed=11)
+        with EnginePool() as pool, transport.FrameServer(pool) as srv, \
+                chaos.ChaosProxy(srv.host, srv.port, sched,
+                                 timeout_s=10.0) as proxy:
+
+            def make_factory(i):
+                return lambda: transport.TCPChannel(
+                    proxy.host, proxy.port, timeout_s=10.0)
+
+            summaries, stats = _run_chaos_clients(
+                pool, make_factory, num_clients=4, dim=6, seed=5)
+
+            # Phase 3 over a CLEAN channel (the experiment is ingest chaos;
+            # a clean read shows what state the faults actually left).
+            chan = transport.TCPChannel(srv.host, srv.port)
+            client = transport.FrameClient(chan)
+            client.hello("t", ("f32",))
+            w = np.asarray(client.solve(SIGMA))
+            client.close()
+
+            fused = stats[0]
+            for s in stats[1:]:
+                fused = fused + s
+            ref = np.asarray(fusion.solve_ridge(fused, SIGMA))
+            assert w.tobytes() == ref.tobytes()
+            _assert_exact(pool, stats, num_clients=4)
+
+            assert sched.requests > 4           # faults forced re-sends
+            assert sum(sched.fired.values()) >= 1
+            assert sum(s["reconnects"] for s in summaries) >= 4
+
+    def test_mid_frame_kill_leaves_server_consistent(self):
+        """kill=1.0: every proxied frame arrives torn. No upload can land
+        through the proxy, the server survives every torn stream, and a
+        direct (clean) path still works afterwards."""
+        cfg = chaos.ChaosConfig(kill=1.0)
+        sched = chaos.ChaosSchedule(cfg, seed=13)
+        rng = np.random.default_rng(6)
+        s = compute_stats(*_int_rows(rng, 8, 5))
+        with EnginePool() as pool, transport.FrameServer(pool) as srv, \
+                chaos.ChaosProxy(srv.host, srv.port, sched,
+                                 timeout_s=5.0) as proxy:
+            client = transport.ResilientClient(
+                lambda: transport.TCPChannel(proxy.host, proxy.port,
+                                             timeout_s=5.0),
+                tenant="t", retries=2, backoff_s=0.001, jitter=0.0)
+            with pytest.raises(transport.TransportError):
+                client.upload_stats(s, client_id="c0")   # every path torn
+            client.close()
+            assert "t" not in pool                       # nothing half-fused
+
+            direct = transport.FrameClient(
+                transport.TCPChannel(srv.host, srv.port))
+            direct.hello("t", ("f32",))
+            assert direct.upload_stats(s, client_id="c0").ok
+            direct.close()
+            assert list(pool.get("t").client_ids) == ["c0"]

@@ -1,0 +1,588 @@
+"""Crash-safe durable federation: journal scan, snapshot+replay, dedup.
+
+The pin this file guards: a journaled ``EnginePool`` that dies at ANY point
+— mid-stream, mid-snapshot, with a torn record on disk — restarts into a
+state whose Phase-3 solve is **bit-identical** to a pool that never crashed,
+with **zero client re-uploads** (the paper's one-shot contract survives the
+server's death). Three layers:
+
+  * Journal/scan units — record framing, tenant markers, torn-tail
+    detection and truncation (``server.durability``).
+  * In-process pool crash/restore — dense + sharded + sketched + rff
+    tenants, snapshot-covers-prefix/replay-covers-tail, auto compaction,
+    Thm-8 control journaling, and the dedup index surviving restarts.
+  * Subprocess acceptance — ``serve.py --listen --journal-dir`` SIGKILLed
+    mid-ingest, restarted on the same directory: recovered report weights
+    exactly equal an uncrashed in-process reference, with the ledger
+    proving no client re-sent a byte. Plus SIGTERM -> final snapshot ->
+    zero-replay restart.
+
+Bitwise comparisons use small-integer-valued data so f32 summation is
+order-independent wherever order is not already pinned by the journal.
+"""
+import json
+import os
+import pathlib
+import re
+import signal
+import socket
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.features import FeatureMap
+from repro.core.sufficient_stats import compute_stats
+from repro.fed import transport, wire
+from repro.fed.protocol import PackedStats
+from repro.server import EnginePool
+from repro.server.durability import DurableStore, Journal, scan_segment
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SERVE_CLI = REPO / "src" / "repro" / "launch" / "serve.py"
+SIGMA = 0.1
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    return env
+
+
+def _int_rows(rng, n, d):
+    """Small-integer-valued rows: f32 sums are exact and order-free."""
+    A = rng.integers(-3, 4, (n, d)).astype(np.float32)
+    b = rng.integers(-3, 4, (n,)).astype(np.float32)
+    return A, b
+
+
+def _stats_raw(A, b, client_id, dtype="f32"):
+    frame = wire.StatsFrame.from_stats(compute_stats(A, b),
+                                       client_id=client_id)
+    return wire.encode_frame(frame, dtype=dtype)
+
+
+def _admit_raw(pool, tenant, raw, *, placement="dense"):
+    """What a transport does: decoded frame + the exact bytes received."""
+    return pool.admit_frame(tenant, wire.decode_frame(raw),
+                            encoded_len=len(raw), placement=placement,
+                            raw=raw)
+
+
+def _crash(pool):
+    """Simulate SIGKILL: the journal's fd goes away, nothing else runs.
+    (``_closed = True`` suppresses ``__del__``'s graceful final snapshot —
+    a killed process never gets one.)"""
+    if pool._journal is not None:
+        pool._journal.close()
+    pool._closed = True
+    pool.stop_flusher()
+
+
+def _w(pool, name, sigma=SIGMA):
+    return np.asarray(jax.device_get(pool.solve_lifted(name, sigma)))
+
+
+# -- journal / scan units -----------------------------------------------------
+
+class TestJournalScan:
+    def test_roundtrip_records_tenants_markers(self, tmp_path):
+        j = Journal(tmp_path / "wal.log")
+        rng = np.random.default_rng(0)
+        raws = [_stats_raw(*_int_rows(rng, 4, 3), f"c{i}") for i in range(3)]
+        j.append("alpha", raws[0])
+        j.append("alpha", raws[1])   # same binding: no second marker
+        j.append("beta", raws[2])
+        assert (j.appends, j.markers) == (3, 2)
+        j.close()
+
+        res = scan_segment(tmp_path / "wal.log")
+        assert not res.torn
+        assert res.good_bytes == (tmp_path / "wal.log").stat().st_size
+        assert [r.tenant for r in res.records] == ["alpha", "alpha", "beta"]
+        assert [r.raw for r in res.records] == raws
+        assert all(isinstance(r.frame, wire.StatsFrame)
+                   for r in res.records)
+
+    def test_torn_tail_detected_and_truncated(self, tmp_path):
+        j = Journal(tmp_path / "wal_00000000.log")
+        rng = np.random.default_rng(1)
+        raw = _stats_raw(*_int_rows(rng, 4, 3), "c0")
+        j.append("t", raw)
+        j.append("t", _stats_raw(*_int_rows(rng, 4, 3), "c1"))
+        j.close()
+        good = (tmp_path / "wal_00000000.log").stat().st_size
+
+        # A crash mid-write leaves a partial record: valid header bytes of a
+        # third frame, then nothing.
+        with open(tmp_path / "wal_00000000.log", "ab") as f:
+            f.write(raw[:len(raw) // 2])
+        res = scan_segment(tmp_path / "wal_00000000.log")
+        assert res.torn and len(res.records) == 2
+        assert res.good_bytes == good
+
+        # open_journal truncates the tail in place and appends continue.
+        store = DurableStore(tmp_path)
+        journal, plan = store.open_journal()
+        assert (tmp_path / "wal_00000000.log").stat().st_size == good
+        assert [seq for seq, _ in plan] == [0]
+        assert len(plan[0][1].records) == 2
+        journal.append("t", _stats_raw(*_int_rows(rng, 4, 3), "c2"))
+        journal.close()
+        assert not scan_segment(tmp_path / "wal_00000000.log").torn
+
+    def test_corrupt_record_stops_scan(self, tmp_path):
+        j = Journal(tmp_path / "wal.log")
+        rng = np.random.default_rng(2)
+        j.append("t", _stats_raw(*_int_rows(rng, 4, 3), "c0"))
+        off_second = j.size
+        j.append("t", _stats_raw(*_int_rows(rng, 4, 3), "c1"))
+        j.close()
+        data = bytearray((tmp_path / "wal.log").read_bytes())
+        data[off_second + wire.HEADER_BYTES + 4] ^= 0x10  # payload bit flip
+        (tmp_path / "wal.log").write_bytes(bytes(data))
+
+        res = scan_segment(tmp_path / "wal.log")
+        assert res.torn and len(res.records) == 1
+        assert "corrupt record" in res.reason
+
+    def test_half_header_tail(self, tmp_path):
+        (tmp_path / "wal.log").write_bytes(b"\x00" * (wire.HEADER_BYTES - 3))
+        res = scan_segment(tmp_path / "wal.log")
+        assert res.torn and not res.records and res.good_bytes == 0
+
+
+# -- in-process crash -> restore ----------------------------------------------
+
+def _feature_raw(fm, A, b, client_id):
+    packed = PackedStats.pack(fm.stats(A, b, use_pallas=False))
+    if fm.kind == "sketch":
+        frame = wire.ProjectedFrame(
+            tri=np.asarray(packed.tri), moment=np.asarray(packed.moment),
+            count=int(packed.count), dim=int(packed.dim), d_orig=fm.d_orig,
+            seed=fm.seed, rhash=fm.fhash, client_id=client_id)
+    else:
+        frame = wire.RFFFrame(
+            tri=np.asarray(packed.tri), moment=np.asarray(packed.moment),
+            count=int(packed.count), dim=int(packed.dim), d_orig=fm.d_orig,
+            seed=fm.seed, fhash=fm.fhash, lengthscale=fm.lengthscale,
+            client_id=client_id)
+    return wire.encode_frame(frame, dtype="f32")
+
+
+def _mixed_workload(seed=0):
+    """(tenant, placement, raw-frame) uploads across all four tenant kinds."""
+    rng = np.random.default_rng(seed)
+    sketch = FeatureMap("sketch", seed=5, d_orig=10, m=4)
+    rff = FeatureMap("rff", seed=6, d_orig=5, m=6)
+    uploads = []
+    for i in range(3):
+        uploads.append(("dense", "dense",
+                        _stats_raw(*_int_rows(rng, 6, 8), f"d{i}")))
+    for i in range(2):
+        uploads.append(("wide", "sharded",
+                        _stats_raw(*_int_rows(rng, 6, 8), f"s{i}")))
+    for i in range(2):
+        A, b = _int_rows(rng, 8, 10)
+        uploads.append(("sk", "dense", _feature_raw(sketch, A, b, f"p{i}")))
+    for i in range(2):
+        A, b = _int_rows(rng, 8, 5)
+        uploads.append(("fr", "dense", _feature_raw(rff, A, b, f"r{i}")))
+    return uploads
+
+
+class TestCrashRestore:
+    def test_mixed_kinds_bit_identical_after_crash(self, tmp_path):
+        """dense + sharded + sketched + rff tenants, snapshot mid-stream,
+        crash, restore: every tenant's lifted solve is bit-identical to an
+        uncrashed reference pool fed the same frames."""
+        uploads = _mixed_workload()
+        ref = EnginePool()
+        for tenant, placement, raw in uploads:
+            assert _admit_raw(ref, tenant, raw, placement=placement).ok
+        ref_w = {t: _w(ref, t) for t in ref.tenant_names}
+
+        p1 = EnginePool(journal_dir=tmp_path)
+        for i, (tenant, placement, raw) in enumerate(uploads):
+            assert _admit_raw(p1, tenant, raw, placement=placement).ok
+            if i == 4:
+                # Mid-stream snapshot: persists every tenant's placement
+                # (sharded included) and arrays; later frames replay.
+                p1.snapshot()
+        names = p1.tenant_names
+        _crash(p1)
+
+        p2 = EnginePool(journal_dir=tmp_path)
+        # The snapshot covered the 2 tenants that existed at the cut; the
+        # feature tenants arrive entirely via journal replay.
+        assert p2.restored_tenants == 2
+        assert p2.replayed_frames == len(uploads) - 5  # frames after the cut
+        assert set(p2.tenant_names) == set(names)
+        assert p2.tenant("wide").backend_name == "sharded"
+        assert p2.tenant("sk").kind == "sketched"
+        assert p2.tenant("fr").kind == "rff"
+        for t in names:
+            assert _w(p2, t).tobytes() == ref_w[t].tobytes(), t
+            # The client ledger came back too (Thm-8 membership intact).
+            assert (sorted(map(str, p2.get(t).client_ids))
+                    == sorted(map(str, ref.get(t).client_ids)))
+        _crash(p2)
+
+    def test_replay_only_no_snapshot(self, tmp_path):
+        """Crash before any snapshot: pure journal replay reconstructs the
+        tenant from frame zero."""
+        rng = np.random.default_rng(3)
+        raws = [_stats_raw(*_int_rows(rng, 5, 6), f"c{i}") for i in range(3)]
+        ref = EnginePool()
+        p1 = EnginePool(journal_dir=tmp_path)
+        for raw in raws:
+            _admit_raw(ref, "t", raw)
+            _admit_raw(p1, "t", raw)
+        w_ref = _w(ref, "t")
+        _crash(p1)
+
+        p2 = EnginePool(journal_dir=tmp_path)
+        assert p2.restored_tenants == 0          # no snapshot existed
+        assert p2.replayed_frames == 3
+        assert _w(p2, "t").tobytes() == w_ref.tobytes()
+        assert int(p2.get("t").backend.count) == 15
+        _crash(p2)
+
+    def test_dedup_index_survives_crash_and_snapshot(self, tmp_path):
+        """A byte-identical retry is answered duplicate=True across BOTH
+        persistence paths: keys captured in the snapshot and keys rebuilt by
+        journal replay — the lost-ACK window stays closed over restarts."""
+        rng = np.random.default_rng(4)
+        raw_a = _stats_raw(*_int_rows(rng, 5, 6), "a")
+        raw_b = _stats_raw(*_int_rows(rng, 5, 6), "b")
+        p1 = EnginePool(journal_dir=tmp_path)
+        _admit_raw(p1, "t", raw_a)
+        p1.snapshot()                    # key(a) persists via the snapshot
+        _admit_raw(p1, "t", raw_b)       # key(b) persists via replay
+        w1 = _w(p1, "t")
+        _crash(p1)
+
+        p2 = EnginePool(journal_dir=tmp_path)
+        for raw in (raw_a, raw_b):
+            ack = _admit_raw(p2, "t", raw)
+            assert ack.ok and ack.duplicate
+        assert p2.tenant("t").duplicates == 2
+        assert _w(p2, "t").tobytes() == w1.tobytes()   # nothing re-fused
+        _crash(p2)
+
+    def test_clean_close_replays_nothing(self, tmp_path):
+        rng = np.random.default_rng(5)
+        raws = [_stats_raw(*_int_rows(rng, 5, 6), f"c{i}") for i in range(2)]
+        p1 = EnginePool(journal_dir=tmp_path)
+        for raw in raws:
+            _admit_raw(p1, "t", raw)
+        w1 = _w(p1, "t")
+        p1.close()                       # final snapshot: a durable cut
+
+        p2 = EnginePool(journal_dir=tmp_path)
+        assert p2.restored_tenants == 1
+        assert p2.replayed_frames == 0
+        assert _w(p2, "t").tobytes() == w1.tobytes()
+        p2.close()
+
+    def test_auto_snapshot_compacts_segments(self, tmp_path):
+        rng = np.random.default_rng(6)
+        p1 = EnginePool(journal_dir=tmp_path, snapshot_every=2)
+        for i in range(6):
+            _admit_raw(p1, "t", _stats_raw(*_int_rows(rng, 4, 5), f"c{i}"))
+        assert p1.snapshots_taken >= 2
+        store = DurableStore(tmp_path)
+        latest = store.latest_snapshot_seq()
+        # Compaction pruned everything older than the latest commit.
+        assert all(s >= latest for s in store.segment_seqs())
+        assert store.committed_snapshot_seqs() == [latest]
+        w1 = _w(p1, "t")
+        _crash(p1)
+
+        p2 = EnginePool(journal_dir=tmp_path)
+        assert p2.restored_tenants == 1
+        assert p2.replayed_frames <= 2      # at most one snapshot interval
+        assert _w(p2, "t").tobytes() == w1.tobytes()
+        _crash(p2)
+
+    def test_control_ops_journaled_and_idempotent(self, tmp_path):
+        """Thm-8 drop survives the crash; re-sending it after restore is a
+        duplicate, restoring the client is a real journaled mutation."""
+        rng = np.random.default_rng(7)
+        raws = [_stats_raw(*_int_rows(rng, 5, 6), c) for c in ("a", "b")]
+        drop = wire.encode_frame(wire.ControlFrame("drop", "a"), dtype="f32")
+        ref = EnginePool()
+        p1 = EnginePool(journal_dir=tmp_path)
+        for pool in (ref, p1):
+            for raw in raws:
+                _admit_raw(pool, "t", raw)
+            assert _admit_raw(pool, "t", drop).ok
+        w_ref = _w(ref, "t")
+        _crash(p1)
+
+        p2 = EnginePool(journal_dir=tmp_path)
+        assert p2.replayed_frames == 3
+        assert set(map(str, p2.get("t").dropped_ids)) == {"a"}
+        assert _w(p2, "t").tobytes() == w_ref.tobytes()
+        ack = _admit_raw(p2, "t", drop)          # retry after lost ACK
+        assert ack.ok and ack.duplicate
+        restore = wire.encode_frame(wire.ControlFrame("restore", "a"),
+                                    dtype="f32")
+        assert _admit_raw(p2, "t", restore).ok
+        ref.restore("t", "a")
+        assert _w(p2, "t").tobytes() == _w(ref, "t").tobytes()
+        _crash(p2)
+
+    def test_torn_live_tail_truncated_on_restore(self, tmp_path):
+        """Garbage after the last durable record — the on-disk signature of
+        a kill mid-append — is truncated, never applied, never fatal."""
+        rng = np.random.default_rng(8)
+        raw = _stats_raw(*_int_rows(rng, 5, 6), "c0")
+        p1 = EnginePool(journal_dir=tmp_path)
+        _admit_raw(p1, "t", raw)
+        w1 = _w(p1, "t")
+        live = p1._journal.path
+        _crash(p1)
+        with open(live, "ab") as f:
+            f.write(raw[: len(raw) - 7])     # torn record + missing CRC
+
+        p2 = EnginePool(journal_dir=tmp_path)
+        assert p2.replayed_frames == 1
+        assert _w(p2, "t").tobytes() == w1.tobytes()
+        # And the pool keeps journaling cleanly past the truncation point.
+        assert _admit_raw(p2, "t",
+                          _stats_raw(*_int_rows(rng, 5, 6), "c1")).ok
+        _crash(p2)
+
+
+# -- satellite: duplicate-upload retry keeps the ledger exact -----------------
+
+class TestDuplicateRetryLedger:
+    def _assert_retry_exact(self, pool, dispatcher, channel):
+        rng = np.random.default_rng(9)
+        A, b = _int_rows(rng, 8, 6)
+        client = transport.FrameClient(channel)
+        client.hello("t", ("f32",))
+        ack = client.upload_stats(compute_stats(A, b), client_id="c0")
+        assert ack.ok and not ack.duplicate
+
+        w0 = _w(pool, "t")
+        led0 = pool.ledger()
+        t = pool.tenant("t")
+        frames0, count0 = t.wire_frames, int(pool.get("t").backend.count)
+
+        # The lost-ACK retry: byte-identical re-send of the same frame.
+        raw = wire.encode_frame(
+            wire.StatsFrame.from_stats(compute_stats(A, b), client_id="c0"),
+            dtype="f32")
+        reply = wire.decode_frame(channel.request(raw))
+        assert isinstance(reply, wire.AckFrame)
+        assert reply.ok and reply.duplicate
+
+        led1 = pool.ledger()
+        assert led1["wire_upload_bytes"] == led0["wire_upload_bytes"]
+        assert t.wire_frames == frames0              # nothing admitted
+        assert int(pool.get("t").backend.count) == count0
+        assert list(pool.get("t").client_ids) == ["c0"]   # fused exactly once
+        assert _w(pool, "t").tobytes() == w0.tobytes()
+        s = dispatcher.summary()
+        assert s["uploads_admitted"] == 1
+        assert s["duplicates_acked"] == 1
+        assert s["frames_rejected"] == 0
+        client.close()
+
+    def test_loopback_retry_exact(self):
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            self._assert_retry_exact(pool, disp,
+                                     transport.LoopbackChannel(disp))
+
+    def test_tcp_retry_exact(self):
+        with EnginePool() as pool, transport.FrameServer(pool) as srv:
+            chan = transport.TCPChannel(srv.host, srv.port)
+            self._assert_retry_exact(pool, srv.dispatcher, chan)
+
+    def test_delta_rows_retry_exact(self):
+        rng = np.random.default_rng(10)
+        A, b = _int_rows(rng, 4, 5)
+        raw = wire.encode_frame(
+            wire.DeltaRowsFrame(A=A, b=b, client_id="s0"), dtype="f32")
+        with EnginePool() as pool:
+            assert _admit_raw(pool, "t", raw).ok
+            w0 = _w(pool, "t")
+            ack = _admit_raw(pool, "t", raw)
+            assert ack.ok and ack.duplicate
+            assert int(pool.get("t").backend.count) == 4   # rows fused once
+            assert _w(pool, "t").tobytes() == w0.tobytes()
+
+    def test_resilient_client_lost_ack_fuses_once(self):
+        """ResilientClient whose channel eats the first ACK: the blind
+        re-send lands as duplicate=True and the pool fuses one upload."""
+        rng = np.random.default_rng(11)
+        A, b = _int_rows(rng, 8, 6)
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+
+            state = {"eaten": False}   # shared across reconnects
+
+            class AckEater:
+                def __init__(self):
+                    self.inner = transport.LoopbackChannel(disp)
+                    self.bytes_sent = self.bytes_received = 0
+
+                def request(self, data):
+                    out = self.inner.request(data)
+                    frame = wire.decode_frame(data)
+                    if (isinstance(frame, wire.StatsFrame)
+                            and not state["eaten"]):
+                        state["eaten"] = True  # applied; ACK lost in flight
+                        raise ConnectionError("ack eaten")
+                    return out
+
+                def close(self):
+                    pass
+
+            client = transport.ResilientClient(
+                AckEater, tenant="t", retries=3, backoff_s=0.0, jitter=0.0)
+            ack = client.upload_stats(compute_stats(A, b), client_id="c0")
+            assert ack.ok and ack.duplicate
+            assert client.retries_used == 1
+            assert client.duplicate_acks == 1
+            assert list(pool.get("t").client_ids) == ["c0"]
+            assert pool.tenant("t").duplicates == 1
+            ref = EnginePool()
+            ref.create_tenant("t", {"c0": compute_stats(A, b)})
+            assert _w(pool, "t").tobytes() == _w(ref, "t").tobytes()
+            client.close()
+
+    def test_terminal_rejection_not_retried(self):
+        """retryable=False rejections (dim mismatch) fail fast — the
+        resilient client must not burn its budget on hopeless re-sends."""
+        rng = np.random.default_rng(12)
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            client = transport.ResilientClient(
+                lambda: transport.LoopbackChannel(disp), tenant="t",
+                retries=5, backoff_s=0.0, jitter=0.0)
+            client.upload_stats(compute_stats(*_int_rows(rng, 4, 6)))
+            with pytest.raises(transport.RejectedError) as ei:
+                client.upload_stats(compute_stats(*_int_rows(rng, 4, 3)))
+            assert not ei.value.ack.retryable
+            assert client.retries_used == 0
+            client.close()
+
+
+# -- subprocess acceptance: SIGKILL mid-ingest, restart, bit-identical --------
+
+def _spawn_serve(journal_dir, *extra):
+    proc = subprocess.Popen(
+        [sys.executable, str(SERVE_CLI), "--mode", "fusion", "--listen", "0",
+         "--serve-timeout", "120", "--sigma", str(SIGMA),
+         "--journal-dir", str(journal_dir), *map(str, extra)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        env=_env(), cwd=str(REPO))
+    port, head = None, []
+    for _ in range(200):
+        line = proc.stdout.readline()
+        if not line:
+            break
+        head.append(line)
+        m = re.search(r"listening on 127\.0\.0\.1:(\d+)", line)
+        if m:
+            port = int(m.group(1))
+            break
+    assert port is not None, proc.stderr.read() if proc.poll() else "no port"
+    return proc, port, "".join(head)
+
+
+def _serve_report(proc, timeout=180):
+    out, err = proc.communicate(timeout=timeout)
+    assert proc.returncode == 0, err
+    m = re.search(r"\[serve_wire\] report (.*)", out)
+    assert m, out + err
+    return json.loads(m.group(1)), out
+
+
+@pytest.mark.slow
+class TestServeCrashRecovery:
+    def test_sigkill_restart_bit_identical_zero_reuploads(self, tmp_path):
+        """The acceptance pin. Clients upload dense + sketched + rff tenants
+        to a journaled server; the server is SIGKILLed mid-ingest (a torn
+        frame in flight); a restart on the same --journal-dir serves
+        Phase-3 weights exactly equal to an uncrashed in-process reference,
+        and its ledger shows the original bytes with zero re-uploads."""
+        uploads = [u for u in _mixed_workload(seed=31)
+                   if u[1] == "dense"]          # subprocess run stays dense
+        jdir = tmp_path / "journal"
+        proc, port, _ = _spawn_serve(jdir, "--expect-uploads", 999,
+                                     "--snapshot-every", 3)
+        try:
+            sent_bytes = 0
+            for tenant, _, raw in uploads:
+                chan = transport.TCPChannel("127.0.0.1", port, timeout_s=60)
+                client = transport.FrameClient(chan)
+                client.hello(tenant, ("f32",))
+                reply = wire.decode_frame(chan.request(raw))
+                assert isinstance(reply, wire.AckFrame) and reply.ok
+                sent_bytes += len(raw)
+                client.close()
+            # Mid-ingest: half a frame is in flight when the power goes out.
+            torn = socket.create_connection(("127.0.0.1", port), timeout=10)
+            torn.sendall(uploads[0][2][: len(uploads[0][2]) // 2])
+            proc.kill()                                      # SIGKILL
+            proc.communicate(timeout=30)
+            torn.close()
+        finally:
+            if proc.poll() is None:   # pragma: no cover - cleanup on failure
+                proc.kill()
+                proc.communicate(timeout=30)
+
+        # The uncrashed reference: same frames, same order, in-process.
+        ref = EnginePool()
+        for tenant, placement, raw in uploads:
+            _admit_raw(ref, tenant, raw, placement=placement)
+        ref_w = {t: np.asarray(jax.device_get(ref.solve_lifted(t, SIGMA)),
+                               np.float64).tolist()
+                 for t in ref.tenant_names}
+
+        proc2, _, head = _spawn_serve(jdir, "--serve-timeout", 1)
+        report, _ = _serve_report(proc2)
+        assert "recovered" in head
+        pool = report["pool"]
+        assert (pool["restored_tenants"] + pool["replayed_frames"]) > 0
+        assert sorted(report["tenants"]) == sorted(ref_w)
+        for t, w in ref_w.items():
+            assert report["weights"][t] == w, t       # bit-identical floats
+        # Zero re-uploads: no client spoke to the restarted server at all,
+        # yet its ledger carries every originally-uploaded byte.
+        assert report["transport"]["uploads_admitted"] == 0
+        assert report["connections_total"] == 0
+        assert report["ledger"]["wire_upload_bytes"] == sent_bytes
+
+    def test_sigterm_final_snapshot_then_zero_replay(self, tmp_path):
+        """SIGTERM is a clean shutdown: final snapshot, then a restart
+        replays nothing."""
+        rng = np.random.default_rng(32)
+        raw = _stats_raw(*_int_rows(rng, 8, 6), "c0")
+        jdir = tmp_path / "journal"
+        proc, port, _ = _spawn_serve(jdir, "--expect-uploads", 999)
+        chan = transport.TCPChannel("127.0.0.1", port, timeout_s=60)
+        client = transport.FrameClient(chan)
+        client.hello("t", ("f32",))
+        assert wire.decode_frame(chan.request(raw)).ok
+        client.close()
+        proc.send_signal(signal.SIGTERM)
+        report, _ = _serve_report(proc)
+        assert report["sigterm"] is True
+
+        # The final snapshot happens at pool.close(), AFTER the report is
+        # captured — the proof it landed is that a restart replays nothing.
+        p2 = EnginePool(journal_dir=jdir)
+        assert p2.restored_tenants == 1
+        assert p2.replayed_frames == 0
+        assert int(p2.get("t").backend.count) == 8
+        _crash(p2)

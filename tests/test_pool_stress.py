@@ -20,6 +20,7 @@ Three contracts, each probed rather than assumed:
     survives a test (leaked daemons would poison every later timing test in
     the suite).
 """
+import logging
 import threading
 import time
 
@@ -31,6 +32,7 @@ import pytest
 from repro import core
 from repro.core import fusion
 from repro.core.features import FeatureMap
+from repro.fed import transport, wire
 from repro.server import CoalescerPolicy, EnginePool
 
 D = 12
@@ -237,3 +239,47 @@ class TestShutdown:
             pool.start_flusher()
             assert pool.flusher_alive
         assert not pool.flusher_alive
+
+
+class TestConnectionErrorAccounting:
+    """A connection thread dying on a NON-wire exception must never vanish
+    silently: the death is counted in ``summary()["connection_errors"]``, the
+    traceback is logged exactly once per dispatcher (repeats under load would
+    flood the log), and the thread still unwinds its active-connection slot
+    (no leak)."""
+
+    def test_dying_conn_threads_counted_logged_once_no_leak(
+            self, caplog, monkeypatch):
+        pool, _ = _make_pool()
+        hello = wire.encode_frame(wire.Hello("t", ("f32",)))
+
+        class _BrokenSession:
+            def handle(self, data):
+                raise RuntimeError("injected session failure")
+
+        def _await(probe, want):
+            deadline = time.monotonic() + 10.0
+            while probe() != want and time.monotonic() < deadline:
+                time.sleep(0.005)
+            assert probe() == want
+
+        with caplog.at_level(logging.ERROR, logger="repro.fed.transport"):
+            with pool, transport.FrameServer(pool) as srv:
+                monkeypatch.setattr(srv.dispatcher, "session",
+                                    lambda: _BrokenSession())
+                for expected in (1, 2):
+                    chan = transport.TCPChannel(srv.host, srv.port,
+                                                timeout_s=5.0)
+                    with pytest.raises((ConnectionError, OSError,
+                                        wire.WireError,
+                                        transport.TransportError)):
+                        chan.request(hello)
+                    chan.close()
+                    _await(lambda: srv.dispatcher.summary()
+                           ["connection_errors"], expected)
+                _await(lambda: srv.active_connections, 0)   # threads unwound
+
+        errors = [r for r in caplog.records if r.levelno >= logging.ERROR]
+        assert len(errors) == 1                             # logged ONCE
+        assert "injected session failure" in errors[0].getMessage()
+        assert "RuntimeError" in errors[0].getMessage()     # full traceback
