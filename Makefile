@@ -12,10 +12,12 @@ PY ?= python
 # sweep beats sequential per-tenant solves on wave p99 at T=32, zero
 # bitwise exactness violations), the sketch smoke (fused
 # featurize->Gram ingest vs the unfused XLA reference, §IV-F wire-byte
-# closed forms, mixed dense/sketched solve_many bucketing), and the chaos
+# closed forms, mixed dense/sketched solve_many bucketing), the chaos
 # smoke (WAL crash-recovery replay rate + bit-identical restore, snapshot-
-# bounded replay, seeded-fault federation exactness) so experiments/repro/
-# tracks serving, write-path, wire, and durability perf per PR.
+# bounded replay, seeded-fault federation exactness), and the relay smoke
+# (two-tier root ingress O(relays) with bit-identical weights + the
+# forwarded-bytes ledger cross-check) so experiments/repro/ tracks
+# serving, write-path, wire, durability, and topology perf per PR.
 .PHONY: tier1
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -27,6 +29,7 @@ tier1:
 	PYTHONPATH=src $(PY) benchmarks/qps_bench.py --smoke
 	PYTHONPATH=src $(PY) benchmarks/sketch_bench.py --smoke
 	PYTHONPATH=src $(PY) benchmarks/chaos_bench.py --smoke
+	PYTHONPATH=src $(PY) benchmarks/relay_bench.py --smoke
 
 # Standalone wire gate: the codec suite (golden frames, roundtrip fuzz,
 # mutation fuzz) plus the out-of-process federation e2e (loopback, TCP,
@@ -90,6 +93,19 @@ chaos-smoke:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_durability.py \
 		tests/test_chaos.py tests/test_checkpoint.py
 	PYTHONPATH=src $(PY) benchmarks/chaos_bench.py --smoke
+
+# Standalone hierarchical-aggregation gate: the relay suite (forward
+# policy/identity/per-tier ledger units, two-tier loopback + chaos-proxied
+# bitwise exactness, crash-resume / lost-ACK dedup / warm standby, the
+# SIGKILL-relay subprocess restart acceptance), the streaming-chunk suite
+# (split/join codec, transport reassembly, upload_raw retries), the
+# commit-ordering suite (fsync barrier order + simulated power loss), then
+# the relay bench smoke.
+.PHONY: relay-smoke
+relay-smoke:
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_relay.py \
+		tests/test_wire_chunks.py tests/test_commit_ordering.py
+	PYTHONPATH=src $(PY) benchmarks/relay_bench.py --smoke
 
 .PHONY: test
 test:

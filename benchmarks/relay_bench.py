@@ -1,0 +1,221 @@
+"""Hierarchical-aggregation benchmark: root ingress is O(relays), exactly.
+
+Three measurement axes for the two-tier ``server.relay`` topology:
+
+  * **measured root ingress** — a loopback federation of R relays x C
+    clients each (dense small-integer shards). Every client upload lands
+    at its relay; each relay ships ONE fused frame upstream. Claims gate
+    that the root's ledger records exactly R frames (all of them
+    ``by_tier["relay_frames"]``, zero direct client frames) while the
+    relay tier absorbed all R*C uploads, and that the root's Phase-3
+    weights are BIT-identical to the centralized ``core.fusion`` solution
+    over the union — Thm-1 associativity means the tree changes *where*
+    frames land, never a single bit of the answer.
+  * **forwarded-bytes ledger cross-check** — the relays' own
+    ``RelayForwarder.summary()["forwarded_bytes"]`` must equal the bytes
+    the root *measured* on its wire (``per_tenant wire_upload_bytes``):
+    two independent ledgers, one number.
+  * **analytic fan-in sweep** — ``fed.comm.hierarchical_ingress`` closed
+    forms over a client/relay grid, cross-checked against the measured
+    topology at the same (R, C): frames-at-root drops from O(clients) to
+    O(relays) at identical per-frame size.
+
+Usage: PYTHONPATH=src python benchmarks/relay_bench.py [--smoke]
+Emits a CSV + BENCH JSON under experiments/repro/ and prints a BENCH line.
+"""
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/relay_bench.py`
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import common
+from repro.fed import comm as fed_comm
+
+SIGMA = 0.1
+D = 16          # frame dimension
+ROWS = 8        # rows per client shard
+
+
+def _client_rows(rng) -> tuple:
+    """Small-integer rows: f32 partial sums are exact under any fuse
+    order, so the bitwise claim is association-free."""
+    A = rng.integers(-3, 4, (ROWS, D)).astype(np.float32)
+    b = rng.integers(-3, 4, (ROWS,)).astype(np.float32)
+    return A, b
+
+
+def _run_two_tier(num_relays: int, clients_per_relay: int,
+                  tmp: str) -> dict:
+    """Build the tree over loopback, drive it, and return every ledger
+    the claims need (plus the centralized reference weights)."""
+    import jax.numpy as jnp
+
+    from repro.core import fusion
+    from repro.core.sufficient_stats import compute_stats
+    from repro.fed import transport
+    from repro.server import EnginePool
+    from repro.server.relay import ForwardPolicy, RelayForwarder
+
+    rng = np.random.default_rng(0)
+    shards = []
+
+    root = EnginePool(tier="root")
+    root_disp = transport.WireDispatcher(root)
+
+    t0 = time.perf_counter()
+    relays = []
+    for r in range(num_relays):
+        pool = EnginePool(journal_dir=str(Path(tmp) / f"relay{r}"),
+                          journal_fsync=False, tier="relay")
+        disp = transport.WireDispatcher(pool)
+        fwd = RelayForwarder(
+            pool, lambda: transport.LoopbackChannel(root_disp),
+            relay_id=f"r{r}", state_dir=Path(tmp) / f"relay{r}" / "fwd",
+            policy=ForwardPolicy(max_frames=None))
+        relays.append((pool, fwd))
+        for c in range(clients_per_relay):
+            A, b = _client_rows(rng)
+            shards.append((A, b))
+            cl = transport.FrameClient(transport.LoopbackChannel(disp))
+            cl.hello("t")
+            cl.upload_stats(compute_stats(jnp.asarray(A), jnp.asarray(b)),
+                            client_id=f"r{r}c{c}")
+    ingest_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    forwards = sum(fwd.forward_all() for _, fwd in relays)
+    forward_s = time.perf_counter() - t0
+
+    A_all = jnp.concatenate([jnp.asarray(a) for a, _ in shards])
+    b_all = jnp.concatenate([jnp.asarray(b) for _, b in shards])
+    ref = np.asarray(fusion.solve_ridge(
+        compute_stats(A_all, b_all), SIGMA)).tobytes()
+    got = np.asarray(root.solve("t", SIGMA)).tobytes()
+
+    led = root.ledger()
+    out = {
+        "forwards": forwards,
+        "bit_identical": got == ref,
+        "root_by_tier": led["by_tier"],
+        "root_frames": root.tenant("t").wire_frames,
+        "root_wire_upload_bytes":
+            led["per_tenant"]["t"]["wire_upload_bytes"],
+        "relay_frames_absorbed":
+            sum(pool.tenant("t").wire_frames for pool, _ in relays),
+        "relay_forwarded_bytes":
+            sum(fwd.summary()["forwarded_bytes"] for _, fwd in relays),
+        "ingest_s": ingest_s,
+        "forward_s": forward_s,
+    }
+    for pool, fwd in relays:
+        fwd.close(forward=False)
+        pool.close()
+    root.close()
+    return out
+
+
+def _bench_measured(claims: common.Claims, rows: list, smoke: bool) -> None:
+    grid = [(2, 4)] if smoke else [(2, 8), (4, 8), (4, 16)]
+    for num_relays, per_relay in grid:
+        clients = num_relays * per_relay
+        with tempfile.TemporaryDirectory() as tmp:
+            m = _run_two_tier(num_relays, per_relay, tmp)
+        analytic = fed_comm.hierarchical_ingress(
+            D, clients, num_relays, forwards_per_relay=1)
+        rows.append({
+            "name": f"two_tier_r{num_relays}_c{clients}",
+            "relays": num_relays, "clients": clients,
+            "root_frames": m["root_frames"],
+            "relay_tier_frames": m["relay_frames_absorbed"],
+            "ingress_reduction": clients / m["root_frames"],
+            "root_wire_upload_bytes": m["root_wire_upload_bytes"],
+            "relay_forwarded_bytes": m["relay_forwarded_bytes"],
+            "ingest_s": m["ingest_s"], "forward_s": m["forward_s"],
+        })
+        claims.check(
+            f"root_ingress_is_relays_r{num_relays}_c{clients}",
+            m["forwards"] == num_relays
+            and m["root_frames"] == num_relays
+            and m["root_by_tier"] == {"relay_frames": num_relays,
+                                      "client_frames": 0}
+            and m["relay_frames_absorbed"] == clients,
+            f"{clients} client uploads -> {m['root_frames']} root frames "
+            f"(all relay-tier), {clients / m['root_frames']:.0f}x reduction")
+        claims.check(
+            f"two_tier_bit_identical_r{num_relays}_c{clients}",
+            m["bit_identical"],
+            "root Phase-3 weights == centralized core.fusion bits")
+        claims.check(
+            f"forwarded_bytes_ledgers_agree_r{num_relays}_c{clients}",
+            m["relay_forwarded_bytes"] == m["root_wire_upload_bytes"] > 0,
+            f"relay summary {m['relay_forwarded_bytes']} B == root ledger "
+            f"{m['root_wire_upload_bytes']} B")
+        claims.check(
+            f"measured_matches_analytic_r{num_relays}_c{clients}",
+            m["root_frames"] == analytic["relayed_root_frames"]
+            and clients / m["root_frames"]
+            == analytic["ingress_reduction"],
+            "fed.comm.hierarchical_ingress closed form reproduces the "
+            "measured topology")
+
+
+def _bench_analytic(claims: common.Claims, rows: list, smoke: bool) -> None:
+    client_counts = [64, 256] if smoke else [64, 256, 1024, 4096]
+    relay_counts = [4, 16] if smoke else [4, 8, 16, 64]
+    ok = True
+    for n in client_counts:
+        for r in relay_counts:
+            if r >= n:
+                continue
+            h = fed_comm.hierarchical_ingress(D, n, r)
+            rows.append({
+                "name": f"analytic_n{n}_r{r}", "clients": n, "relays": r,
+                "flat_root_frames": h["flat_root_frames"],
+                "relayed_root_frames": h["relayed_root_frames"],
+                "ingress_reduction": h["ingress_reduction"],
+                "flat_root_bytes": h["flat_root_bytes"],
+                "relayed_root_bytes": h["relayed_root_bytes"],
+            })
+            ok = ok and (h["relayed_root_frames"] == r
+                         and h["ingress_reduction"] == n / r
+                         and h["relayed_root_bytes"] * n
+                         == h["flat_root_bytes"] * r)
+    claims.check("analytic_ingress_o_relays", ok,
+                 "root frames/bytes scale with relays, not clients, at "
+                 "identical per-frame size")
+
+
+def run(smoke: bool = False) -> list[dict]:
+    claims = common.Claims("relay")
+    rows: list[dict] = []
+    _bench_measured(claims, rows, smoke)
+    _bench_analytic(claims, rows, smoke)
+
+    common.write_csv("relay_bench", rows)
+    common.write_json("relay_bench",
+                      {"smoke": smoke, "rows": rows, "claims": claims.rows()})
+    print("BENCH " + json.dumps({
+        r["name"]: r["ingress_reduction"] for r in rows}))
+    return claims.rows()
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small topology / short analytic grid for CI")
+    args = ap.parse_args()
+    failed = [c for c in run(smoke=args.smoke) if not c["pass"]]
+    sys.exit(1 if failed else 0)

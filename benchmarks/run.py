@@ -23,9 +23,9 @@ def main(smoke: bool = False) -> None:
     from benchmarks import (chaos_bench, extensions, fig_3,
                             fusion_engine_bench, kernels_bench,
                             mutation_bench, pool_bench, qps_bench,
-                            sharded_fusion_bench, sketch_bench, table_ii,
-                            table_iii, table_iv, table_v, table_vi,
-                            table_vii, wire_bench)
+                            relay_bench, sharded_fusion_bench, sketch_bench,
+                            table_ii, table_iii, table_iv, table_v,
+                            table_vi, table_vii, wire_bench)
 
     modules = [
         ("table_ii", table_ii), ("table_iii", table_iii),
@@ -40,6 +40,7 @@ def main(smoke: bool = False) -> None:
         ("qps", qps_bench),
         ("sketch", sketch_bench),
         ("chaos", chaos_bench),
+        ("relay", relay_bench),
     ]
     all_claims = []
     for name, mod in modules:

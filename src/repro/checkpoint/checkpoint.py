@@ -9,6 +9,7 @@ multi-host deployment would swap in array-serialization with the same API.
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import re
 
@@ -33,15 +34,35 @@ def _flatten(tree) -> dict[str, np.ndarray]:
     return out
 
 
+def _write_durable(path: pathlib.Path, writer) -> None:
+    """tmp -> flush -> fsync -> rename: ``path`` either holds the complete
+    new contents or does not exist; no reader ever sees a torn file."""
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        writer(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 def save_pytree(tree, directory: str | pathlib.Path, step: int) -> pathlib.Path:
+    """Write one step's arrays + manifest, crash-safely.
+
+    Both files go through tmp -> fsync -> rename, so ``load_pytree`` (and the
+    durability layer's ``load_snapshot``) can never observe a half-written
+    ``step_<seq>.npz``: by the time the final name exists, its bytes are
+    durable. Callers that need the *rename itself* to survive power loss
+    (``DurableStore.commit_snapshot``) additionally fsync the directory.
+    """
     d = pathlib.Path(directory)
     d.mkdir(parents=True, exist_ok=True)
     arrays = _flatten(tree)
     path = d / f"step_{step:08d}.npz"
-    np.savez(path, **arrays)
+    _write_durable(path, lambda f: np.savez(f, **arrays))
     manifest = {"step": step, "num_leaves": len(arrays),
                 "keys": sorted(arrays)}
-    (d / f"step_{step:08d}.json").write_text(json.dumps(manifest))
+    _write_durable(d / f"step_{step:08d}.json",
+                   lambda f: f.write(json.dumps(manifest).encode()))
     return path
 
 

@@ -245,6 +245,32 @@ def aggregate_records(records: Mapping[str, CommRecord], *,
     return out
 
 
+def hierarchical_ingress(d: int, num_clients: int, num_relays: int, *,
+                         forwards_per_relay: int = 1) -> dict:
+    """Root-ingress accounting for a two-tier topology (``server.relay``).
+
+    Thm-1 additivity makes fusion associative, so interposing a relay tier
+    changes no bits of the recovered solution — only *where* the frames
+    land. Flat: every one of ``num_clients`` Thm-4 frames hits the root.
+    Two-tier: each relay absorbs its region's uploads and ships
+    ``forwards_per_relay`` fused frames (1 on a clean shutdown-flush; more
+    under a periodic forwarding policy), so root ingress is O(relays).
+    Frames are the same d-space size at both tiers — the reduction is in
+    *count*, which is exactly what a connection-bound root buys.
+    """
+    per_frame_floats = d * (d + 1) // 2 + d
+    flat_frames = num_clients
+    relay_frames = num_relays * forwards_per_relay
+    return {
+        "dim": d,
+        "flat_root_frames": flat_frames,
+        "relayed_root_frames": relay_frames,
+        "ingress_reduction": flat_frames / max(relay_frames, 1),
+        "flat_root_bytes": flat_frames * per_frame_floats * FLOAT_BYTES,
+        "relayed_root_bytes": relay_frames * per_frame_floats * FLOAT_BYTES,
+    }
+
+
 def fedavg_comm(d: int, num_clients: int, rounds: int) -> CommRecord:
     """Thm 4 row 2: R*d up, R*d down per client."""
     return CommRecord(

@@ -109,13 +109,22 @@ class WireDispatcher:
     def __init__(self, pool, *, default_tenant: str = "default",
                  placement: str = "dense",
                  dtype_preference: Sequence[str] | None = None,
-                 solve_batcher=None):
+                 solve_batcher=None, max_reassembly_bytes: int | None = None):
         self.pool = pool
         self.default_tenant = default_tenant
         self.placement = placement
         self.dtype_preference = (tuple(dtype_preference)
                                  if dtype_preference is not None
                                  else default_dtype_preference())
+        # Cap on one session's chunk-reassembly buffer (streaming multi-frame
+        # uploads). Defaults to the pool's admission budget when it has one —
+        # a logical frame the pool could never admit should be refused while
+        # it is still arriving, not after it was buffered — else to the
+        # single-frame payload cap times a small factor.
+        if max_reassembly_bytes is None:
+            max_reassembly_bytes = (getattr(pool, "stat_budget_bytes", None)
+                                    or 4 * wire.MAX_PAYLOAD_BYTES)
+        self.max_reassembly_bytes = int(max_reassembly_bytes)
         # Optional server.batch.SolveBatcher: when present, SOLVE frames
         # route through its micro-batching window so queries from many
         # concurrent sessions coalesce into one cross-tenant stacked sweep.
@@ -128,6 +137,8 @@ class WireDispatcher:
         self.uploads_admitted = 0
         self.duplicates_acked = 0
         self.connection_errors = 0
+        self.chunks_received = 0
+        self.frames_reassembled = 0
         self.bytes_in = 0
         self.bytes_out = 0
         self._conn_error_logged = False
@@ -148,6 +159,8 @@ class WireDispatcher:
                 "uploads_admitted": self.uploads_admitted,
                 "duplicates_acked": self.duplicates_acked,
                 "connection_errors": self.connection_errors,
+                "chunks_received": self.chunks_received,
+                "frames_reassembled": self.frames_reassembled,
                 "bytes_in": self.bytes_in,
                 "bytes_out": self.bytes_out,
             }
@@ -157,20 +170,37 @@ class WireDispatcher:
 
 
 class _Session:
-    """Per-connection protocol state: tenant binding + negotiated dtype."""
+    """Per-connection protocol state: tenant binding, negotiated dtype, and
+    the chunk-reassembly buffer for streaming multi-frame uploads.
+
+    Reassembly state is per-session by design: a reconnect starts from an
+    empty buffer, so a retrying client that re-sends the whole chunk
+    sequence on a fresh connection can never splice onto stale chunks.
+    """
 
     def __init__(self, dispatcher: WireDispatcher):
         self.dispatcher = dispatcher
         self.tenant = dispatcher.default_tenant
         self.dtype = "f32"
+        self._chunks: list[bytes] | None = None
+        self._chunk_ftype = 0
+        self._chunk_dtag = 0
+        self._chunk_payload_bytes = 0
+        self._chunk_wire_bytes = 0
 
     def handle(self, data: bytes) -> bytes:
         """One request frame in, one reply frame out. Never raises for
         malformed input — typed rejections come back as error ACKs."""
         d = self.dispatcher
         d._count(frames_handled=1, bytes_in=len(data))
+        if self._chunks is not None:
+            # Mid-sequence: every frame (including the flags-0 terminal one)
+            # belongs to the reassembly until it completes or aborts.
+            return self._handle_chunk(data)
         try:
             frame = wire.decode_frame(data)
+        except wire.ContinuationChunk:
+            return self._handle_chunk(data)
         except wire.WireError as e:
             # Decode failures are transient from the client's view: the
             # frame may have been corrupted in transit, and a clean re-send
@@ -178,6 +208,74 @@ class _Session:
             d._count(frames_rejected=1)
             return self._reply(wire.AckFrame(
                 False, f"{type(e).__name__}: {e}", retryable=True))
+        return self._dispatch(frame, encoded_len=len(data), raw=data)
+
+    def _reset_reassembly(self) -> None:
+        self._chunks = None
+        self._chunk_payload_bytes = 0
+        self._chunk_wire_bytes = 0
+
+    def _handle_chunk(self, data: bytes) -> bytes:
+        """One continuation chunk in (or the terminal frame of a sequence);
+        buffers payload slices until the flags-0 chunk completes the logical
+        frame, then dispatches it exactly like an unchunked arrival."""
+        d = self.dispatcher
+        try:
+            ftype, dtag, flags, payload = wire.chunk_parts(data)
+        except wire.WireError as e:
+            # A damaged chunk poisons the whole sequence (slices are
+            # positional); the client re-sends the logical frame from the
+            # top on a clean buffer.
+            self._reset_reassembly()
+            d._count(frames_rejected=1)
+            return self._reply(wire.AckFrame(
+                False, f"{type(e).__name__}: {e}", retryable=True))
+        if flags & ~wire.FLAG_CONTINUED or (
+                flags and ftype not in wire.CHUNKABLE_FRAME_TYPES):
+            self._reset_reassembly()
+            d._count(frames_rejected=1)
+            return self._reply(wire.AckFrame(
+                False, f"invalid chunk flags {flags:#04x} "
+                       f"for frame type {ftype:#04x}", retryable=True))
+        if self._chunks is None:
+            self._chunks = []
+            self._chunk_ftype, self._chunk_dtag = ftype, dtag
+        elif ftype != self._chunk_ftype or dtag != self._chunk_dtag:
+            self._reset_reassembly()
+            d._count(frames_rejected=1)
+            return self._reply(wire.AckFrame(
+                False, "chunk sequence violation: frame type/dtype changed "
+                       "mid-reassembly", retryable=True))
+        cap = d.max_reassembly_bytes
+        if self._chunk_payload_bytes + len(payload) > cap:
+            self._reset_reassembly()
+            d._count(frames_rejected=1)
+            return self._reply(wire.AckFrame(
+                False, f"reassembled payload would exceed the admission "
+                       f"budget ({cap} bytes)", retryable=False))
+        self._chunks.append(payload)
+        self._chunk_payload_bytes += len(payload)
+        self._chunk_wire_bytes += len(data)
+        d._count(chunks_received=1)
+        if flags & wire.FLAG_CONTINUED:
+            return self._reply(wire.AckFrame(
+                True, f"chunk {len(self._chunks)} buffered"))
+        raw = wire.join_chunks(self._chunk_ftype, self._chunk_dtag,
+                               self._chunks)
+        encoded_len = self._chunk_wire_bytes
+        self._reset_reassembly()
+        try:
+            frame = wire.decode_frame(
+                raw, max_payload_bytes=wire.MAX_REASSEMBLED_BYTES)
+        except wire.WireError as e:
+            d._count(frames_rejected=1)
+            return self._reply(wire.AckFrame(
+                False, f"{type(e).__name__}: {e}", retryable=True))
+        d._count(frames_reassembled=1)
+        return self._dispatch(frame, encoded_len=encoded_len, raw=raw)
+
+    def _dispatch(self, frame, *, encoded_len: int, raw: bytes) -> bytes:
+        d = self.dispatcher
         if isinstance(frame, wire.Hello):
             self.tenant = frame.tenant or self.tenant
             try:
@@ -201,8 +299,8 @@ class _Session:
                 reply = self._batched_solve(frame)
             else:
                 reply = d.pool.admit_frame(self.tenant, frame,
-                                           encoded_len=len(data),
-                                           placement=d.placement, raw=data)
+                                           encoded_len=encoded_len,
+                                           placement=d.placement, raw=raw)
         except Exception as e:  # noqa: BLE001 - a frame must never kill the
             # session thread; the protocol contract is a typed-error ACK.
             # Internal errors (including a journal I/O failure, which raises
@@ -468,12 +566,19 @@ class FrameClient:
     the statistic-bearing frames (STATS / PROJ / DELTA) — the quantity Thm 4
     budgets — while ``bytes_sent``/``bytes_received`` include the control
     plane (HELLO, CONTROL, SOLVE) and downloads.
+
+    ``max_chunk_payload`` turns on streaming multi-frame uploads: an upload
+    whose encoded payload exceeds it is shipped as continuation chunks
+    (``wire.split_frame``), each awaiting the server's buffering ACK; the
+    terminal chunk's reply is the admission ACK for the whole logical frame.
+    Uploads that fit stay single-frame and byte-identical.
     """
 
-    def __init__(self, channel):
+    def __init__(self, channel, *, max_chunk_payload: int | None = None):
         self.channel = channel
         self.dtype = "f32"
         self.tenant = "default"
+        self.max_chunk_payload = max_chunk_payload
         self.bytes_uploaded = 0
         self.frames_sent = 0
 
@@ -528,6 +633,28 @@ class FrameClient:
                                     client_id=client_id)
         return self._expect_ack(frame, upload=True)
 
+    def upload_raw(self, raw: bytes) -> wire.AckFrame:
+        """Ship pre-encoded upload-frame bytes EXACTLY as given (chunked when
+        configured — chunk boundaries never change the reassembled bytes).
+
+        The relay tier's forward path: a durably persisted frame must reach
+        upstream byte-identical across process restarts so the dedup key
+        ``(client_id, frame CRC)`` is stable no matter which incarnation of
+        the relay sends it. Skips the negotiated-dtype re-encode on purpose.
+        """
+        if self.max_chunk_payload is not None:
+            chunks = wire.split_frame(raw,
+                                      max_chunk_payload=self.max_chunk_payload)
+        else:
+            chunks = [raw]
+        self.bytes_uploaded += sum(len(c) for c in chunks)
+        reply = self._send_chunks(chunks)
+        if not isinstance(reply, wire.AckFrame):
+            raise TransportError(f"expected ACK, got {type(reply).__name__}")
+        if not reply.ok:
+            raise RejectedError(reply)
+        return reply
+
     def control(self, op: str, client_id: str) -> wire.AckFrame:
         """Thm-8 control: ``op`` is "drop" or "restore"."""
         return self._expect_ack(wire.ControlFrame(op, client_id))
@@ -556,10 +683,26 @@ class FrameClient:
 
     def _roundtrip(self, frame, *, upload: bool = False):
         data = wire.encode_frame(frame, dtype=self.dtype)
+        if upload and self.max_chunk_payload is not None:
+            chunks = wire.split_frame(data,
+                                      max_chunk_payload=self.max_chunk_payload)
+        else:
+            chunks = [data]
         if upload:
-            self.bytes_uploaded += len(data)
+            self.bytes_uploaded += sum(len(c) for c in chunks)
+        return self._send_chunks(chunks)
+
+    def _send_chunks(self, chunks: Sequence[bytes]):
+        for part in chunks[:-1]:
+            self.frames_sent += 1
+            mid = wire.decode_frame(self.channel.request(part))
+            if isinstance(mid, wire.AckFrame) and not mid.ok:
+                raise RejectedError(mid)
+            if not isinstance(mid, wire.AckFrame):
+                raise TransportError(
+                    f"expected chunk ACK, got {type(mid).__name__}")
         self.frames_sent += 1
-        return wire.decode_frame(self.channel.request(data))
+        return wire.decode_frame(self.channel.request(chunks[-1]))
 
     def _expect_ack(self, frame, *, upload: bool = False) -> wire.AckFrame:
         reply = self._roundtrip(frame, upload=upload)
@@ -596,11 +739,12 @@ class ResilientClient:
                  offers: Sequence[str] = ("f32",),
                  retries: int = 5, backoff_s: float = 0.05,
                  jitter: float = 0.5, max_backoff_s: float = 2.0,
-                 seed: int = 0,
+                 seed: int = 0, max_chunk_payload: int | None = None,
                  sleep: Callable[[float], None] = time.sleep):
         self._factory = channel_factory
         self._tenant = tenant
         self._offers = tuple(offers)
+        self._max_chunk_payload = max_chunk_payload
         self.retries = int(retries)
         self.backoff_s = float(backoff_s)
         self.jitter = float(jitter)
@@ -636,6 +780,12 @@ class ResilientClient:
 
     def stream_rows(self, A, b, client_id: str = "") -> wire.AckFrame:
         return self._call(lambda c: c.stream_rows(A, b, client_id))
+
+    def upload_raw(self, raw: bytes) -> wire.AckFrame:
+        """Byte-identical pre-encoded upload with retry/reconnect: every
+        re-send ships the SAME bytes (no dtype re-encode), so a retry whose
+        original landed is a guaranteed dedup hit upstream."""
+        return self._call(lambda c: c.upload_raw(raw))
 
     def control(self, op: str, client_id: str) -> wire.AckFrame:
         return self._call(lambda c: c.control(op, client_id))
@@ -676,7 +826,8 @@ class ResilientClient:
 
     def _connect(self) -> FrameClient:
         if self.client is None:
-            client = FrameClient(self._factory())
+            client = FrameClient(self._factory(),
+                                 max_chunk_payload=self._max_chunk_payload)
             try:
                 # Re-HELLO on every (re)connect: the session's tenant binding
                 # and negotiated dtype are connection-scoped server state.

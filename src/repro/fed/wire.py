@@ -15,7 +15,8 @@ Frame layout (all integers little-endian)::
     4       1     protocol version (currently 1)
     5       1     frame type (FT_*)
     6       1     dtype tag (DT_*; scalar encoding of array fields)
-    7       1     flags (reserved, must be 0)
+    7       1     flags (0 unless defined for the type: ACK status bits,
+                  FLAG_CONTINUED chunking on upload types)
     8       4     payload length N (u32)
     12      N     payload (frame-type specific, see the frame classes)
     12+N    4     CRC32 of bytes [0, 12+N)
@@ -103,6 +104,24 @@ ACK_FLAG_RETRYABLE = 0x01    # transient rejection: safe to re-send, dedup'd
 ACK_FLAG_DUPLICATE = 0x02    # upload was already fused; nothing applied twice
 _ACK_FLAGS_MASK = ACK_FLAG_RETRYABLE | ACK_FLAG_DUPLICATE
 
+# Continuation bit for UPLOAD frame types (same append-only precedent as the
+# ACK bits): a frame with this bit set is one CHUNK of a larger logical
+# frame's payload — more chunks of the same type follow on the same session;
+# the chunk whose flags byte is 0 terminates the sequence and the
+# concatenated payloads decode as one ordinary frame (:func:`join_chunks`
+# reconstructs bytes identical to the unchunked :func:`encode_frame`
+# output, so dedup keys are chunking-invariant). Single-frame encodings
+# still carry flags == 0, so every pre-existing fixture is untouched; a v1
+# peer that predates this bit rejects chunks with the reserved-flags error
+# instead of mis-decoding them.
+FLAG_CONTINUED = 0x01
+CHUNKABLE_FRAME_TYPES = frozenset({FT_STATS, FT_PROJ, FT_DELTA, FT_RFF})
+# A reassembled logical payload may legitimately exceed the per-frame cap
+# (that cap exists to stop length-prefix lies, and chunking is the sanctioned
+# way past it) — but never the u32 length field itself. Journal replay uses
+# the same relaxed cap, since journaled records are reassembled frames.
+MAX_REASSEMBLED_BYTES = (1 << 32) - 1
+
 # -- dtype registry ----------------------------------------------------------
 
 DTYPE_TAGS = {"f32": 1, "f64": 2, "bf16": 3}
@@ -188,6 +207,12 @@ class PayloadError(WireError):
 
 class NegotiationError(WireError):
     """Client offer and server policy share no dtype."""
+
+
+class ContinuationChunk(WireError):
+    """The buffer holds one valid chunk of a chunked upload, not a whole
+    frame — route it to reassembly (:func:`chunk_parts` / :func:`join_chunks`)
+    instead of decoding it standalone."""
 
 
 # -- frame classes -----------------------------------------------------------
@@ -579,11 +604,14 @@ def _check_count(count: int) -> int:
     return count
 
 
-def frame_total_length(header: bytes) -> int:
+def frame_total_length(header: bytes, *,
+                       max_payload_bytes: int = MAX_PAYLOAD_BYTES) -> int:
     """Total frame length from its 12-byte header (the transport read loop).
 
     Validates just enough to trust the length field: magic, version, and the
     payload-length cap. Full validation happens in :func:`decode_frame`.
+    ``max_payload_bytes`` relaxes the cap for reassembled/journaled frames
+    (:data:`MAX_REASSEMBLED_BYTES`); the wire itself keeps the strict one.
     """
     if len(header) < HEADER_BYTES:
         raise TruncatedFrame(
@@ -593,35 +621,54 @@ def frame_total_length(header: bytes) -> int:
         raise BadMagic(f"bad magic {magic!r}")
     if version != VERSION:
         raise BadVersion(f"unsupported version {version} (speak {VERSION})")
-    if plen > MAX_PAYLOAD_BYTES:
-        raise BadLength(f"payload length {plen} exceeds cap {MAX_PAYLOAD_BYTES}")
+    if plen > max_payload_bytes:
+        raise BadLength(f"payload length {plen} exceeds cap {max_payload_bytes}")
     return HEADER_BYTES + plen + TRAILER_BYTES
 
 
-def decode_frame(buf: bytes) -> Frame:
-    """Parse and strictly validate exactly one frame.
-
-    Rejections are always a :class:`WireError` subclass; arbitrary input
-    bytes can never crash the decoder or yield a frame that does not
-    re-encode to the same bytes.
-    """
-    total = frame_total_length(buf)          # magic/version/length-cap checks
+def _envelope(buf: bytes, *, max_payload_bytes: int) -> tuple[int, int, int]:
+    """Shared envelope validation: exact length + CRC. Returns
+    ``(ftype, dtag, flags)``; the payload is ``buf[12:-4]``."""
+    total = frame_total_length(buf, max_payload_bytes=max_payload_bytes)
     if len(buf) < total:
         raise TruncatedFrame(f"frame declares {total} bytes, got {len(buf)}")
     if len(buf) > total:
         raise BadLength(f"{len(buf) - total} trailing bytes after frame")
-    _, _, ftype, dtag, flags, plen = _HEADER.unpack(buf[:HEADER_BYTES])
+    _, _, ftype, dtag, flags, _ = _HEADER.unpack(buf[:HEADER_BYTES])
+    (crc,) = struct.unpack("<I", buf[total - TRAILER_BYTES:total])
+    actual = zlib.crc32(buf[:total - TRAILER_BYTES]) & 0xFFFFFFFF
+    if crc != actual:
+        raise ChecksumMismatch(f"crc {crc:#010x} != computed {actual:#010x}")
+    return ftype, dtag, flags
+
+
+def decode_frame(buf: bytes, *,
+                 max_payload_bytes: int = MAX_PAYLOAD_BYTES) -> Frame:
+    """Parse and strictly validate exactly one frame.
+
+    Rejections are always a :class:`WireError` subclass; arbitrary input
+    bytes can never crash the decoder or yield a frame that does not
+    re-encode to the same bytes. A valid continuation chunk raises
+    :class:`ContinuationChunk` — its payload is a partial byte slice, not a
+    decodable frame; callers with a reassembly path catch that one type.
+    """
+    ftype, dtag, flags = _envelope(buf, max_payload_bytes=max_payload_bytes)
+    _, _, _, _, _, plen = _HEADER.unpack(buf[:HEADER_BYTES])
     if ftype == FT_ACK:
         if flags & ~_ACK_FLAGS_MASK:
             raise PayloadError(
                 f"unknown ACK flags bits {flags:#04x} "
                 f"(defined mask {_ACK_FLAGS_MASK:#04x})")
+    elif flags & FLAG_CONTINUED and ftype in CHUNKABLE_FRAME_TYPES:
+        if flags & ~FLAG_CONTINUED:
+            raise PayloadError(
+                f"unknown upload flags bits {flags:#04x} "
+                f"(defined mask {FLAG_CONTINUED:#04x})")
+        raise ContinuationChunk(
+            f"frame type {ftype:#04x} chunk of {plen} payload bytes: "
+            f"reassemble before decoding")
     elif flags != 0:
         raise PayloadError(f"reserved flags byte must be 0, got {flags}")
-    (crc,) = struct.unpack("<I", buf[total - TRAILER_BYTES:total])
-    actual = zlib.crc32(buf[:total - TRAILER_BYTES]) & 0xFFFFFFFF
-    if crc != actual:
-        raise ChecksumMismatch(f"crc {crc:#010x} != computed {actual:#010x}")
     if dtag not in _TAG_NAMES:
         raise BadDtype(f"unknown dtype tag {dtag}")
     name = _TAG_NAMES[dtag]
@@ -774,6 +821,93 @@ def frame_crc(data: bytes) -> int:
                              f"got {len(data)}")
     (crc,) = struct.unpack("<I", data[-TRAILER_BYTES:])
     return crc
+
+
+# -- streaming multi-frame uploads (continuation chunks) ---------------------
+
+def chunk_parts(buf: bytes) -> tuple[int, int, int, bytes]:
+    """Validate one received frame's ENVELOPE only (magic/version/length/CRC)
+    and return ``(ftype, dtype_tag, flags, payload)`` without parsing the
+    payload — the reassembly path's view of a chunk. Raises the same typed
+    errors as :func:`decode_frame` for transit damage.
+    """
+    ftype, dtag, flags = _envelope(buf, max_payload_bytes=MAX_PAYLOAD_BYTES)
+    return ftype, dtag, flags, buf[HEADER_BYTES:len(buf) - TRAILER_BYTES]
+
+
+def split_frame(raw: bytes, *, max_chunk_payload: int) -> list[bytes]:
+    """Split one encoded frame into continuation chunks of at most
+    ``max_chunk_payload`` payload bytes each.
+
+    Returns ``[raw]`` unchanged when the payload already fits (the common
+    case stays byte-identical). Otherwise every chunk is a complete, CRC'd
+    wire frame of the SAME type: all but the last carry
+    :data:`FLAG_CONTINUED`; the last carries flags 0 and terminates the
+    sequence. ``join_chunks`` of the result reproduces ``raw`` exactly.
+    """
+    if max_chunk_payload < 1:
+        raise BadLength(f"max_chunk_payload must be >= 1, "
+                        f"got {max_chunk_payload}")
+    ftype, dtag, flags = _envelope(buf=raw,
+                                   max_payload_bytes=MAX_REASSEMBLED_BYTES)
+    if flags != 0:
+        raise PayloadError("cannot chunk a frame that already carries flags")
+    payload = raw[HEADER_BYTES:len(raw) - TRAILER_BYTES]
+    if len(payload) <= max_chunk_payload:
+        return [raw]
+    if ftype not in CHUNKABLE_FRAME_TYPES:
+        raise BadFrameType(
+            f"frame type {ftype:#04x} does not support continuation chunks")
+    out = []
+    for off in range(0, len(payload), max_chunk_payload):
+        part = payload[off:off + max_chunk_payload]
+        last = off + max_chunk_payload >= len(payload)
+        header = _HEADER.pack(MAGIC, VERSION, ftype, dtag,
+                              0 if last else FLAG_CONTINUED, len(part))
+        body = header + part
+        out.append(body + struct.pack("<I", zlib.crc32(body) & 0xFFFFFFFF))
+    return out
+
+
+def join_chunks(ftype: int, dtag: int, parts) -> bytes:
+    """Reassemble chunk payload slices into the canonical unchunked frame.
+
+    The result is byte-identical to :func:`encode_frame` of the logical
+    frame (flags 0, one CRC over the whole payload) — so the dedup key
+    ``(client_id, frame_crc)`` and the journal record are invariant to how
+    the frame was transported.
+    """
+    payload = b"".join(parts)
+    if len(payload) > MAX_REASSEMBLED_BYTES:
+        raise BadLength(f"reassembled payload {len(payload)} exceeds the u32 "
+                        f"length field ({MAX_REASSEMBLED_BYTES})")
+    header = _HEADER.pack(MAGIC, VERSION, ftype, dtag, 0, len(payload))
+    body = header + payload
+    return body + struct.pack("<I", zlib.crc32(body) & 0xFFFFFFFF)
+
+
+# -- relay identity (hierarchical aggregation, server.relay) -----------------
+
+RELAY_CLIENT_PREFIX = "relay:"
+
+
+def relay_client_id(relay_id: str, epoch: int) -> str:
+    """The client id a relay stamps on its forwarded fused frame.
+
+    One id per (relay, forward epoch): re-sends of the SAME epoch (retries
+    after a lost ACK, restarts replaying a persisted pending frame) are
+    byte-identical and dedup upstream, while the next epoch's delta is a new
+    id and fuses. The prefix marks the frame's tier for the pool ledger.
+    """
+    if not relay_id or "#" in relay_id:
+        raise PayloadError(f"bad relay id {relay_id!r} (nonempty, no '#')")
+    return f"{RELAY_CLIENT_PREFIX}{relay_id}#{int(epoch):08d}"
+
+
+def is_relay_client(client_id) -> bool:
+    """Whether an upload's client id marks a relay-forwarded frame."""
+    return (isinstance(client_id, str)
+            and client_id.startswith(RELAY_CLIENT_PREFIX))
 
 
 def projection_hash(R) -> int:

@@ -63,9 +63,11 @@ def run_client(args: argparse.Namespace) -> dict:
         client = transport.ResilientClient(
             connect, tenant=args.tenant, offers=offers,
             retries=args.retries, backoff_s=args.backoff,
-            jitter=args.jitter, seed=seed)
+            jitter=args.jitter, seed=seed,
+            max_chunk_payload=args.max_chunk_payload)
     else:
-        client = transport.FrameClient(connect())
+        client = transport.FrameClient(
+            connect(), max_chunk_payload=args.max_chunk_payload)
     report: dict = {"tenant": args.tenant, "client_id": args.client_id,
                     "client_index": args.client_index}
     try:
@@ -209,6 +211,12 @@ def make_parser() -> argparse.ArgumentParser:
     ap.add_argument("--retry-seed", type=int, default=None,
                     help="seed for the jitter schedule (default: derived "
                          "from --client-index so clients desynchronize)")
+    ap.add_argument("--max-chunk-payload", type=int, default=None,
+                    metavar="BYTES",
+                    help="stream uploads whose payload exceeds BYTES as "
+                         "continuation chunks (for d large enough that one "
+                         "triangular payload would blow the single-frame "
+                         "cap); smaller uploads stay byte-identical")
     return ap
 
 

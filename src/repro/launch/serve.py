@@ -26,6 +26,12 @@ Modes:
     the ledger from *actual encoded frame lengths*. ``--expect-uploads N``
     exits once N upload frames were admitted and every connection closed
     (or at ``--serve-timeout``).
+  * ``relay --upstream HOST:PORT`` — the same wire server run as a
+    hierarchical sub-aggregator (``server.relay``): regional clients upload
+    exactly as above, and a ``RelayForwarder`` ships ONE fused delta frame
+    per tenant upstream on a size/staleness policy (and always at
+    shutdown/SIGTERM), stamped with ``--relay-id`` so upstream dedup makes
+    re-forwards idempotent — root ingress is O(relays), not O(clients).
 """
 from __future__ import annotations
 
@@ -359,7 +365,13 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
                journal_dir: str | None = None,
                snapshot_every: int | None = None,
                journal_fsync: bool = True,
-               chaos=None, chaos_seed: int = 0) -> dict:
+               chaos=None, chaos_seed: int = 0,
+               upstream: str | None = None, relay_id: str = "relay0",
+               forward_every: int | None = 32,
+               forward_staleness_s: float | None = None,
+               forward_interval_s: float = 0.25,
+               relay_state_dir: str | None = None,
+               max_chunk_payload: int | None = None) -> dict:
     """Run the out-of-process federation server: an ``EnginePool`` behind a
     ``fed.transport.FrameServer`` speaking the ``fed.wire`` binary protocol.
 
@@ -385,7 +397,18 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
     TCP proxy in front of the server — clients connect to the printed proxy
     port and experience drops, duplicates, corruption, delays, and mid-frame
     kills by deterministic schedule.
+
+    ``upstream="HOST:PORT"`` runs this server as a RELAY (hierarchical
+    aggregation, ``server.relay``): the same binary admits its regional
+    clients exactly as above, and a ``RelayForwarder`` ships ONE fused
+    delta frame per tenant upstream — every ``forward_every`` admitted
+    frames, at ``forward_staleness_s``, and always at shutdown/SIGTERM —
+    stamped with ``relay_id`` so upstream dedup makes re-forwards after a
+    lost ACK idempotent. Forward state persists durably under
+    ``relay_state_dir`` (default ``<journal_dir>/relay_state``), so a
+    restarted relay re-sends its pending frame instead of losing it.
     """
+    import os
     import signal
 
     from repro.fed import transport
@@ -399,11 +422,32 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
         kw["solve_window_s"] = solve_window_s
     pool = EnginePool(max_warm=max_warm, default_coalesce=policy,
                       journal_dir=journal_dir, snapshot_every=snapshot_every,
-                      journal_fsync=journal_fsync)
+                      journal_fsync=journal_fsync,
+                      tier="relay" if upstream is not None else "root")
     if pool.replayed_frames or pool.restored_tenants:
         print(f"[serve_wire] recovered {pool.restored_tenants} tenants from "
               f"snapshot + {pool.replayed_frames} replayed journal frames",
               flush=True)
+    forwarder = None
+    if upstream is not None:
+        from repro.server.relay import ForwardPolicy, RelayForwarder
+
+        host, _, up_port = upstream.rpartition(":")
+        state = relay_state_dir or (os.path.join(journal_dir, "relay_state")
+                                    if journal_dir else None)
+        if state is None:
+            raise ValueError("relay mode needs relay_state_dir (or a "
+                             "journal_dir to put it under)")
+        forwarder = RelayForwarder(
+            pool, lambda: transport.TCPChannel(host, int(up_port)),
+            relay_id=relay_id, state_dir=state,
+            policy=ForwardPolicy(max_frames=forward_every,
+                                 max_staleness_s=forward_staleness_s),
+            max_chunk_payload=max_chunk_payload)
+        resumed = forwarder.resume()
+        if resumed:
+            print(f"[serve_wire] relay {relay_id}: re-sent {resumed} pending "
+                  f"forward frame(s) from a previous incarnation", flush=True)
     term = threading.Event()
     installed = False
     try:
@@ -428,6 +472,8 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
                       flush=True)
             print(f"[serve_wire] listening on {srv.host}:{srv.port}",
                   flush=True)
+            if forwarder is not None:
+                forwarder.start(forward_interval_s)
             deadline = time.monotonic() + timeout_s
             while time.monotonic() < deadline and not term.is_set():
                 done = (expect_uploads
@@ -436,6 +482,15 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
                 if done:
                     break
                 time.sleep(0.02)
+            relay_summary = None
+            if forwarder is not None:
+                # Shutdown contract (including SIGTERM): whatever the
+                # forwarding policy left unshipped goes upstream NOW, so
+                # the root holds this relay's complete fusion before exit.
+                forwarder.stop()
+                forwarder.forward_all()
+                relay_summary = forwarder.summary()
+                forwarder.close(forward=False)
             solves = {}
             tenant_reports = {}
             for name in pool.tenant_names:
@@ -462,9 +517,13 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
                 "ledger": ledger,
                 "pool": pool.summary(),
             }
+            if relay_summary is not None:
+                report["relay"] = relay_summary
             if proxy is not None:
                 report["chaos"] = proxy.schedule.summary()
     finally:
+        if forwarder is not None:
+            forwarder.close(forward=False)   # idempotent; exception path
         if proxy is not None:
             proxy.stop()
         if installed:
@@ -477,6 +536,12 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
     print(f"[serve_wire] ledger: {ledger['wire_upload_bytes']} upload bytes "
           f"+ {ledger['wire_download_bytes']} download bytes on the wire "
           f"across {len(report['tenants'])} tenants")
+    if report.get("relay") is not None:
+        rs = report["relay"]
+        print(f"[serve_wire] relay {rs['relay_id']}: {rs['forwards']} "
+              f"upstream frames ({rs['forwarded_bytes']} bytes), "
+              f"{rs['duplicate_acks']} duplicate acks, "
+              f"{rs['resumed_pending']} resumed pending")
     for name, w in solves.items():
         print(f"[serve_wire] tenant {name}: |w({sigma})| = "
               f"{float(np.linalg.norm(w)):.6f}")
@@ -486,7 +551,8 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["model", "fusion"], default="model")
+    ap.add_argument("--mode", choices=["model", "fusion", "relay"],
+                    default="model")
     ap.add_argument("--arch", choices=list(configs.ARCH_IDS))
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--batch", type=int, default=4)
@@ -565,6 +631,30 @@ def main() -> None:
     ap.add_argument("--no-journal-fsync", action="store_true",
                     help="skip fsync per journal append (faster; crash "
                          "window widens to OS flush semantics)")
+    ap.add_argument("--upstream", type=str, default=None, metavar="HOST:PORT",
+                    help="with --mode relay: the parent aggregator to "
+                         "forward fused per-tenant delta frames to")
+    ap.add_argument("--relay-id", type=str, default="relay0",
+                    help="stable relay identity stamped into forwarded "
+                         "frames (upstream dedup key; unique per relay)")
+    ap.add_argument("--forward-every", type=int, default=32, metavar="N",
+                    help="forward a tenant after N admitted upload frames")
+    ap.add_argument("--forward-staleness", type=float, default=None,
+                    metavar="SECONDS",
+                    help="also forward once the oldest unforwarded "
+                         "admission is this old")
+    ap.add_argument("--forward-interval", type=float, default=0.25,
+                    metavar="SECONDS",
+                    help="relay poller period (how often the forwarding "
+                         "policy is evaluated)")
+    ap.add_argument("--relay-state-dir", type=str, default=None, metavar="DIR",
+                    help="durable forward-state directory (default: "
+                         "<journal-dir>/relay_state)")
+    ap.add_argument("--max-chunk-payload", type=int, default=None,
+                    metavar="BYTES",
+                    help="stream uploads larger than BYTES of payload as "
+                         "continuation chunks (relay forwards and client "
+                         "uploads both honor it)")
     for fault in ("drop", "corrupt", "kill", "duplicate", "reorder",
                   "delay", "drop-reply"):
         ap.add_argument(f"--chaos-{fault}", type=float, default=0.0,
@@ -581,7 +671,10 @@ def main() -> None:
     args = ap.parse_args()
     if args.compilation_cache:
         enable_compilation_cache(args.compilation_cache)
-    if args.mode == "fusion" and args.listen is not None:
+    if args.mode == "relay" and args.upstream is None:
+        ap.error("--mode relay requires --upstream HOST:PORT")
+    if args.mode == "relay" or (args.mode == "fusion"
+                                and args.listen is not None):
         from repro.fed.chaos import ChaosConfig
 
         if args.chaos_rate > 0:
@@ -593,7 +686,8 @@ def main() -> None:
                                "reorder", "delay", "drop_reply")}
             chaos = (ChaosConfig(**rates, delay_s=args.chaos_delay_s)
                      if any(r > 0 for r in rates.values()) else None)
-        serve_wire(port=args.listen, expect_uploads=args.expect_uploads,
+        serve_wire(port=args.listen or 0,
+                   expect_uploads=args.expect_uploads,
                    timeout_s=args.serve_timeout, sigma=args.sigma,
                    coalesce_rank=args.coalesce_rank,
                    flush_staleness_s=args.flush_staleness,
@@ -602,7 +696,14 @@ def main() -> None:
                    journal_dir=args.journal_dir,
                    snapshot_every=args.snapshot_every,
                    journal_fsync=not args.no_journal_fsync,
-                   chaos=chaos, chaos_seed=args.chaos_seed)
+                   chaos=chaos, chaos_seed=args.chaos_seed,
+                   upstream=args.upstream if args.mode == "relay" else None,
+                   relay_id=args.relay_id,
+                   forward_every=args.forward_every,
+                   forward_staleness_s=args.forward_staleness,
+                   forward_interval_s=args.forward_interval,
+                   relay_state_dir=args.relay_state_dir,
+                   max_chunk_payload=args.max_chunk_payload)
         return
     if args.mode == "fusion":
         res = serve_fusion(dim=args.dim, tenants=args.tenants,

@@ -38,6 +38,43 @@ Consistency model (why replay is exact):
   pool's Phase-3 solve is bit-identical to a never-crashed one (both
   factorize cold from identical fused stats).
 
+Process-crash vs power-loss guarantees:
+
+  A *process crash* (SIGKILL, OOM, uncaught exception) loses only what the
+  process had not yet handed to the OS — data in user-space buffers. Every
+  write here goes through ``flush()`` before the caller proceeds, so all
+  four cells below survive a process crash regardless of ``fsync``.
+  *Power loss* (kernel panic, yanked cord) additionally loses whatever the
+  OS had not yet hit the platter with — including metadata the filesystem
+  only persists on a DIRECTORY fsync: a rename (``os.replace``) and a newly
+  created file are not power-loss-durable until their parent directory is
+  fsynced. The commit protocol therefore orders, per snapshot:
+
+      npz data fsync  <  commit-record rename  <  snapshot-dir fsync
+                                                       <  prune
+
+  so a commit record that survives power loss always points at complete
+  array data, and the WAL segments a snapshot supersedes are deleted only
+  once the snapshot that replaces them is fully durable. New WAL segments
+  fsync the store directory at creation for the same reason — a journaled
+  frame is not durable if the segment holding it can vanish.
+
+  ==============  =======================  ==============================
+  ``fsync=``      process crash            power loss
+  ==============  =======================  ==============================
+  ``True``        nothing lost: every      nothing lost: appends, commit
+                  ACKed frame + every      records, and the directory
+                  committed snapshot       entries naming them are all
+                  replay exactly           forced to stable storage
+  ``False``       nothing lost (appends    ACKed frames since the last
+                  are flushed to the OS    OS writeback may vanish; the
+                  before the ACK)          snapshot commit protocol still
+                                           fsyncs unconditionally, so
+                                           recovery falls back to a
+                                           CONSISTENT committed snapshot,
+                                           never a torn one
+  ==============  =======================  ==============================
+
 ``EnginePool(journal_dir=...)`` owns the orchestration; this module owns
 bytes-on-disk. It imports only ``fed.wire`` and ``repro.checkpoint``.
 """
@@ -62,6 +99,19 @@ _COMMIT_RE = re.compile(r"commit_(\d{8})\.json$")
 
 def wal_name(seq: int) -> str:
     return f"wal_{seq:08d}.log"
+
+
+def fsync_dir(path: str | pathlib.Path) -> None:
+    """Force a directory's entries (renames, new files) to stable storage.
+
+    ``os.replace`` is atomic for *process* crashes, but the new name only
+    survives *power loss* once the parent directory's metadata is synced.
+    """
+    fd = os.open(str(path), os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,7 +157,9 @@ def scan_segment(path: str | pathlib.Path) -> ScanResult:
             return ScanResult(tuple(records), off, True,
                               f"truncated header at {off}")
         try:
-            total = wire.frame_total_length(data[off:off + wire.HEADER_BYTES])
+            total = wire.frame_total_length(
+                data[off:off + wire.HEADER_BYTES],
+                max_payload_bytes=wire.MAX_REASSEMBLED_BYTES)
         except wire.WireError as e:
             return ScanResult(tuple(records), off, True,
                               f"bad header at {off}: {e}")
@@ -117,7 +169,10 @@ def scan_segment(path: str | pathlib.Path) -> ScanResult:
                               f"(needs {total} bytes)")
         raw = data[off:off + total]
         try:
-            frame = wire.decode_frame(raw)
+            # Journal records are canonical (reassembled) frames, which may
+            # legitimately exceed the per-wire-frame payload cap.
+            frame = wire.decode_frame(
+                raw, max_payload_bytes=wire.MAX_REASSEMBLED_BYTES)
         except wire.WireError as e:
             return ScanResult(tuple(records), off, True,
                               f"corrupt record at {off}: "
@@ -144,7 +199,12 @@ class Journal:
         self.path = pathlib.Path(path)
         self.fsync = fsync
         self._lock = threading.Lock()
+        existed = self.path.exists()
         self._f = open(self.path, "ab")
+        if self.fsync and not existed:
+            # A newly created segment's directory entry must be durable
+            # before any record in it can claim to be.
+            fsync_dir(self.path.parent)
         self._size = self._f.tell()
         # Re-binding marker state. A reopened segment restarts from an
         # unknown binding, so the first append always writes a fresh marker.
@@ -191,7 +251,10 @@ class Journal:
                 os.fsync(self._f.fileno())
             self._f.close()
             self.path = pathlib.Path(path)
+            existed = self.path.exists()
             self._f = open(self.path, "ab")
+            if self.fsync and not existed:
+                fsync_dir(self.path.parent)
             self._size = self._f.tell()
             self._bound = None
 
@@ -276,6 +339,8 @@ class DurableStore:
             first = 0 if base is None else base
             path = self.segment_path(first)
             path.touch()
+            if self.fsync:
+                fsync_dir(self.dir)
             seqs = [first]
         plan: list[tuple[int, ScanResult]] = []
         for i, seq in enumerate(seqs):
@@ -295,7 +360,15 @@ class DurableStore:
     # -- snapshots -----------------------------------------------------------
 
     def commit_snapshot(self, seq: int, tree, meta: dict) -> pathlib.Path:
-        """Write arrays + commit record; the rename IS the commit point."""
+        """Write arrays + commit record; the rename IS the commit point.
+
+        Ordering (power-loss contract; see module docstring): the npz data
+        is fsynced inside ``save_pytree`` BEFORE the commit record is
+        renamed into place, and the snapshot directory is fsynced AFTER the
+        rename — only once this returns may the caller prune superseded
+        segments. All three steps run regardless of ``self.fsync``: a torn
+        commit is corruption, not merely lost recency.
+        """
         save_pytree(tree, self.snapdir, step=seq)
         commit = self.snapdir / f"commit_{seq:08d}.json"
         tmp = commit.with_suffix(".json.tmp")
@@ -305,6 +378,7 @@ class DurableStore:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, commit)
+        fsync_dir(self.snapdir)
         return commit
 
     def load_snapshot(self) -> tuple[int, dict, dict] | None:
@@ -334,6 +408,10 @@ class DurableStore:
             m = re.match(r"(?:step|commit)_(\d{8})\.(?:npz|json)$", p.name)
             if m and int(m.group(1)) < keep_seq:
                 _unlink_quiet(p)
+        # Tmp files are pre-commit garbage a crash left behind; prune runs
+        # only after a durable commit, so any survivor is dead weight.
+        for p in self.snapdir.glob("*.tmp"):
+            _unlink_quiet(p)
 
 
 def _unlink_quiet(path: pathlib.Path) -> None:

@@ -82,6 +82,8 @@ class Tenant:
     comm: Any = None               # fed.comm.CommRecord from admission
     streamed_floats: int = 0       # §VI-C bytes ingested after admission
     wire_frames: int = 0           # decoded wire frames admitted (fed.wire)
+    relay_frames: int = 0          # of those, fused frames forwarded by a
+    #                                relay tier (wire.is_relay_client ids)
     wire_upload_bytes: int = 0     # encoded bytes of admitted upload frames
     wire_download_bytes: int = 0   # encoded bytes of replies (weights/acks)
     feature_map: FeatureMap | None = None  # §IV-F map identity (sketch / rff)
@@ -134,6 +136,7 @@ class Tenant:
                 "kind": self.kind,
                 "streamed_floats": self.streamed_floats,
                 "wire_frames": self.wire_frames,
+                "relay_frames": self.relay_frames,
                 "wire_upload_bytes": self.wire_upload_bytes,
                 "wire_download_bytes": self.wire_download_bytes,
                 "duplicates": self.duplicates,
@@ -158,7 +161,8 @@ class EnginePool:
                  journal_dir: str | None = None,
                  snapshot_every: int | None = None,
                  journal_fsync: bool = True,
-                 journal_placement: str = "dense"):
+                 journal_placement: str = "dense",
+                 tier: str = "root"):
         """Args:
           mesh: mesh shared by every sharded tenant; built lazily
             (``launch.mesh.make_cpu_mesh(mesh_devices)``) when omitted and a
@@ -197,6 +201,10 @@ class EnginePool:
             re-send and the dedup index absorbs).
           journal_placement: placement for tenants recreated by journal
             replay that no snapshot covers yet.
+          tier: accounting label for hierarchical topologies ("root" for the
+            top aggregator, "relay" for a sub-aggregator — see
+            ``server.relay``). Surfaced by :meth:`ledger` next to the
+            per-tier frame split; changes no fusion behavior.
         """
         self._tenants: dict[str, Tenant] = {}
         self._reg_lock = threading.RLock()
@@ -208,6 +216,7 @@ class EnginePool:
         self.max_tenants = max_tenants
         self.stat_budget_bytes = stat_budget_bytes
         self.max_clients_per_tenant = max_clients_per_tenant
+        self.tier = tier
         self._default_coalesce = default_coalesce
         self.meshes_built = 0
         self.batched_sweeps = 0     # cross-tenant stacked solve sweeps run
@@ -574,6 +583,7 @@ class EnginePool:
             t.dedup = {(cid, crc) for cid, crc in tm["dedup"]}
             c = tm["counters"]
             t.wire_frames = c["wire_frames"]
+            t.relay_frames = c.get("relay_frames", 0)
             t.wire_upload_bytes = c["wire_upload_bytes"]
             # Download bytes are snapshot-only: replay produces no replies,
             # so replies sent after the capture are not re-counted.
@@ -641,6 +651,7 @@ class EnginePool:
                     "dedup": sorted([cid, crc] for cid, crc in t.dedup),
                     "counters": {
                         "wire_frames": t.wire_frames,
+                        "relay_frames": t.relay_frames,
                         "wire_upload_bytes": t.wire_upload_bytes,
                         "wire_download_bytes": t.wire_download_bytes,
                         "streamed_floats": t.streamed_floats,
@@ -781,6 +792,8 @@ class EnginePool:
                                  wire_bytes=encoded_len, quota_client=cid)
                     if key is not None:
                         t.dedup.add(key)
+                    if wire.is_relay_client(cid):
+                        t.relay_frames += 1
                 return wire.AckFrame(True, f"ingested d={packed.dim} "
                                            f"count={int(packed.count)}")
             if isinstance(frame, wire.DeltaRowsFrame):
@@ -805,6 +818,8 @@ class EnginePool:
                                  wire_bytes=encoded_len, quota_client=cid)
                     if key is not None:
                         t.dedup.add(key)
+                    if wire.is_relay_client(cid):
+                        t.relay_frames += 1
                 return wire.AckFrame(True, f"ingested {A.shape[0]} rows")
             if isinstance(frame, wire.ControlFrame):
                 if name not in self:
@@ -1326,7 +1341,7 @@ class EnginePool:
         out = fed_comm.aggregate_records(
             {t.name: t.comm for t in snapshot if t.comm is not None},
             kinds={t.name: t.kind for t in snapshot})
-        streamed = wire_up = wire_down = 0
+        streamed = wire_up = wire_down = relay_frames = wire_frames = 0
         by_kind = out["by_kind"]
         for t in snapshot:
             entry = out["per_tenant"].setdefault(t.name, {})
@@ -1337,6 +1352,10 @@ class EnginePool:
                 entry["wire_frames"] = t.wire_frames
                 entry["wire_upload_bytes"] = t.wire_upload_bytes
                 entry["wire_download_bytes"] = t.wire_download_bytes
+                if t.relay_frames:
+                    entry["relay_frames"] = t.relay_frames
+            wire_frames += t.wire_frames
+            relay_frames += t.relay_frames
             wire_up += t.wire_upload_bytes
             wire_down += t.wire_download_bytes
             # Tenants admitted over the wire carry no CommRecord, so the
@@ -1360,6 +1379,15 @@ class EnginePool:
         out["wire_download_bytes"] = wire_down
         out["total_bytes"] = (out["upload_download_bytes"] + streamed
                               + wire_up + wire_down)
+        # -- per-tier accounting (hierarchical topologies, server.relay) -----
+        # Upload-frame ingress split by origin tier: frames forwarded by a
+        # relay (wire.is_relay_client ids — the fleet's O(relays) ingress)
+        # vs direct client uploads. On a root fed only through relays,
+        # ``by_tier["relay_frames"]`` is exactly the number of upstream
+        # stat frames the relays shipped.
+        out["tier"] = self.tier
+        out["by_tier"] = {"relay_frames": relay_frames,
+                          "client_frames": wire_frames - relay_frames}
         return out
 
     def summary(self) -> dict:

@@ -1,0 +1,643 @@
+"""Hierarchical relay aggregation: two-tier exactness, crash-safe forwards.
+
+The tentpole pin: Theorem 1 makes one-shot fusion associative, so a tree of
+aggregators (clients -> relays -> root) recovers the centralized solution
+BIT-exactly while root ingress drops from O(clients) to O(relays) — and the
+relay's forward protocol survives crashes at every point without a single
+client re-upload. Layers:
+
+  * Units — ``ForwardPolicy`` triggers, ``wire.relay_client_id`` identity,
+    the per-tier pool ledger.
+  * Loopback two-tier — 2 relays x 3 clients across dense + sketched + rff
+    tenants: bit-identical to ``core.fusion`` references, telescoping
+    deltas across forward epochs, empty-delta skips.
+  * Crash/resume — a forwarder that dies between its durable pending
+    commit and the upstream ACK resumes on restart with byte-identical
+    re-sends; a re-send whose original landed dedups (duplicate=True,
+    nothing fused twice). Warm standby: a copied journal + relay-state
+    directory spins up a replacement relay that forwards exactly the
+    un-forwarded remainder.
+  * Two-tier chaos acceptance — seeded faults at >=10% on BOTH legs
+    (client->relay and relay->root) via real TCP ``ChaosProxy``s; the root
+    still lands bit-exactly, with its ledger recording exactly one
+    upstream frame per relay per tenant.
+  * Subprocess acceptance — ``serve.py --mode relay`` SIGKILLed after
+    ingest, restarted on the same ``--journal-dir``: the restart replays
+    its WAL and flushes upstream; the root's final weights equal the
+    uncrashed reference with zero client re-uploads.
+
+Bitwise references respect float addition's non-associativity: dense
+tenants use small-integer rows (order-free exact sums); feature tenants
+fold the reference with the SAME association the tree used (per-relay
+fold of client statistics in admission order, then across relays).
+"""
+import json
+import os
+import pathlib
+import re
+import shutil
+import signal
+import socket
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fusion
+from repro.core.features import FeatureMap
+from repro.core.sufficient_stats import compute_stats
+from repro.fed import chaos, transport, wire
+from repro.fed.protocol import PackedStats
+from repro.server import EnginePool
+from repro.server.relay import ForwardPolicy, RelayForwarder
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SERVE_CLI = REPO / "src" / "repro" / "launch" / "serve.py"
+SIGMA = 0.37
+D = 6
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    return env
+
+
+def _int_rows(rng, n=8, d=D):
+    A = rng.integers(-3, 4, (n, d)).astype(np.float32)
+    b = rng.integers(-3, 4, (n,)).astype(np.float32)
+    return A, b
+
+
+def _w(pool, name, sigma=SIGMA):
+    return np.asarray(jax.device_get(pool.solve_lifted(name, sigma)))
+
+
+def _w_native(pool, name, sigma=SIGMA):
+    """Weights in the tenant's own (feature) space — comparable with a
+    ``fusion.solve_ridge`` over the same m-space statistics."""
+    return np.asarray(jax.device_get(pool.solve(name, sigma)))
+
+
+def _fold(stats_list):
+    """Fold-left — the association the relay's admission order produces."""
+    acc = stats_list[0]
+    for s in stats_list[1:]:
+        acc = acc + s
+    return acc
+
+
+def _upload_dense(channel, tenant, A, b, client_id):
+    cl = transport.FrameClient(channel)
+    cl.hello(tenant)
+    cl.upload_stats(compute_stats(jnp.asarray(A), jnp.asarray(b)),
+                    client_id=client_id)
+    cl.close()
+
+
+def _upload_feature(channel, tenant, fm, A, b, client_id):
+    cl = transport.FrameClient(channel)
+    cl.hello(tenant)
+    packed = PackedStats.pack(
+        fm.stats(jnp.asarray(A), jnp.asarray(b), use_pallas=False))
+    if fm.kind == "sketch":
+        cl.upload_projected(packed, d_orig=fm.d_orig, seed=fm.seed,
+                            rhash=fm.fhash, client_id=client_id)
+    else:
+        cl.upload_rff(packed, d_orig=fm.d_orig, seed=fm.seed, fhash=fm.fhash,
+                      lengthscale=fm.lengthscale, client_id=client_id)
+    cl.close()
+
+
+def _relay(pool, root_disp, relay_id, state_dir, **kw):
+    kw.setdefault("policy", ForwardPolicy(max_frames=None))
+    return RelayForwarder(pool, lambda: transport.LoopbackChannel(root_disp),
+                          relay_id=relay_id, state_dir=state_dir, **kw)
+
+
+# -- units ---------------------------------------------------------------------
+
+class TestForwardPolicy:
+    def test_size_trigger(self):
+        p = ForwardPolicy(max_frames=3, max_staleness_s=None)
+        assert not p.due(0, 1e9)
+        assert not p.due(2, 1e9)       # staleness disabled
+        assert p.due(3, 0.0)
+
+    def test_staleness_trigger(self):
+        p = ForwardPolicy(max_frames=None, max_staleness_s=0.5)
+        assert not p.due(1, 0.4)
+        assert p.due(1, 0.5)
+        assert not p.due(0, 1e9)       # nothing pending: never due
+
+    def test_both_disabled_only_forward_all(self):
+        p = ForwardPolicy(max_frames=None, max_staleness_s=None)
+        assert not p.due(10_000, 1e9)
+
+
+class TestRelayIdentity:
+    def test_format_and_predicate(self):
+        cid = wire.relay_client_id("east-1", 7)
+        assert cid == "relay:east-1#00000007"
+        assert wire.is_relay_client(cid)
+        assert not wire.is_relay_client("client0")
+        assert not wire.is_relay_client(3)
+
+    def test_epochs_distinct_ids(self):
+        assert wire.relay_client_id("r", 0) != wire.relay_client_id("r", 1)
+
+    def test_bad_relay_id_rejected(self):
+        with pytest.raises(wire.PayloadError):
+            wire.relay_client_id("", 0)
+        with pytest.raises(wire.PayloadError):
+            wire.relay_client_id("a#b", 0)
+
+    def test_validated_at_construction(self, tmp_path):
+        with pytest.raises(wire.PayloadError):
+            RelayForwarder(EnginePool(), lambda: None, relay_id="",
+                           state_dir=tmp_path)
+
+
+class TestPerTierLedger:
+    def test_relay_frames_counted_and_persisted(self, tmp_path):
+        rng = np.random.default_rng(0)
+        pool = EnginePool(journal_dir=str(tmp_path / "j"), tier="root")
+        disp = transport.WireDispatcher(pool)
+        _upload_dense(transport.LoopbackChannel(disp), "t",
+                      *_int_rows(rng), client_id="plain")
+        _upload_dense(transport.LoopbackChannel(disp), "t", *_int_rows(rng),
+                      client_id=wire.relay_client_id("r0", 0))
+        led = pool.ledger()
+        assert led["tier"] == "root"
+        assert led["by_tier"] == {"relay_frames": 1, "client_frames": 1}
+        assert led["per_tenant"]["t"]["relay_frames"] == 1
+
+        pool.snapshot()
+        pool.close()
+        restored = EnginePool(journal_dir=str(tmp_path / "j"))
+        assert restored.ledger()["by_tier"]["relay_frames"] == 1
+        restored.close()
+
+    def test_default_tier_is_root(self):
+        with EnginePool() as pool:
+            assert pool.ledger()["tier"] == "root"
+        with EnginePool(tier="relay") as pool:
+            assert pool.ledger()["tier"] == "relay"
+
+
+# -- loopback two-tier ---------------------------------------------------------
+
+def _build_two_tier(tmp_path, *, num_relays=2):
+    root = EnginePool(tier="root")
+    root_disp = transport.WireDispatcher(root)
+    relays = []
+    for r in range(num_relays):
+        pool = EnginePool(journal_dir=str(tmp_path / f"relay{r}"),
+                          tier="relay")
+        disp = transport.WireDispatcher(pool)
+        fwd = _relay(pool, root_disp, f"r{r}",
+                     tmp_path / f"relay{r}" / "relay_state")
+        relays.append((pool, disp, fwd))
+    return root, root_disp, relays
+
+
+class TestTwoTierLoopback:
+    def test_mixed_kinds_bitwise_exact(self, tmp_path):
+        """The tentpole pin, in-process: 2 relays x 3 clients x 3 tenant
+        kinds -> root solves bit-identical to core.fusion references, root
+        ledger sees only relay frames (one per relay per tenant)."""
+        rng = np.random.default_rng(0)
+        root, root_disp, relays = _build_two_tier(tmp_path)
+        fm_sk = FeatureMap("sketch", seed=3, d_orig=D, m=4)
+        fm_rf = FeatureMap("rff", seed=5, d_orig=D, m=4, lengthscale=1.3)
+
+        rows = {"dense": [], "sk": [], "rf": []}
+        for r, (pool, disp, fwd) in enumerate(relays):
+            for c in range(3):
+                A, b = _int_rows(rng)
+                _upload_dense(transport.LoopbackChannel(disp), "dense",
+                              A, b, f"r{r}c{c}")
+                _upload_feature(transport.LoopbackChannel(disp), "sk",
+                                fm_sk, A, b, f"r{r}c{c}")
+                _upload_feature(transport.LoopbackChannel(disp), "rf",
+                                fm_rf, A, b, f"r{r}c{c}")
+                rows["dense"].append((A, b))
+                rows["sk"].append((A, b))
+                rows["rf"].append((A, b))
+        for pool, disp, fwd in relays:
+            assert fwd.forward_all() == 3
+
+        # Dense: small-integer rows make the centralized union order-free.
+        A_all = jnp.concatenate([jnp.asarray(a) for a, _ in rows["dense"]])
+        b_all = jnp.concatenate([jnp.asarray(b) for _, b in rows["dense"]])
+        ref = np.asarray(jax.device_get(
+            fusion.solve_ridge(compute_stats(A_all, b_all), SIGMA)))
+        assert _w(root, "dense").tobytes() == ref.tobytes()
+
+        # Feature tenants: reference folded with the tree's association.
+        for name, fm in (("sk", fm_sk), ("rf", fm_rf)):
+            per_relay = [
+                _fold([fm.stats(jnp.asarray(A), jnp.asarray(b),
+                                use_pallas=False)
+                       for A, b in rows[name][3 * r:3 * r + 3]])
+                for r in range(2)]
+            ref = np.asarray(jax.device_get(
+                fusion.solve_ridge(_fold(per_relay), SIGMA)))
+            assert _w_native(root, name).tobytes() == ref.tobytes(), name
+
+        led = root.ledger()
+        assert led["by_tier"] == {"relay_frames": 6, "client_frames": 0}
+        for t in ("dense", "sk", "rf"):
+            assert led["per_tenant"][t]["relay_frames"] == 2
+        for pool, disp, fwd in relays:
+            fwd.close(forward=False)
+            pool.close()
+
+    def test_delta_telescopes_across_epochs(self, tmp_path):
+        """Multiple forward epochs: each ships now - last, so the root's
+        fused view equals the relay's regardless of cadence (and equals
+        the centralized union bit-exactly on integer rows)."""
+        rng = np.random.default_rng(1)
+        root, root_disp, relays = _build_two_tier(tmp_path, num_relays=1)
+        pool, disp, fwd = relays[0]
+        all_rows = []
+        for epoch in range(3):
+            for c in range(2):
+                A, b = _int_rows(rng)
+                _upload_dense(transport.LoopbackChannel(disp), "t", A, b,
+                              f"e{epoch}c{c}")
+                all_rows.append((A, b))
+            assert fwd.forward_all() == 1
+        assert fwd._state("t").epoch == 3
+
+        A_all = jnp.concatenate([jnp.asarray(a) for a, _ in all_rows])
+        b_all = jnp.concatenate([jnp.asarray(b) for _, b in all_rows])
+        ref = np.asarray(jax.device_get(
+            fusion.solve_ridge(compute_stats(A_all, b_all), SIGMA)))
+        assert _w(root, "t").tobytes() == ref.tobytes()
+        # 3 epochs -> 3 relay frames at the root, each a distinct client id.
+        assert root.ledger()["per_tenant"]["t"]["relay_frames"] == 3
+        fwd.close(forward=False)
+        pool.close()
+
+    def test_empty_delta_skips(self, tmp_path):
+        rng = np.random.default_rng(2)
+        root, root_disp, relays = _build_two_tier(tmp_path, num_relays=1)
+        pool, disp, fwd = relays[0]
+        _upload_dense(transport.LoopbackChannel(disp), "t", *_int_rows(rng),
+                      client_id="c0")
+        assert fwd.forward_all() == 1
+        assert fwd.forward_all() == 0          # nothing new: no frame
+        assert fwd.empty_skips == 1
+        assert fwd._state("t").epoch == 1      # epoch not burned
+        assert root.ledger()["per_tenant"]["t"]["relay_frames"] == 1
+        fwd.close(forward=False)
+        pool.close()
+
+    def test_poll_respects_size_policy(self, tmp_path):
+        rng = np.random.default_rng(3)
+        root = EnginePool(tier="root")
+        root_disp = transport.WireDispatcher(root)
+        pool = EnginePool(tier="relay")
+        disp = transport.WireDispatcher(pool)
+        fwd = _relay(pool, root_disp, "r0", tmp_path / "state",
+                     policy=ForwardPolicy(max_frames=2))
+        _upload_dense(transport.LoopbackChannel(disp), "t", *_int_rows(rng),
+                      client_id="c0")
+        assert fwd.poll() == 0                 # 1 < max_frames
+        _upload_dense(transport.LoopbackChannel(disp), "t", *_int_rows(rng),
+                      client_id="c1")
+        assert fwd.poll() == 1
+        assert fwd.poll() == 0                 # counter reset after forward
+        fwd.close(forward=False)
+        pool.close()
+
+
+# -- crash/resume --------------------------------------------------------------
+
+class TestCrashResume:
+    def test_crash_before_send_resumes_pending(self, tmp_path):
+        """Die between the durable pending commit and the send: a restarted
+        forwarder (fresh pool restored from the WAL, same state dir)
+        re-sends the EXACT persisted bytes; the root converges with zero
+        client re-uploads."""
+        rng = np.random.default_rng(4)
+        root = EnginePool(tier="root")
+        root_disp = transport.WireDispatcher(root)
+        jdir = tmp_path / "relay"
+        pool = EnginePool(journal_dir=str(jdir), tier="relay")
+        disp = transport.WireDispatcher(pool)
+        fwd = _relay(pool, root_disp, "r0", jdir / "relay_state")
+
+        rows = [_int_rows(rng) for _ in range(3)]
+        for c, (A, b) in enumerate(rows):
+            _upload_dense(transport.LoopbackChannel(disp), "t", A, b, f"c{c}")
+
+        boom = RuntimeError("power gone")
+        fwd._send_pending = lambda st: (_ for _ in ()).throw(boom)
+        with pytest.raises(RuntimeError):
+            fwd.forward_tenant("t")
+        # SIGKILL-equivalent: journal fd gone, no graceful close.
+        if pool._journal is not None:
+            pool._journal.close()
+        pool._closed = True
+        pool.stop_flusher()
+        assert root.tenant_names == ()         # nothing arrived upstream
+
+        pool2 = EnginePool(journal_dir=str(jdir), tier="relay")
+        fwd2 = _relay(pool2, root_disp, "r0", jdir / "relay_state")
+        assert fwd2.resume() == 1
+        assert fwd2.resumed_pending == 1
+
+        A_all = jnp.concatenate([jnp.asarray(a) for a, _ in rows])
+        b_all = jnp.concatenate([jnp.asarray(b) for _, b in rows])
+        ref = np.asarray(jax.device_get(
+            fusion.solve_ridge(compute_stats(A_all, b_all), SIGMA)))
+        assert _w(root, "t").tobytes() == ref.tobytes()
+        # Zero client re-uploads: one relay frame is ALL the root ever saw.
+        assert root.ledger()["by_tier"] == {"relay_frames": 1,
+                                            "client_frames": 0}
+        assert fwd2.forward_all() == 0         # delta already covered
+        fwd2.close(forward=False)
+        pool2.close()
+
+    def test_lost_ack_reforward_dedups(self, tmp_path):
+        """The forward LANDED but the ACK was lost (state dir captured at
+        the pending-commit point, as a crash would leave it): the resumed
+        re-send is byte-identical, the root answers duplicate=True, and
+        nothing is fused twice."""
+        rng = np.random.default_rng(5)
+        root = EnginePool(tier="root")
+        root_disp = transport.WireDispatcher(root)
+        state = tmp_path / "state"
+        captured = tmp_path / "state_at_commit"
+        pool = EnginePool(tier="relay")
+        disp = transport.WireDispatcher(pool)
+        fwd = _relay(pool, root_disp, "r0", state)
+        _upload_dense(transport.LoopbackChannel(disp), "t", *_int_rows(rng),
+                      client_id="c0")
+
+        real_send = fwd._send_pending
+
+        def capture_then_send(st):
+            shutil.copytree(state, captured)   # the durable pending record
+            real_send(st)                      # ...then the ACK arrives
+
+        fwd._send_pending = capture_then_send
+        assert fwd.forward_tenant("t")
+        before = _w(root, "t")
+        frames_before = root.tenant("t").wire_frames
+
+        fwd2 = _relay(pool, root_disp, "r0", captured)
+        assert fwd2.resume() == 1              # re-sends the landed epoch
+        assert fwd2.summary()["duplicate_acks"] == 1
+        assert root.tenant("t").wire_frames == frames_before
+        assert root.tenant("t").duplicates == 1
+        assert _w(root, "t").tobytes() == before.tobytes()
+        fwd.close(forward=False)
+        fwd2.close(forward=False)
+        pool.close()
+
+    def test_warm_standby_spinup(self, tmp_path):
+        """Ship a relay's journal+state directory to a standby host: the
+        replacement pool restores from snapshot+WAL, the replacement
+        forwarder loads ``last`` from the durable record, and forwards
+        exactly the not-yet-forwarded remainder — the root never
+        double-fuses what the dead relay already shipped."""
+        rng = np.random.default_rng(6)
+        root = EnginePool(tier="root")
+        root_disp = transport.WireDispatcher(root)
+        jdir = tmp_path / "relay"
+        pool = EnginePool(journal_dir=str(jdir), tier="relay")
+        disp = transport.WireDispatcher(pool)
+        fwd = _relay(pool, root_disp, "r0", jdir / "relay_state")
+
+        rows = [_int_rows(rng) for _ in range(5)]
+        for c, (A, b) in enumerate(rows[:3]):
+            _upload_dense(transport.LoopbackChannel(disp), "t", A, b, f"c{c}")
+        assert fwd.forward_all() == 1          # epoch 0 shipped
+        for c, (A, b) in enumerate(rows[3:], 3):
+            _upload_dense(transport.LoopbackChannel(disp), "t", A, b, f"c{c}")
+        pool.snapshot()
+        # Crash without forwarding the tail; ship the directory.
+        if pool._journal is not None:
+            pool._journal.close()
+        pool._closed = True
+        pool.stop_flusher()
+        standby_dir = tmp_path / "standby"
+        shutil.copytree(jdir, standby_dir)
+
+        standby = EnginePool(journal_dir=str(standby_dir), tier="relay")
+        sfwd = _relay(standby, root_disp, "r0",
+                      standby_dir / "relay_state")
+        assert sfwd.resume() == 0              # no pending was in flight
+        assert sfwd.forward_all() == 1         # the un-forwarded remainder
+        assert sfwd._state("t").epoch == 2
+
+        A_all = jnp.concatenate([jnp.asarray(a) for a, _ in rows])
+        b_all = jnp.concatenate([jnp.asarray(b) for _, b in rows])
+        ref = np.asarray(jax.device_get(
+            fusion.solve_ridge(compute_stats(A_all, b_all), SIGMA)))
+        assert _w(root, "t").tobytes() == ref.tobytes()
+        assert root.ledger()["per_tenant"]["t"]["relay_frames"] == 2
+        sfwd.close(forward=False)
+        standby.close()
+
+
+# -- two-tier chaos acceptance -------------------------------------------------
+
+class TestTwoTierChaos:
+    def test_chaos_both_legs_bitwise_exact(self, tmp_path):
+        """The acceptance pin: 2 relays x 3 clients each, mixed
+        dense/sketched/rff tenants, seeded faults >=10% PER FAULT CLASS on
+        both the client->relay and relay->root legs (real TCP chaos
+        proxies). Retries + two tiers of dedup still land the root on the
+        bit-exact references, and the root's ledger records exactly one
+        upstream frame per relay per tenant — O(relays) ingress."""
+        rng = np.random.default_rng(7)
+        fm_sk = FeatureMap("sketch", seed=3, d_orig=D, m=4)
+        fm_rf = FeatureMap("rff", seed=5, d_orig=D, m=4, lengthscale=1.3)
+        cfg = chaos.ChaosConfig.uniform(0.15, delay_s=0.001)
+
+        root = EnginePool(tier="root")
+        rows = {"dense": [], "sk": [], "rf": []}
+        with transport.FrameServer(root) as root_srv, \
+                chaos.ChaosProxy(root_srv.host, root_srv.port,
+                                 chaos.ChaosSchedule(cfg, seed=100)) as up_px:
+            relays = []
+            for r in range(2):
+                pool = EnginePool(journal_dir=str(tmp_path / f"relay{r}"),
+                                  tier="relay")
+                srv = transport.FrameServer(pool)
+                srv.start()
+                px = chaos.ChaosProxy(srv.host, srv.port,
+                                      chaos.ChaosSchedule(cfg, seed=200 + r)
+                                      ).start()
+                fwd = RelayForwarder(
+                    pool,
+                    lambda: transport.TCPChannel(up_px.host, up_px.port,
+                                                 timeout_s=30),
+                    relay_id=f"r{r}",
+                    state_dir=tmp_path / f"relay{r}" / "relay_state",
+                    policy=ForwardPolicy(max_frames=None),
+                    retries=50, backoff_s=0.0, jitter=0.0,
+                    sleep=lambda s: None)
+                relays.append((pool, srv, px, fwd))
+
+            for r, (pool, srv, px, fwd) in enumerate(relays):
+                for c in range(3):
+                    A, b = _int_rows(rng)
+                    client = transport.ResilientClient(
+                        lambda: transport.TCPChannel(px.host, px.port,
+                                                     timeout_s=30),
+                        tenant="dense", retries=50, backoff_s=0.0,
+                        jitter=0.0, seed=10 * r + c, sleep=lambda s: None)
+                    client.upload_stats(
+                        compute_stats(jnp.asarray(A), jnp.asarray(b)),
+                        client_id=f"r{r}c{c}")
+                    client.close()
+                    rows["dense"].append((A, b))
+                    for tenant, fm in (("sk", fm_sk), ("rf", fm_rf)):
+                        fc = transport.ResilientClient(
+                            lambda: transport.TCPChannel(px.host, px.port,
+                                                         timeout_s=30),
+                            tenant=tenant, retries=50, backoff_s=0.0,
+                            jitter=0.0, seed=77 + 10 * r + c,
+                            sleep=lambda s: None)
+                        packed = PackedStats.pack(
+                            fm.stats(jnp.asarray(A), jnp.asarray(b),
+                                     use_pallas=False))
+                        if fm.kind == "sketch":
+                            fc.upload_projected(
+                                packed, d_orig=D, seed=fm.seed,
+                                rhash=fm.fhash, client_id=f"r{r}c{c}")
+                        else:
+                            fc.upload_rff(
+                                packed, d_orig=D, seed=fm.seed,
+                                fhash=fm.fhash, lengthscale=fm.lengthscale,
+                                client_id=f"r{r}c{c}")
+                        fc.close()
+                        rows[tenant].append((A, b))
+
+            for pool, srv, px, fwd in relays:
+                assert fwd.forward_all() == 3
+                fwd.close(forward=False)
+                px.stop()
+                srv.stop()
+                pool.close()
+
+        # Dense: order-free integer reference.
+        A_all = jnp.concatenate([jnp.asarray(a) for a, _ in rows["dense"]])
+        b_all = jnp.concatenate([jnp.asarray(b) for _, b in rows["dense"]])
+        ref = np.asarray(jax.device_get(
+            fusion.solve_ridge(compute_stats(A_all, b_all), SIGMA)))
+        assert _w(root, "dense").tobytes() == ref.tobytes()
+        # Feature tenants: the tree's association.
+        for name, fm in (("sk", fm_sk), ("rf", fm_rf)):
+            per_relay = [
+                _fold([fm.stats(jnp.asarray(A), jnp.asarray(b),
+                                use_pallas=False)
+                       for A, b in rows[name][3 * r:3 * r + 3]])
+                for r in range(2)]
+            refw = np.asarray(jax.device_get(
+                fusion.solve_ridge(_fold(per_relay), SIGMA)))
+            assert _w_native(root, name).tobytes() == refw.tobytes(), name
+
+        led = root.ledger()
+        assert led["by_tier"] == {"relay_frames": 6, "client_frames": 0}
+        for t in ("dense", "sk", "rf"):
+            assert led["per_tenant"][t]["relay_frames"] == 2   # == num relays
+        root.close()
+
+
+# -- subprocess acceptance: SIGKILL the relay, restart, zero re-uploads -------
+
+def _spawn_serve(*args):
+    proc = subprocess.Popen(
+        [sys.executable, str(SERVE_CLI), *map(str, args)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        env=_env(), cwd=str(REPO))
+    port, head = None, []
+    for _ in range(200):
+        line = proc.stdout.readline()
+        if not line:
+            break
+        head.append(line)
+        m = re.search(r"listening on 127\.0\.0\.1:(\d+)", line)
+        if m:
+            port = int(m.group(1))
+            break
+    assert port is not None, proc.stderr.read() if proc.poll() else "no port"
+    return proc, port, "".join(head)
+
+
+def _serve_report(proc, timeout=180):
+    out, err = proc.communicate(timeout=timeout)
+    assert proc.returncode == 0, err
+    m = re.search(r"\[serve_wire\] report (.*)", out)
+    assert m, out + err
+    return json.loads(m.group(1)), out
+
+
+@pytest.mark.slow
+class TestServeRelaySubprocess:
+    def test_sigkill_relay_restart_flush_bit_identical(self, tmp_path):
+        """serve.py --mode relay, killed AFTER acking its clients but
+        BEFORE any forward: a restart on the same --journal-dir replays
+        the WAL and its shutdown flush ships one fused frame per tenant
+        upstream. The root's served weights equal the uncrashed in-process
+        reference bit-for-bit, its ledger shows only relay-tier frames,
+        and no client ever re-uploaded a byte."""
+        rng = np.random.default_rng(8)
+        rows = [_int_rows(rng) for _ in range(3)]
+
+        root_proc, root_port, _ = _spawn_serve(
+            "--mode", "fusion", "--listen", "0", "--serve-timeout", "120",
+            "--sigma", SIGMA)
+        relay_jdir = tmp_path / "relay_journal"
+        relay_proc = relay_port = None
+        try:
+            relay_proc, relay_port, _ = _spawn_serve(
+                "--mode", "relay", "--upstream", f"127.0.0.1:{root_port}",
+                "--listen", "0", "--serve-timeout", "120",
+                "--journal-dir", relay_jdir,
+                "--forward-every", 999)        # no mid-run forwards
+            for c, (A, b) in enumerate(rows):
+                chan = transport.TCPChannel("127.0.0.1", relay_port,
+                                            timeout_s=60)
+                _upload_dense(chan, "t", A, b, f"c{c}")
+            relay_proc.kill()                  # SIGKILL: no flush, no ACKs
+            relay_proc.communicate(timeout=30)
+
+            # Restart on the same journal dir; a short serve-timeout makes
+            # it flush upstream and exit with no client contact at all.
+            relay2, _, head = _spawn_serve(
+                "--mode", "relay", "--upstream", f"127.0.0.1:{root_port}",
+                "--listen", "0", "--serve-timeout", "1",
+                "--journal-dir", relay_jdir)
+            relay_report, _ = _serve_report(relay2)
+            assert "recovered" in head
+            assert relay_report["relay"]["forwards"] == 1
+            assert relay_report["connections_total"] == 0   # zero re-uploads
+            assert relay_report["ledger"]["tier"] == "relay"
+
+            root_proc.send_signal(signal.SIGTERM)
+            root_report, _ = _serve_report(root_proc)
+        finally:
+            for p in (root_proc, relay_proc):
+                if p is not None and p.poll() is None:  # pragma: no cover
+                    p.kill()
+                    p.communicate(timeout=30)
+
+        A_all = jnp.concatenate([jnp.asarray(a) for a, _ in rows])
+        b_all = jnp.concatenate([jnp.asarray(b) for _, b in rows])
+        ref = np.asarray(jax.device_get(fusion.solve_ridge(
+            compute_stats(A_all, b_all), SIGMA)), np.float64).tolist()
+        assert root_report["weights"]["t"] == ref      # bit-identical floats
+        assert root_report["ledger"]["by_tier"] == {"relay_frames": 1,
+                                                    "client_frames": 0}

@@ -1,0 +1,303 @@
+"""Streaming multi-frame uploads: the continuation-chunk codec + transport.
+
+PR pin: large uploads (a triangular payload too big for one wire frame)
+stream as continuation chunks — ``FLAG_CONTINUED`` in the previously-always-
+zero flags byte — and reassemble to the CANONICAL single-frame encoding, so
+everything downstream of admission (dedup key, journal record, golden
+fixtures) is invariant to how the bytes were transported. Layers:
+
+  * Codec — ``split_frame``/``join_chunks`` round-trip byte-identically,
+    small frames pass through untouched (``[raw]``), non-chunkable types
+    reject, ``decode_frame`` routes chunks to reassembly via the typed
+    :class:`~repro.fed.wire.ContinuationChunk`.
+  * Transport — a chunk-configured client admits through the dispatcher's
+    reassembly buffer; the dedup key is chunking-invariant (chunked and
+    unchunked sends of the same frame are duplicates of each other);
+    budget overruns, mid-sequence type changes, and damaged chunks are
+    typed rejections that reset the buffer; a fresh connection always
+    starts with an empty buffer.
+  * ``upload_raw`` — pre-encoded bytes ship exactly as given (the relay's
+    re-send path): no re-encode, chunked or not, ACKed and deduped like
+    any upload.
+"""
+import numpy as np
+import pytest
+
+from repro.core.sufficient_stats import compute_stats
+from repro.fed import transport, wire
+from repro.server import EnginePool
+
+SIGMA = 0.1
+
+
+def _int_rows(rng, n=8, d=6):
+    A = rng.integers(-3, 4, (n, d)).astype(np.float32)
+    b = rng.integers(-3, 4, (n,)).astype(np.float32)
+    return A, b
+
+
+def _stats_raw(rng, client_id="c0", d=6):
+    frame = wire.StatsFrame.from_stats(compute_stats(*_int_rows(rng, d=d)),
+                                       client_id=client_id)
+    return wire.encode_frame(frame, dtype="f32")
+
+
+# -- codec ---------------------------------------------------------------------
+
+class TestChunkCodec:
+    @pytest.mark.parametrize("cap", [1, 7, 64, 200])
+    def test_split_join_byte_identical(self, cap):
+        raw = _stats_raw(np.random.default_rng(0), d=10)
+        chunks = wire.split_frame(raw, max_chunk_payload=cap)
+        assert len(chunks) > 1
+        # Every chunk is a complete CRC'd frame of the same type; all but
+        # the last carry FLAG_CONTINUED, the last carries flags 0.
+        parts = []
+        for i, c in enumerate(chunks):
+            ftype, dtag, flags, payload = wire.chunk_parts(c)
+            assert ftype == wire.FT_STATS
+            assert len(payload) <= cap
+            assert flags == (wire.FLAG_CONTINUED
+                             if i < len(chunks) - 1 else 0)
+            parts.append(payload)
+        assert wire.join_chunks(wire.FT_STATS, dtag, parts) == raw
+
+    def test_small_frame_passes_through_unchanged(self):
+        """The common case stays byte-identical — this is what keeps every
+        pre-existing golden fixture valid under a chunk-configured client."""
+        raw = _stats_raw(np.random.default_rng(1))
+        assert wire.split_frame(raw, max_chunk_payload=1 << 20) == [raw]
+
+    def test_intermediate_chunk_decode_is_typed(self):
+        raw = _stats_raw(np.random.default_rng(2), d=10)
+        first = wire.split_frame(raw, max_chunk_payload=16)[0]
+        with pytest.raises(wire.ContinuationChunk):
+            wire.decode_frame(first)
+
+    def test_terminal_chunk_alone_is_garbage_not_a_crash(self):
+        """The last chunk carries flags 0 — standalone it is just a frame
+        whose payload is a partial slice; the decoder rejects it with a
+        typed error (CRC is fine, payload parse is not)."""
+        raw = _stats_raw(np.random.default_rng(3), d=10)
+        last = wire.split_frame(raw, max_chunk_payload=16)[-1]
+        with pytest.raises(wire.WireError):
+            wire.decode_frame(last)
+
+    def test_nonchunkable_type_rejected(self):
+        raw = wire.encode_frame(wire.SolveFrame(sigma=0.5))
+        with pytest.raises(wire.BadFrameType):
+            wire.split_frame(raw, max_chunk_payload=1)
+
+    def test_already_flagged_frame_rejected(self):
+        raw = _stats_raw(np.random.default_rng(4), d=10)
+        chunk = wire.split_frame(raw, max_chunk_payload=16)[0]
+        with pytest.raises(wire.PayloadError):
+            wire.split_frame(chunk, max_chunk_payload=8)
+
+    def test_bad_cap_rejected(self):
+        raw = _stats_raw(np.random.default_rng(5))
+        with pytest.raises(wire.BadLength):
+            wire.split_frame(raw, max_chunk_payload=0)
+
+    def test_join_overflow_rejected(self):
+        with pytest.raises(wire.BadLength):
+            wire.join_chunks(wire.FT_STATS, 0,
+                             [b"\x00" * (wire.MAX_REASSEMBLED_BYTES // 4 + 1)
+                              ] * 5)
+
+    def test_chunk_crc_guards_transit_damage(self):
+        raw = _stats_raw(np.random.default_rng(6), d=10)
+        chunk = bytearray(wire.split_frame(raw, max_chunk_payload=16)[0])
+        chunk[wire.HEADER_BYTES + 2] ^= 0x40
+        with pytest.raises(wire.WireError):
+            wire.chunk_parts(bytes(chunk))
+
+
+# -- transport reassembly ------------------------------------------------------
+
+def _loop_client(disp, tenant, **kw):
+    cl = transport.FrameClient(transport.LoopbackChannel(disp), **kw)
+    cl.hello(tenant)
+    return cl
+
+
+class TestTransportReassembly:
+    def test_chunked_upload_admits_and_dedups_with_unchunked(self):
+        """The invariance pin: a chunked upload fuses once, and the SAME
+        frame sent unchunked afterwards is a duplicate (and vice versa) —
+        the dedup key is computed on the reassembled canonical bytes."""
+        rng = np.random.default_rng(0)
+        stats = compute_stats(*_int_rows(rng, d=8))
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            chunky = _loop_client(disp, "t", max_chunk_payload=16)
+            ack = chunky.upload_stats(stats, client_id="c0")
+            assert ack.ok and not ack.duplicate
+            assert disp.chunks_received > 1
+            assert disp.frames_reassembled == 1
+
+            plain = _loop_client(disp, "t")
+            ack2 = plain.upload_stats(stats, client_id="c0")
+            assert ack2.ok and ack2.duplicate
+            assert pool.tenant("t").wire_frames == 1
+
+            ref = EnginePool()
+            ref.create_tenant("t", {"c0": stats})
+            got = np.asarray(pool.solve_lifted("t", SIGMA))
+            want = np.asarray(ref.solve_lifted("t", SIGMA))
+            assert got.tobytes() == want.tobytes()
+
+    def test_budget_overrun_is_terminal_rejection(self):
+        """The reassembly buffer is capped by the admission budget: the
+        overflowing chunk gets retryable=False (re-sending the same giant
+        frame can never succeed) and the buffer resets."""
+        rng = np.random.default_rng(1)
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool, max_reassembly_bytes=64)
+            chunky = _loop_client(disp, "t", max_chunk_payload=32)
+            with pytest.raises(transport.RejectedError) as ei:
+                chunky.upload_stats(compute_stats(*_int_rows(rng, d=12)),
+                                    client_id="big")
+            assert not ei.value.ack.retryable
+            assert "budget" in ei.value.ack.message
+            assert pool.tenant_names == ()      # nothing half-admitted
+
+    def test_mid_sequence_type_change_rejected(self):
+        rng = np.random.default_rng(2)
+        raw = _stats_raw(rng, d=10)
+        chunks = wire.split_frame(raw, max_chunk_payload=16)
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            chan = transport.LoopbackChannel(disp)
+            cl = transport.FrameClient(chan)
+            cl.hello("t")
+            assert wire.decode_frame(chan.request(chunks[0])).ok
+            # A DELTA chunk splices into a STATS reassembly: rejected, reset.
+            alien = wire.encode_frame(wire.DeltaRowsFrame(
+                A=np.ones((2, 3), np.float32),
+                b=np.ones((2,), np.float32), client_id="x"),
+                dtype="f32")
+            dchunk = wire.split_frame(alien, max_chunk_payload=8)[0]
+            ack = wire.decode_frame(chan.request(dchunk))
+            assert not ack.ok and ack.retryable
+            assert "sequence violation" in ack.message
+            # The buffer is clean: a full fresh sequence admits.
+            for c in chunks[:-1]:
+                assert wire.decode_frame(chan.request(c)).ok
+            final = wire.decode_frame(chan.request(chunks[-1]))
+            assert final.ok and pool.tenant("t").wire_frames == 1
+
+    def test_damaged_chunk_resets_buffer(self):
+        rng = np.random.default_rng(3)
+        raw = _stats_raw(rng, d=10)
+        chunks = wire.split_frame(raw, max_chunk_payload=16)
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            chan = transport.LoopbackChannel(disp)
+            cl = transport.FrameClient(chan)
+            cl.hello("t")
+            assert wire.decode_frame(chan.request(chunks[0])).ok
+            bad = bytearray(chunks[1])
+            bad[-1] ^= 0xFF                     # CRC trailer flip
+            ack = wire.decode_frame(chan.request(bytes(bad)))
+            assert not ack.ok and ack.retryable
+            # Retry from the top on the same connection: clean admission.
+            for c in chunks[:-1]:
+                assert wire.decode_frame(chan.request(c)).ok
+            assert wire.decode_frame(chan.request(chunks[-1])).ok
+            assert pool.tenant("t").wire_frames == 1
+
+    def test_reconnect_starts_with_empty_buffer(self):
+        """A half-sent sequence dies with its connection — the resilient
+        client's re-send from the top can never splice onto stale chunks."""
+        rng = np.random.default_rng(4)
+        raw = _stats_raw(rng, d=10)
+        chunks = wire.split_frame(raw, max_chunk_payload=16)
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            chan1 = transport.LoopbackChannel(disp)
+            cl1 = transport.FrameClient(chan1)
+            cl1.hello("t")
+            for c in chunks[:2]:
+                assert wire.decode_frame(chan1.request(c)).ok
+            cl1.close()                         # dies mid-sequence
+
+            chan2 = transport.LoopbackChannel(disp)
+            cl2 = transport.FrameClient(chan2)
+            cl2.hello("t")
+            for c in chunks[:-1]:
+                assert wire.decode_frame(chan2.request(c)).ok
+            assert wire.decode_frame(chan2.request(chunks[-1])).ok
+            assert pool.tenant("t").wire_frames == 1
+
+
+class TestUploadRaw:
+    def test_ships_exact_bytes_and_dedups(self):
+        """The relay forward path: pre-encoded bytes go out as-is (no
+        dtype re-encode), and a byte-identical re-send is duplicate=True."""
+        rng = np.random.default_rng(5)
+        raw = _stats_raw(rng, client_id="r:0")
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            cl = _loop_client(disp, "t")
+            ack = cl.upload_raw(raw)
+            assert ack.ok and not ack.duplicate
+            ack2 = cl.upload_raw(raw)
+            assert ack2.ok and ack2.duplicate
+            assert pool.tenant("t").wire_frames == 1
+            assert pool.tenant("t").duplicates == 1
+
+    def test_chunked_upload_raw_same_dedup_key(self):
+        rng = np.random.default_rng(6)
+        raw = _stats_raw(rng, d=10)
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            chunky = _loop_client(disp, "t", max_chunk_payload=16)
+            assert chunky.upload_raw(raw).ok
+            plain = _loop_client(disp, "t")
+            assert plain.upload_raw(raw).duplicate
+            assert pool.tenant("t").wire_frames == 1
+
+    def test_resilient_upload_raw_retries_through_lost_ack(self):
+        """ResilientClient.upload_raw after a lost ACK: the blind re-send
+        is byte-identical by construction, so dedup absorbs it."""
+        rng = np.random.default_rng(7)
+        raw = _stats_raw(rng)
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            state = {"eaten": False}
+
+            class AckEater:
+                def __init__(self):
+                    self.inner = transport.LoopbackChannel(disp)
+
+                def request(self, data):
+                    out = self.inner.request(data)
+                    try:
+                        is_stats = isinstance(wire.decode_frame(data),
+                                              wire.StatsFrame)
+                    except wire.WireError:
+                        is_stats = False
+                    if is_stats and not state["eaten"]:
+                        state["eaten"] = True   # applied; ACK lost in flight
+                        raise ConnectionError("ack eaten")
+                    return out
+
+                @property
+                def bytes_sent(self):
+                    return self.inner.bytes_sent
+
+                @property
+                def bytes_received(self):
+                    return self.inner.bytes_received
+
+                def close(self):
+                    pass
+
+            client = transport.ResilientClient(
+                AckEater, tenant="t", retries=3, backoff_s=0.0, jitter=0.0)
+            ack = client.upload_raw(raw)
+            assert ack.ok and ack.duplicate
+            assert client.duplicate_acks == 1
+            assert pool.tenant("t").wire_frames == 1
+            client.close()
