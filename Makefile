@@ -16,8 +16,10 @@ PY ?= python
 # smoke (WAL crash-recovery replay rate + bit-identical restore, snapshot-
 # bounded replay, seeded-fault federation exactness), and the relay smoke
 # (two-tier root ingress O(relays) with bit-identical weights + the
-# forwarded-bytes ledger cross-check) so experiments/repro/ tracks
-# serving, write-path, wire, durability, and topology perf per PR.
+# forwarded-bytes ledger cross-check), and the inference smoke (stderr/CI/PI
+# byte-identical to the cold closed form off the cached factor, zero extra
+# factorizations, held-out PI coverage) so experiments/repro/ tracks
+# serving, write-path, wire, durability, topology, and inference perf per PR.
 .PHONY: tier1
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -30,6 +32,7 @@ tier1:
 	PYTHONPATH=src $(PY) benchmarks/sketch_bench.py --smoke
 	PYTHONPATH=src $(PY) benchmarks/chaos_bench.py --smoke
 	PYTHONPATH=src $(PY) benchmarks/relay_bench.py --smoke
+	$(MAKE) inference-smoke
 
 # Standalone wire gate: the codec suite (golden frames, roundtrip fuzz,
 # mutation fuzz) plus the out-of-process federation e2e (loopback, TCP,
@@ -106,6 +109,15 @@ relay-smoke:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_relay.py \
 		tests/test_wire_chunks.py tests/test_commit_ordering.py
 	PYTHONPATH=src $(PY) benchmarks/relay_bench.py --smoke
+
+# Standalone federated-inference gate: the inference suite (kernel algebra
+# vs a float64 closed form, served stderr/CI/PI bit-identity off the cached
+# factor, legacy/DP/drop-restore degraded modes, two-tier relay interval
+# bit-identity) plus the inference bench smoke (coverage + latency rails).
+.PHONY: inference-smoke
+inference-smoke:
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_inference.py
+	PYTHONPATH=src $(PY) benchmarks/inference_bench.py --smoke
 
 .PHONY: test
 test:

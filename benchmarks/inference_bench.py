@@ -1,0 +1,190 @@
+"""Federated-inference benchmark: intervals off the cached factor, exactly.
+
+Measures the ``server.inference`` path (sigma2 / stderr / CI / PI from the
+fused ``yty`` second moment) against the cold centralized closed form:
+
+  * **bit-identity** — a dense loopback federation's ``solve_report``
+    stderr/CI/PI must be BYTE-identical to ``reference_inference`` applied
+    to the same fused statistic, and serving them must not touch the
+    engine's cold-factorization counter (the whole point: inference rides
+    the cached Cholesky via triangular solves).
+  * **statistical sanity** — on synthetic y = Xw* + eps with known noise,
+    sigma2_hat recovers the noise variance and held-out prediction
+    intervals cover near their nominal level. These gate loosely (they are
+    sanity rails, not the exactness claim).
+  * **latency** — warm inference latency next to the warm solve latency
+    it rides on, per shape, into the CSV.
+
+Usage: PYTHONPATH=src python benchmarks/inference_bench.py [--smoke]
+Emits a CSV + BENCH JSON under experiments/repro/ and prints a BENCH line.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/inference_bench.py`
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import common
+
+SIGMA = 0.5
+LEVEL = 0.95
+NOISE = 0.3     # ground-truth eps std for the sanity rails
+
+
+def _federation(rng, clients: int, n_per: int, d: int):
+    """Client shards from one synthetic linear model; returns the stats
+    dict plus held-out rows for the coverage rail."""
+    import jax.numpy as jnp
+
+    from repro.core.sufficient_stats import compute_stats
+
+    w_star = rng.standard_normal(d)
+    stats = {}
+    for c in range(clients):
+        A = rng.standard_normal((n_per, d))
+        b = A @ w_star + NOISE * rng.standard_normal(n_per)
+        stats[f"c{c}"] = compute_stats(
+            jnp.asarray(A, jnp.float32), jnp.asarray(b, jnp.float32))
+    Ah = rng.standard_normal((256, d))
+    bh = Ah @ w_star + NOISE * rng.standard_normal(256)
+    return stats, Ah.astype(np.float32), bh.astype(np.float32)
+
+
+def _measure(clients: int, n_per: int, d: int, reps: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.server import EnginePool
+    from repro.server.inference import reference_inference
+
+    rng = np.random.default_rng(d * 1000 + clients)
+    stats, Ah, bh = _federation(rng, clients, n_per, d)
+    queries = jnp.asarray(Ah[:32])
+
+    with EnginePool() as pool:
+        pool.create_tenant("t", stats)
+        eng = pool.get("t")
+
+        t0 = time.perf_counter()
+        rep = pool.solve_report("t", SIGMA, level=LEVEL, queries=Ah[:32])
+        first_s = time.perf_counter() - t0
+        cold0 = eng.cold_factorizations
+
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            w = pool.solve("t", SIGMA)
+        jax.block_until_ready(w)
+        solve_s = (time.perf_counter() - t0) / reps
+
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            inf = eng.inference(SIGMA, level=LEVEL, queries=queries)
+        jax.block_until_ready(inf["pi"])
+        infer_s = (time.perf_counter() - t0) / reps
+
+        ref_w, ref = reference_inference(eng.stats, SIGMA, level=LEVEL,
+                                         queries=queries)
+        bit_ok = (rep["stderr"].tobytes() == ref["stderr"].tobytes()
+                  and rep["ci"].tobytes() == ref["ci"].tobytes()
+                  and rep["pi"].tobytes() == ref["pi"].tobytes()
+                  and np.asarray(rep["weights"], np.float64).tobytes()
+                  == np.asarray(ref_w, np.float64).tobytes())
+        factor_ok = eng.cold_factorizations == cold0
+
+        # Held-out PI coverage at the federation's own fitted intervals.
+        _, full = reference_inference(eng.stats, SIGMA, level=LEVEL,
+                                      queries=jnp.asarray(Ah))
+        pi = np.asarray(full["pi"], np.float64)
+        coverage = float(np.mean((pi[:, 0] <= bh) & (bh <= pi[:, 1])))
+        sigma2 = float(rep["inference"]["sigma2"])
+
+    return {
+        "name": f"dense_c{clients}_n{n_per}_d{d}",
+        "clients": clients, "rows_total": clients * n_per, "dim": d,
+        "bit_identical": bit_ok, "factor_count_unchanged": factor_ok,
+        "sigma2": sigma2, "noise_var_true": NOISE ** 2,
+        "pi_coverage": coverage, "level": LEVEL,
+        "first_report_s": first_s, "solve_s": solve_s,
+        "inference_s": infer_s,
+    }
+
+
+def _measure_degraded(d: int) -> dict:
+    """Moments-less federation: point weights served, inference None."""
+    import jax.numpy as jnp
+
+    from repro.core.sufficient_stats import compute_stats
+    from repro.server import EnginePool
+
+    rng = np.random.default_rng(7)
+    A = rng.standard_normal((32, d)).astype(np.float32)
+    b = rng.standard_normal(32).astype(np.float32)
+    legacy = compute_stats(jnp.asarray(A), jnp.asarray(b)).without_moments()
+    with EnginePool() as pool:
+        pool.create_tenant("t", {"c0": legacy})
+        rep = pool.solve_report("t", SIGMA)
+        return {"weights_served": rep["weights"] is not None,
+                "inference_none": rep["stderr"] is None
+                and rep["ci"] is None and rep["pi"] is None
+                and "inference" not in rep}
+
+
+def run(smoke: bool = False) -> list[dict]:
+    claims = common.Claims("inference")
+    rows: list[dict] = []
+
+    grid = [(4, 64, 16)] if smoke else [(4, 64, 16), (8, 128, 32),
+                                        (16, 256, 64)]
+    reps = 3 if smoke else 10
+    for clients, n_per, d in grid:
+        m = _measure(clients, n_per, d, reps)
+        rows.append(m)
+        claims.check(
+            f"bit_matches_cold_reference_{m['name']}", m["bit_identical"],
+            "served stderr/CI/PI byte-identical to reference_inference on "
+            "the fused statistic")
+        claims.check(
+            f"cached_factor_only_{m['name']}", m["factor_count_unchanged"],
+            "inference added zero cold factorizations")
+        claims.check(
+            f"sigma2_recovers_noise_{m['name']}",
+            abs(m["sigma2"] - NOISE ** 2) / NOISE ** 2 < 0.25,
+            f"sigma2_hat={m['sigma2']:.4f} vs true {NOISE ** 2:.4f}")
+        claims.check(
+            f"pi_coverage_near_nominal_{m['name']}",
+            abs(m["pi_coverage"] - LEVEL) < 0.07,
+            f"held-out coverage {m['pi_coverage']:.3f} at level {LEVEL}")
+
+    deg = _measure_degraded(16)
+    claims.check("legacy_degrades_to_none",
+                 deg["weights_served"] and deg["inference_none"],
+                 "moments-less tenant: point weights only, inference None")
+
+    common.write_csv("inference_bench", rows)
+    common.write_json("inference_bench",
+                      {"smoke": smoke, "rows": rows, "claims": claims.rows()})
+    print("BENCH " + json.dumps({
+        r["name"]: {"inference_ms": round(r["inference_s"] * 1e3, 3),
+                    "solve_ms": round(r["solve_s"] * 1e3, 3),
+                    "coverage": r["pi_coverage"]}
+        for r in rows}))
+    return claims.rows()
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small shape / few reps for CI")
+    args = ap.parse_args()
+    failed = [c for c in run(smoke=args.smoke) if not c["pass"]]
+    sys.exit(1 if failed else 0)

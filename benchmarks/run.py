@@ -9,7 +9,9 @@ claim fails.
 ``--smoke`` runs the modules that support it (the engine/sharded/mutation
 benches) at reduced shapes/reps so experiments/repro/ tracks every
 measurement — sharded fusion and the ingest/mutation path included — per PR
-without the full-table cost.
+without the full-table cost. Either way the run ends by writing one
+consolidated ``experiments/repro/BENCH_summary.json`` (per-module timing +
+claim tallies + every claim row) on top of the per-module reports.
 """
 from __future__ import annotations
 
@@ -21,11 +23,11 @@ import time
 
 def main(smoke: bool = False) -> None:
     from benchmarks import (chaos_bench, extensions, fig_3,
-                            fusion_engine_bench, kernels_bench,
-                            mutation_bench, pool_bench, qps_bench,
-                            relay_bench, sharded_fusion_bench, sketch_bench,
-                            table_ii, table_iii, table_iv, table_v,
-                            table_vi, table_vii, wire_bench)
+                            fusion_engine_bench, inference_bench,
+                            kernels_bench, mutation_bench, pool_bench,
+                            qps_bench, relay_bench, sharded_fusion_bench,
+                            sketch_bench, table_ii, table_iii, table_iv,
+                            table_v, table_vi, table_vii, wire_bench)
 
     modules = [
         ("table_ii", table_ii), ("table_iii", table_iii),
@@ -41,19 +43,41 @@ def main(smoke: bool = False) -> None:
         ("sketch", sketch_bench),
         ("chaos", chaos_bench),
         ("relay", relay_bench),
+        ("inference", inference_bench),
     ]
     all_claims = []
+    per_module: dict[str, dict] = {}
     for name, mod in modules:
         kwargs = ({"smoke": True}
                   if smoke and "smoke" in inspect.signature(mod.run).parameters
                   else {})
         print(f"=== {name} ===", flush=True)
         t0 = time.time()
-        all_claims += mod.run(**kwargs)
-        print(f"=== {name} done in {time.time() - t0:.1f}s ===\n", flush=True)
+        claims = mod.run(**kwargs)
+        all_claims += claims
+        per_module[name] = {
+            "seconds": round(time.time() - t0, 2),
+            "claims_passed": sum(c["pass"] for c in claims),
+            "claims_failed": sum(not c["pass"] for c in claims),
+            "failed": [c["claim"] for c in claims if not c["pass"]],
+        }
+        print(f"=== {name} done in {per_module[name]['seconds']:.1f}s ===\n",
+              flush=True)
 
     failed = [c for c in all_claims if not c["pass"]]
-    print(f"CLAIMS: {len(all_claims) - len(failed)}/{len(all_claims)} passed")
+    # One consolidated roll-up next to the per-module JSONs: a single file
+    # CI (and `make tier1`) can point at for "did every claim pass, where
+    # did the time go" without re-parsing every bench's own report.
+    from benchmarks import common
+    path = common.write_json("BENCH_summary", {
+        "smoke": smoke,
+        "modules": per_module,
+        "claims_total": len(all_claims),
+        "claims_passed": len(all_claims) - len(failed),
+        "claims": all_claims,
+    })
+    print(f"CLAIMS: {len(all_claims) - len(failed)}/{len(all_claims)} passed "
+          f"(summary: {path})")
     for c in failed:
         print(f"  FAILED [{c['table']}] {c['claim']}: {c['detail']}")
     if failed:

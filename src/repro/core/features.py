@@ -109,6 +109,9 @@ class FeatureMap:
         kernel (kernels.ops.sketch_gram / rff_gram) — T never hits HBM;
         the default is the two-pass XLA reference path.
         """
+        # yty = Σ b² is featurization-invariant (targets never featurize):
+        # feature-space inference uses the same residual second moment.
+        yty = jnp.einsum("n,n->", b, b).astype(jnp.asarray(A).dtype)
         if use_pallas:
             from repro.kernels import ops
 
@@ -119,12 +122,16 @@ class FeatureMap:
                 W, c = self.materialize()
                 G, h = ops.rff_gram(A, b, W, c)
             return SuffStats(gram=G, moment=h,
-                             count=jnp.asarray(A.shape[0], jnp.int32))
+                             count=jnp.asarray(A.shape[0], jnp.int32),
+                             yty=yty.astype(G.dtype))
         if self.kind == "sketch":
             (R,) = self.materialize()
-            return projection.projected_stats(A, b, R)
-        W, c = self.materialize()
-        return rff.rff_stats(A, b, rff.RFFMap(W=W, c=c))
+            s = projection.projected_stats(A, b, R)
+        else:
+            W, c = self.materialize()
+            s = rff.rff_stats(A, b, rff.RFFMap(W=W, c=c))
+        return SuffStats(s.gram, s.moment, s.count,
+                         yty=yty.astype(s.gram.dtype))
 
     # -- serving -------------------------------------------------------------
 

@@ -75,6 +75,8 @@ def privatize_stats(
     E = jax.random.normal(kg, (d, d), stats.gram.dtype) * tau_g
     E = (E + E.T) / jnp.sqrt(2.0)  # symmetrize, preserving entrywise variance
     e = jax.random.normal(kh, (d,), stats.moment.dtype) * tau_h
+    # yty is deliberately dropped (None): an un-noised Σy² riding next to
+    # privatized (G, h) would leak; inference degrades on DP tenants.
     return SuffStats(stats.gram + E, stats.moment + e, stats.count)
 
 
@@ -122,7 +124,7 @@ def psd_repair(stats: SuffStats, floor: float = 0.0) -> SuffStats:
     evals, evecs = jnp.linalg.eigh(stats.gram)
     evals = jnp.maximum(evals, floor)
     G = (evecs * evals) @ evecs.T
-    return SuffStats(G, stats.moment, stats.count)
+    return SuffStats(G, stats.moment, stats.count, yty=stats.yty)
 
 
 # ---------------------------------------------------------------------------

@@ -41,15 +41,33 @@ class SuffStats:
       count:  number of rows n that went into the statistics. Carried so the
               server can report effective sample size under dropout (Thm 8)
               and so streaming updates (§VI-C) stay self-describing.
+      yty:    residual second moment Σ b_i² (scalar), or None when unknown.
+              With (G, h, n) it closes the inference algebra — RSS =
+              yty - 2 h^T w + w^T G w — so the server can serve standard
+              errors and intervals without ever seeing rows. ``None`` marks
+              statistics from a moments-less (legacy) source; combining a
+              None with anything degrades the result to None (the fused
+              RSS would be wrong by the unknown client's share), which is
+              exactly the backward-compatible behaviour: point estimates
+              are untouched, inference fields degrade.
     """
 
     gram: jax.Array
     moment: jax.Array
     count: jax.Array
+    yty: jax.Array | None = None
 
     @property
     def dim(self) -> int:
         return self.gram.shape[-1]
+
+    @staticmethod
+    def _combine_yty(a, b, op):
+        # Moments telescope exactly like (G, h) — but only when both sides
+        # carry them; a legacy (None) side degrades the combination.
+        if a is None or b is None:
+            return None
+        return op(a, b)
 
     def __add__(self, other: "SuffStats") -> "SuffStats":
         # Theorem 1: additivity over row partitions.
@@ -57,6 +75,7 @@ class SuffStats:
             gram=self.gram + other.gram,
             moment=self.moment + other.moment,
             count=self.count + other.count,
+            yty=self._combine_yty(self.yty, other.yty, lambda a, b: a + b),
         )
 
     def __sub__(self, other: "SuffStats") -> "SuffStats":
@@ -65,11 +84,17 @@ class SuffStats:
             gram=self.gram - other.gram,
             moment=self.moment - other.moment,
             count=self.count - other.count,
+            yty=self._combine_yty(self.yty, other.yty, lambda a, b: a - b),
         )
 
     def scale(self, s) -> "SuffStats":
         """Scale a client's contribution (0/1 masks give Thm 8 dropout)."""
-        return SuffStats(self.gram * s, self.moment * s, self.count * s)
+        return SuffStats(self.gram * s, self.moment * s, self.count * s,
+                         yty=None if self.yty is None else self.yty * s)
+
+    def without_moments(self) -> "SuffStats":
+        """The same statistics with the second moment dropped (yty=None)."""
+        return SuffStats(self.gram, self.moment, self.count, yty=None)
 
 
 def zeros_like_stats(d: int, dtype=jnp.float32) -> SuffStats:
@@ -77,6 +102,7 @@ def zeros_like_stats(d: int, dtype=jnp.float32) -> SuffStats:
         gram=jnp.zeros((d, d), dtype),
         moment=jnp.zeros((d,), dtype),
         count=jnp.zeros((), jnp.int32),
+        yty=jnp.zeros((), dtype),
     )
 
 
@@ -101,7 +127,11 @@ def compute_stats(A: jax.Array, b: jax.Array, *, use_pallas: bool = False) -> Su
         acc = jnp.float32 if A.dtype in (jnp.bfloat16, jnp.float16) else A.dtype
         gram = jnp.einsum("ni,nj->ij", A, A, preferred_element_type=acc)
         moment = jnp.einsum("ni,n->i", A, b, preferred_element_type=acc)
-    return SuffStats(gram=gram, moment=moment, count=jnp.asarray(A.shape[0], jnp.int32))
+    acc = jnp.float32 if b.dtype in (jnp.bfloat16, jnp.float16) else b.dtype
+    yty = jnp.einsum("n,n->", b, b, preferred_element_type=acc)
+    yty = yty.astype(gram.dtype)
+    return SuffStats(gram=gram, moment=moment,
+                     count=jnp.asarray(A.shape[0], jnp.int32), yty=yty)
 
 
 @partial(jax.jit, static_argnames=("chunk",))
@@ -138,8 +168,10 @@ def compute_stats_streaming(A: jax.Array, b: jax.Array, *, chunk: int = 1024) ->
         a_t = jnp.pad(A[n_main:], ((0, chunk - tail), (0, 0)))
         b_t = jnp.pad(b[n_main:], (0, chunk - tail))
         out = out + compute_stats(a_t, b_t)
-    # chunk-sized steps over-count padded rows; fix the true count.
-    return SuffStats(out.gram, out.moment, jnp.asarray(n, jnp.int32))
+    # chunk-sized steps over-count padded rows; fix the true count (padded
+    # rows contribute exact zeros to G, h, AND yty).
+    return SuffStats(out.gram, out.moment, jnp.asarray(n, jnp.int32),
+                     yty=out.yty)
 
 
 def fuse_stats(stats: Sequence[SuffStats], *, chunk: int = 8) -> SuffStats:
@@ -154,6 +186,12 @@ def fuse_stats(stats: Sequence[SuffStats], *, chunk: int = 8) -> SuffStats:
     """
     if not stats:
         raise ValueError("need at least one client's statistics")
+    if any(s.yty is None for s in stats) and \
+            any(s.yty is not None for s in stats):
+        # Mixed moments-carrying and legacy stats: degrade the whole fusion
+        # to yty=None (matching __add__) so the tree structures are uniform
+        # for the stacked reduction below.
+        stats = [s if s.yty is None else s.without_moments() for s in stats]
     if len(stats) == 1:
         return stats[0]
     if len(stats) <= chunk:
@@ -206,6 +244,8 @@ def distributed_stats(
         s = compute_stats(a_k, b_k)
         idx = _flat_client_index(client_axes, mesh)
         if noise_fn is not None:
+            # DP noise covers (G, h) only; an un-noised Σy² riding along
+            # would leak, so the privatized statistics drop it (yty=None).
             g_t, h_t = noise_fn(idx, s.gram, s.moment)
             s = SuffStats(g_t, h_t, s.count)
         s = s.scale(part[idx])

@@ -43,23 +43,29 @@ class PackedStats:
     ``tri`` is the row-major lower triangle of the client Gram — d(d+1)/2
     floats instead of the d^2 a square upload would cost — and ``moment``
     the d-float moment vector; ``count`` rides along as metadata (one int,
-    not part of the Thm 4 float budget). ``pack``/``unpack`` are exact:
-    no arithmetic touches the kept entries.
+    not part of the Thm 4 float budget). ``yty`` (Σ b², one scalar) closes
+    the inference algebra server-side; ``None`` marks a moments-less legacy
+    payload (the fused inference fields then degrade, never the weights).
+    ``pack``/``unpack`` are exact: no arithmetic touches the kept entries.
     """
 
     tri: jax.Array       # (d(d+1)/2,)
     moment: jax.Array    # (d,)
     count: jax.Array
     dim: int
+    yty: jax.Array | None = None
 
     @classmethod
     def pack(cls, stats: SuffStats) -> "PackedStats":
         return cls(kernel_ops.pack_lower(stats.gram), stats.moment,
-                   stats.count, stats.dim)
+                   stats.count, stats.dim, yty=stats.yty)
 
     def unpack(self) -> SuffStats:
         return SuffStats(kernel_ops.unpack_lower(self.tri, self.dim),
-                         self.moment, self.count)
+                         self.moment, self.count,
+                         yty=None if self.yty is None
+                         else jnp.asarray(self.yty,
+                                          jnp.asarray(self.tri).dtype))
 
     @property
     def wire_floats(self) -> int:

@@ -597,34 +597,42 @@ class FrameClient:
         self.tenant, self.dtype = reply.tenant, chosen
         return chosen
 
-    def upload_stats(self, stats, client_id: str = "") -> wire.AckFrame:
-        """Thm-4 upload of one client's ``SuffStats`` (packed triangle)."""
-        frame = wire.StatsFrame.from_stats(stats, client_id=client_id)
+    def upload_stats(self, stats, client_id: str = "", *,
+                     moments: bool = False) -> wire.AckFrame:
+        """Thm-4 upload of one client's ``SuffStats`` (packed triangle).
+
+        ``moments=True`` appends the 8-byte MOMENTS section (yty = Σy²) so
+        the server can serve inference; the stats must carry ``yty``."""
+        frame = wire.StatsFrame.from_stats(stats, client_id=client_id,
+                                           moments=moments)
         return self._expect_ack(frame, upload=True)
 
-    def upload_packed(self, packed, client_id: str = "") -> wire.AckFrame:
+    def upload_packed(self, packed, client_id: str = "", *,
+                      moments: bool = False) -> wire.AckFrame:
         """Thm-4 upload of an already-packed ``fed.PackedStats``."""
-        frame = wire.StatsFrame.from_packed(packed, client_id=client_id)
+        frame = wire.StatsFrame.from_packed(packed, client_id=client_id,
+                                            moments=moments)
         return self._expect_ack(frame, upload=True)
 
     def upload_projected(self, packed, *, d_orig: int, seed: int, rhash: int,
-                         client_id: str = "") -> wire.AckFrame:
+                         client_id: str = "",
+                         yty: float | None = None) -> wire.AckFrame:
         """§IV-F upload: m-dim packed stats plus the sketch's identity."""
         frame = wire.ProjectedFrame(
             tri=np.asarray(packed.tri), moment=np.asarray(packed.moment),
             count=int(packed.count), dim=int(packed.dim), d_orig=d_orig,
-            seed=seed, rhash=rhash, client_id=client_id)
+            seed=seed, rhash=rhash, client_id=client_id, yty=yty)
         return self._expect_ack(frame, upload=True)
 
     def upload_rff(self, packed, *, d_orig: int, seed: int, fhash: int,
-                   lengthscale: float = 1.0,
-                   client_id: str = "") -> wire.AckFrame:
+                   lengthscale: float = 1.0, client_id: str = "",
+                   yty: float | None = None) -> wire.AckFrame:
         """§IV-F RFF upload: D-dim packed stats plus the map's identity."""
         frame = wire.RFFFrame(
             tri=np.asarray(packed.tri), moment=np.asarray(packed.moment),
             count=int(packed.count), dim=int(packed.dim), d_orig=d_orig,
             seed=seed, fhash=fhash, lengthscale=lengthscale,
-            client_id=client_id)
+            client_id=client_id, yty=yty)
         return self._expect_ack(frame, upload=True)
 
     def stream_rows(self, A, b, client_id: str = "") -> wire.AckFrame:
@@ -766,11 +774,15 @@ class ResilientClient:
     def hello(self) -> str:
         return self._call(lambda c: c.dtype)
 
-    def upload_stats(self, stats, client_id: str = "") -> wire.AckFrame:
-        return self._call(lambda c: c.upload_stats(stats, client_id))
+    def upload_stats(self, stats, client_id: str = "", *,
+                     moments: bool = False) -> wire.AckFrame:
+        return self._call(
+            lambda c: c.upload_stats(stats, client_id, moments=moments))
 
-    def upload_packed(self, packed, client_id: str = "") -> wire.AckFrame:
-        return self._call(lambda c: c.upload_packed(packed, client_id))
+    def upload_packed(self, packed, client_id: str = "", *,
+                      moments: bool = False) -> wire.AckFrame:
+        return self._call(
+            lambda c: c.upload_packed(packed, client_id, moments=moments))
 
     def upload_projected(self, packed, **kw) -> wire.AckFrame:
         return self._call(lambda c: c.upload_projected(packed, **kw))

@@ -39,6 +39,12 @@ frame                   type  paper surface
                               lengthscale, map-hash)
 ======================  ====  ==================================================
 
+STATS / PROJ / RFF payloads may carry an optional trailing MOMENTS section
+(one f64: yty = Σ b², the residual second moment that closes the federated
+inference algebra). Presence is inferred from payload length, never a flags
+bit, so pre-moments encodings are byte-identical and pre-moments decoders
+reject moments-bearing frames with a typed trailing-bytes error.
+
 Dtype negotiation: a client *offers* a set of scalar encodings (f32 / f64 /
 bf16) in its HELLO; the server picks one by policy (:func:`negotiate`) and
 every array field on that session is encoded with it. :func:`decode_frame`
@@ -234,7 +240,8 @@ class StatsFrame:
     """Thm-4 upload: the packed d(d+1)/2 Gram triangle + d-float moment.
 
     Payload: u32 d, u64 count, u16 id_len, client id utf-8,
-    tri (d(d+1)/2 scalars), moment (d scalars).
+    tri (d(d+1)/2 scalars), moment (d scalars)
+    [, MOMENTS section: f64 yty — see :func:`_maybe_yty`].
     """
 
     tri: np.ndarray
@@ -243,10 +250,18 @@ class StatsFrame:
     dim: int
     client_id: str = ""
     wire_dtype: str = "f32"
+    yty: float | None = None
 
     @classmethod
-    def from_packed(cls, packed, client_id: str = "") -> "StatsFrame":
-        """From a ``fed.PackedStats`` (or anything shaped like one)."""
+    def from_packed(cls, packed, client_id: str = "", *,
+                    moments: bool = False) -> "StatsFrame":
+        """From a ``fed.PackedStats`` (or anything shaped like one).
+
+        ``moments=True`` carries the payload's residual second moment (yty)
+        in the trailing MOMENTS section when it has one; the default keeps
+        the encoding byte-identical to the pre-moments protocol (an old
+        server rejects unknown trailing bytes with a typed error).
+        """
         tri = np.asarray(packed.tri)
         try:
             tri_d = tri_dim(tri.size)
@@ -259,14 +274,17 @@ class StatsFrame:
         return cls(tri=tri, moment=np.asarray(packed.moment),
                    count=int(packed.count), dim=int(packed.dim),
                    client_id=client_id, wire_dtype=dtype_name(tri.dtype)
-                   if tri.dtype in set(_WIRE_NP.values()) else "f32")
+                   if tri.dtype in set(_WIRE_NP.values()) else "f32",
+                   yty=_packed_yty(packed) if moments else None)
 
     @classmethod
-    def from_stats(cls, stats, client_id: str = "") -> "StatsFrame":
+    def from_stats(cls, stats, client_id: str = "", *,
+                   moments: bool = False) -> "StatsFrame":
         """From a ``SuffStats`` via the shared triangular pack codec."""
         from repro.fed.protocol import PackedStats
 
-        return cls.from_packed(PackedStats.pack(stats), client_id=client_id)
+        return cls.from_packed(PackedStats.pack(stats), client_id=client_id,
+                               moments=moments)
 
     def to_packed(self):
         """Back into the in-process Thm-4 container (``fed.PackedStats``)."""
@@ -277,7 +295,9 @@ class StatsFrame:
         return PackedStats(tri=jnp.asarray(self.tri),
                            moment=jnp.asarray(self.moment),
                            count=jnp.asarray(self.count, jnp.int32),
-                           dim=self.dim)
+                           dim=self.dim,
+                           yty=None if self.yty is None
+                           else jnp.asarray(self.yty, self.tri.dtype))
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -285,12 +305,15 @@ class ProjectedFrame:
     """§IV-F sketched upload: m-dim stats plus the sketch's identity.
 
     Payload: u32 m, u32 d_orig, u64 seed, u64 rhash, u64 count,
-    u16 id_len, client id utf-8, tri (m(m+1)/2 scalars), moment (m scalars).
+    u16 id_len, client id utf-8, tri (m(m+1)/2 scalars), moment (m scalars)
+    [, MOMENTS section: f64 yty — see :func:`_maybe_yty`].
 
     ``seed`` regenerates the shared R on the server (seed sharing is the
     paper's O(1) alternative to shipping R); ``rhash`` fingerprints the
     actual R bytes so two clients that *think* they share a sketch but do
     not (version skew, wrong seed) are rejected instead of silently fused.
+    ``yty`` = Σ b² is featurization-invariant (targets never featurize), so
+    sketched tenants serve the same inference algebra as dense ones.
     """
 
     tri: np.ndarray
@@ -302,6 +325,7 @@ class ProjectedFrame:
     rhash: int
     client_id: str = ""
     wire_dtype: str = "f32"
+    yty: float | None = None
 
     def to_packed(self):
         import jax.numpy as jnp
@@ -311,7 +335,9 @@ class ProjectedFrame:
         return PackedStats(tri=jnp.asarray(self.tri),
                            moment=jnp.asarray(self.moment),
                            count=jnp.asarray(self.count, jnp.int32),
-                           dim=self.dim)
+                           dim=self.dim,
+                           yty=None if self.yty is None
+                           else jnp.asarray(self.yty, self.tri.dtype))
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -320,7 +346,7 @@ class RFFFrame:
 
     Payload: u32 D, u32 d_orig, u64 seed, u64 fhash, f64 lengthscale,
     u64 count, u16 id_len, client id utf-8, tri (D(D+1)/2 scalars),
-    moment (D scalars).
+    moment (D scalars) [, MOMENTS section: f64 yty — see :func:`_maybe_yty`].
 
     The random-feature sibling of :class:`ProjectedFrame`: ``seed`` and
     ``lengthscale`` regenerate the shared (W, c) on the server, ``fhash``
@@ -340,6 +366,7 @@ class RFFFrame:
     lengthscale: float = 1.0
     client_id: str = ""
     wire_dtype: str = "f32"
+    yty: float | None = None
 
     def to_packed(self):
         import jax.numpy as jnp
@@ -349,7 +376,9 @@ class RFFFrame:
         return PackedStats(tri=jnp.asarray(self.tri),
                            moment=jnp.asarray(self.moment),
                            count=jnp.asarray(self.count, jnp.int32),
-                           dim=self.dim)
+                           dim=self.dim,
+                           yty=None if self.yty is None
+                           else jnp.asarray(self.yty, self.tri.dtype))
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -466,6 +495,24 @@ def _enc_array(x, name: str, *, expect: int) -> bytes:
     return arr.tobytes()
 
 
+def _packed_yty(packed) -> float | None:
+    """The residual second moment a ``PackedStats``-shaped payload carries."""
+    yty = getattr(packed, "yty", None)
+    return None if yty is None else float(np.asarray(yty))
+
+
+def _moments_section(yty: float) -> bytes:
+    """Encode the optional trailing MOMENTS section: one f64 yty scalar.
+
+    Always f64 regardless of the session's array dtype — one scalar costs
+    nothing, and the widest encoding round-trips every container exactly.
+    """
+    v = float(yty)
+    if not np.isfinite(v):
+        raise PayloadError(f"yty must be finite, got {v}")
+    return struct.pack("<d", v)
+
+
 def encode_frame(frame: Frame, *, dtype: str | None = None) -> bytes:
     """Serialize one frame. ``dtype`` overrides the scalar encoding of array
     fields (the negotiated session dtype); scalars are cast exactly once here.
@@ -486,6 +533,8 @@ def encode_frame(frame: Frame, *, dtype: str | None = None) -> bytes:
                    + _enc_str(frame.client_id)
                    + _enc_array(frame.tri, name, expect=tri_len(d))
                    + _enc_array(frame.moment, name, expect=d))
+        if frame.yty is not None:
+            payload += _moments_section(frame.yty)
     elif isinstance(frame, ProjectedFrame):
         m = frame.dim
         if not 0 < m <= frame.d_orig:
@@ -497,6 +546,8 @@ def encode_frame(frame: Frame, *, dtype: str | None = None) -> bytes:
                    + _enc_str(frame.client_id)
                    + _enc_array(frame.tri, name, expect=tri_len(m))
                    + _enc_array(frame.moment, name, expect=m))
+        if frame.yty is not None:
+            payload += _moments_section(frame.yty)
     elif isinstance(frame, RFFFrame):
         D = frame.dim
         if D <= 0 or frame.d_orig <= 0:
@@ -512,6 +563,8 @@ def encode_frame(frame: Frame, *, dtype: str | None = None) -> bytes:
                    + _enc_str(frame.client_id)
                    + _enc_array(frame.tri, name, expect=tri_len(D))
                    + _enc_array(frame.moment, name, expect=D))
+        if frame.yty is not None:
+            payload += _moments_section(frame.yty)
     elif isinstance(frame, DeltaRowsFrame):
         A = np.asarray(frame.A)
         if A.ndim != 2:
@@ -589,6 +642,25 @@ class _Cursor:
         if self.off != len(self.buf):
             raise PayloadError(
                 f"{len(self.buf) - self.off} trailing payload bytes")
+
+
+def _maybe_yty(cur: _Cursor) -> float | None:
+    """Optional trailing MOMENTS section of an upload payload: one f64 yty.
+
+    Presence is inferred from the payload length — zero bytes remaining
+    after the layout's arrays is a legacy (moments-less) payload, exactly 8
+    is the section; any other remainder falls through to ``done()``'s
+    trailing-bytes rejection. A length cue instead of a flags bit keeps
+    chunking's flags==0 invariant intact and every pre-moments encoding
+    byte-identical; a pre-moments decoder rejects moments-bearing frames
+    with the same typed trailing-bytes error, never a silent mis-decode.
+    """
+    if len(cur.buf) - cur.off != 8:
+        return None
+    (yty,) = cur.unpack("<d")
+    if not np.isfinite(yty):
+        raise PayloadError(f"yty must be finite, got {yty}")
+    return yty
 
 
 def _check_dim(d: int, what: str = "d") -> int:
@@ -696,7 +768,8 @@ def decode_frame(buf: bytes, *,
         cid = cur.string()
         frame = StatsFrame(tri=cur.array(name, tri_len(d)),
                            moment=cur.array(name, d), count=count, dim=d,
-                           client_id=cid, wire_dtype=name)
+                           client_id=cid, wire_dtype=name,
+                           yty=_maybe_yty(cur))
     elif ftype == FT_PROJ:
         m, d_orig, seed, rhash, count = cur.unpack("<IIQQQ")
         _check_dim(m, "m")
@@ -708,7 +781,8 @@ def decode_frame(buf: bytes, *,
         frame = ProjectedFrame(tri=cur.array(name, tri_len(m)),
                                moment=cur.array(name, m), count=count, dim=m,
                                d_orig=d_orig, seed=seed, rhash=rhash,
-                               client_id=cid, wire_dtype=name)
+                               client_id=cid, wire_dtype=name,
+                               yty=_maybe_yty(cur))
     elif ftype == FT_RFF:
         D, d_orig, seed, fhash, lengthscale, count = cur.unpack("<IIQQdQ")
         _check_dim(D, "D")
@@ -724,7 +798,7 @@ def decode_frame(buf: bytes, *,
                          moment=cur.array(name, D), count=count, dim=D,
                          d_orig=d_orig, seed=seed, fhash=fhash,
                          lengthscale=lengthscale, client_id=cid,
-                         wire_dtype=name)
+                         wire_dtype=name, yty=_maybe_yty(cur))
     elif ftype == FT_DELTA:
         n, d = cur.unpack("<II")
         if not 0 < n <= MAX_ROWS:
@@ -764,17 +838,23 @@ def decode_frame(buf: bytes, *,
 
 # -- analytic sizes (the ledger's measured-bytes column) ---------------------
 
-def stats_frame_nbytes(d: int, dtype: str = "f32", *, client_id: str = "") -> int:
+MOMENTS_SECTION_BYTES = 8    # the optional trailing f64 yty scalar
+
+
+def stats_frame_nbytes(d: int, dtype: str = "f32", *, client_id: str = "",
+                       moments: bool = False) -> int:
     """Exact encoded length of a Thm-4 STATS frame (header + payload + crc)."""
     meta = 4 + 8 + 2 + len(client_id.encode("utf-8"))
-    return OVERHEAD_BYTES + meta + (tri_len(d) + d) * wire_itemsize(dtype)
+    return (OVERHEAD_BYTES + meta + (tri_len(d) + d) * wire_itemsize(dtype)
+            + (MOMENTS_SECTION_BYTES if moments else 0))
 
 
 def projected_frame_nbytes(m: int, dtype: str = "f32", *,
-                           client_id: str = "") -> int:
+                           client_id: str = "", moments: bool = False) -> int:
     """Exact encoded length of a §IV-F PROJ frame."""
     meta = 4 + 4 + 8 + 8 + 8 + 2 + len(client_id.encode("utf-8"))
-    return OVERHEAD_BYTES + meta + (tri_len(m) + m) * wire_itemsize(dtype)
+    return (OVERHEAD_BYTES + meta + (tri_len(m) + m) * wire_itemsize(dtype)
+            + (MOMENTS_SECTION_BYTES if moments else 0))
 
 
 def delta_frame_nbytes(n: int, d: int, dtype: str = "f32", *,
@@ -784,10 +864,12 @@ def delta_frame_nbytes(n: int, d: int, dtype: str = "f32", *,
     return OVERHEAD_BYTES + meta + (n * d + n) * wire_itemsize(dtype)
 
 
-def rff_frame_nbytes(D: int, dtype: str = "f32", *, client_id: str = "") -> int:
+def rff_frame_nbytes(D: int, dtype: str = "f32", *, client_id: str = "",
+                     moments: bool = False) -> int:
     """Exact encoded length of a §IV-F RFF frame."""
     meta = 4 + 4 + 8 + 8 + 8 + 8 + 2 + len(client_id.encode("utf-8"))
-    return OVERHEAD_BYTES + meta + (tri_len(D) + D) * wire_itemsize(dtype)
+    return (OVERHEAD_BYTES + meta + (tri_len(D) + D) * wire_itemsize(dtype)
+            + (MOMENTS_SECTION_BYTES if moments else 0))
 
 
 def encoded_nbytes(payload, *, frame: str = "tri",

@@ -88,19 +88,25 @@ def run_client(args: argparse.Namespace) -> dict:
                             m=args.feature_dim, lengthscale=args.lengthscale)
             packed = PackedStats.pack(
                 fm.stats(A, b, use_pallas=not args.unfused_ingest))
+            # yty = sum b^2 is featurization-invariant (targets never pass
+            # through the map), so sketched/RFF tenants serve the same
+            # solve-space inference algebra as dense ones.
+            yty = (None if not args.moments or packed.yty is None
+                   else float(np.asarray(packed.yty)))
             if features == "sketch":
                 client.upload_projected(packed, d_orig=args.dim,
                                         seed=args.proj_seed, rhash=fm.fhash,
-                                        client_id=args.client_id)
+                                        client_id=args.client_id, yty=yty)
             else:
                 client.upload_rff(packed, d_orig=args.dim,
                                   seed=args.proj_seed, fhash=fm.fhash,
                                   lengthscale=args.lengthscale,
-                                  client_id=args.client_id)
+                                  client_id=args.client_id, yty=yty)
             report["uploaded"] = {
                 "frame": "proj" if features == "sketch" else "rff",
                 "m": args.feature_dim, "proj_seed": args.proj_seed,
-                "fused_ingest": not args.unfused_ingest}
+                "fused_ingest": not args.unfused_ingest,
+                "moments": yty is not None}
         elif args.delta_batches:
             # §VI-C: the same rows, shipped as raw delta batches instead of
             # one packed statistic (Thm 1 makes the union identical).
@@ -114,9 +120,11 @@ def run_client(args: argparse.Namespace) -> dict:
                                   "batches": args.delta_batches, "rows": n}
         else:
             client.upload_stats(compute_stats(A, b),
-                                client_id=args.client_id)
+                                client_id=args.client_id,
+                                moments=args.moments)
             report["uploaded"] = {"frame": "tri", "d": args.dim,
-                                  "count": int(A.shape[0])}
+                                  "count": int(A.shape[0]),
+                                  "moments": args.moments}
 
         if args.control:
             op, _, target = args.control.partition(":")
@@ -189,6 +197,13 @@ def make_parser() -> argparse.ArgumentParser:
     ap.add_argument("--delta-batches", type=int, default=0, metavar="N",
                     help="ship the shard as N §VI-C delta-row frames instead "
                          "of one packed statistic")
+    ap.add_argument("--moments", action="store_true",
+                    help="append the 8-byte MOMENTS wire section (yty = "
+                         "sum y^2) to the upload so the server can serve "
+                         "federated inference (stderr/CI/PI); legacy "
+                         "servers reject the extra section with a typed "
+                         "error, legacy co-tenants degrade inference to "
+                         "point-only")
     ap.add_argument("--control", default=None, metavar="OP[:CLIENT]",
                     help="after uploading, send a Thm-8 control frame: "
                          "'drop', 'restore', or 'drop:other_id'")

@@ -357,6 +357,7 @@ def serve_fusion(*, num_clients: int = 4, samples_per_client: int = 128,
 
 def serve_wire(*, port: int = 0, expect_uploads: int = 0,
                timeout_s: float = 30.0, sigma: float = 0.1,
+               inference: bool = False, ci_level: float = 0.95,
                placement: str = "dense", coalesce_rank: int = 32,
                flush_staleness_s: float = 0.05,
                max_warm: int | None = None,
@@ -497,11 +498,17 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
                 # solve_report rides solve_lifted == what SOLVE frames
                 # served: the report's weights and the clients' WEIGHTS
                 # downloads can never diverge. For §IV-F tenants it also
-                # carries the map dims, upload floats and Prop-3 bound.
-                rep = pool.solve_report(name, sigma)
+                # carries the map dims, upload floats and Prop-3 bound;
+                # for moments-carrying tenants stderr/ci (and the
+                # inference scalars) ride along — None for legacy tenants.
+                rep = pool.solve_report(name, sigma, level=ci_level)
                 w = rep.pop("weights")
                 solves[name] = np.asarray(jax.device_get(w),
                                           np.float64).tolist()
+                for key in ("stderr", "ci", "pi"):
+                    if rep.get(key) is not None:
+                        rep[key] = np.asarray(rep[key],
+                                              np.float64).tolist()
                 tenant_reports[name] = rep
             ledger = pool.ledger()
             report = {
@@ -545,6 +552,17 @@ def serve_wire(*, port: int = 0, expect_uploads: int = 0,
     for name, w in solves.items():
         print(f"[serve_wire] tenant {name}: |w({sigma})| = "
               f"{float(np.linalg.norm(w)):.6f}")
+    if inference:
+        for name, rep in report["tenant_reports"].items():
+            inf = rep.get("inference")
+            if inf is None:
+                print(f"[serve_wire] tenant {name}: inference unavailable "
+                      f"(moments-less uploads — point weights only)")
+            else:
+                print(f"[serve_wire] tenant {name}: n={inf['n']} "
+                      f"dof={inf['dof']:.2f} sigma2={inf['sigma2']:.6g} "
+                      f"max stderr={max(rep['stderr']):.6g} "
+                      f"({int(round(inf['level'] * 100))}% CI served)")
     print(f"[serve_wire] report {json.dumps(report)}", flush=True)
     return report
 
@@ -608,6 +626,14 @@ def main() -> None:
     ap.add_argument("--sigma", type=float, default=0.1,
                     help="with --listen: sigma of the final per-tenant "
                          "report solve")
+    ap.add_argument("--inference", action="store_true",
+                    help="with --listen: print each tenant's federated "
+                         "inference summary (noise estimate, dof, stderr) "
+                         "next to the final solve; tenants whose uploads "
+                         "carried no MOMENTS section report 'unavailable'")
+    ap.add_argument("--ci-level", type=float, default=0.95,
+                    help="two-sided coverage of the served confidence/"
+                         "prediction intervals")
     ap.add_argument("--solve-window", type=float, default=None,
                     metavar="SECONDS",
                     help="with --listen: micro-batching window on the SOLVE "
@@ -689,6 +715,7 @@ def main() -> None:
         serve_wire(port=args.listen or 0,
                    expect_uploads=args.expect_uploads,
                    timeout_s=args.serve_timeout, sigma=args.sigma,
+                   inference=args.inference, ci_level=args.ci_level,
                    coalesce_rank=args.coalesce_rank,
                    flush_staleness_s=args.flush_staleness,
                    max_warm=args.max_warm,

@@ -442,25 +442,42 @@ def _untag_id(tagged):
     return str(val) if kind == "s" else int(val)
 
 
-def stats_entry(gram, moment, count) -> dict:
-    return {"gram": np.asarray(gram), "moment": np.asarray(moment),
-            "count": np.asarray(count, np.int64)}
+def stats_entry(gram, moment, count, yty=None) -> dict:
+    """Snapshot codec for one SuffStats. ``yty`` (the residual second
+    moment) is stored only when carried — a legacy entry omits the key, and
+    the commit record's per-entry ``moments`` flags keep the load template
+    in sync, so pre-moments snapshots restore unchanged."""
+    out = {"gram": np.asarray(gram), "moment": np.asarray(moment),
+           "count": np.asarray(count, np.int64)}
+    if yty is not None:
+        out["yty"] = np.asarray(yty)
+    return out
 
 
-def _stats_template(dim: int, dtype: str) -> dict:
+def _stats_template(dim: int, dtype: str, moments: bool = False) -> dict:
     dt = np.dtype(dtype)
-    return {"gram": np.zeros((dim, dim), dt), "moment": np.zeros((dim,), dt),
-            "count": np.zeros((), np.int64)}
+    out = {"gram": np.zeros((dim, dim), dt), "moment": np.zeros((dim,), dt),
+           "count": np.zeros((), np.int64)}
+    if moments:
+        out["yty"] = np.zeros((), dt)
+    return out
 
 
 def _snapshot_template(meta: dict) -> dict:
     tree: dict = {}
     for ti, t in enumerate(meta["tenants"]):
         dim, dtype = t["dim"], t["dtype"]
-        entry = {"fused": _stats_template(dim, dtype),
-                 "clients": {f"c{i}": _stats_template(dim, dtype)
-                             for i in range(len(t["clients"]))},
-                 "dropped": {f"d{i}": _stats_template(dim, dtype)
-                             for i in range(len(t["dropped"]))}}
+        # Pre-moments commit records have no "moments" key: every entry is
+        # moments-less and the template reduces to the legacy layout.
+        mom = t.get("moments") or {}
+        mc, md = mom.get("clients", []), mom.get("dropped", [])
+        entry = {"fused": _stats_template(dim, dtype,
+                                          mom.get("fused", False)),
+                 "clients": {f"c{i}": _stats_template(
+                     dim, dtype, mc[i] if i < len(mc) else False)
+                     for i in range(len(t["clients"]))},
+                 "dropped": {f"d{i}": _stats_template(
+                     dim, dtype, md[i] if i < len(md) else False)
+                     for i in range(len(t["dropped"]))}}
         tree[f"t{ti}"] = entry
     return tree

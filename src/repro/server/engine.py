@@ -19,6 +19,7 @@ method              paper surface
 ``loco_weights``    all K leave-one-client-out models, all sigmas (Prop 5)
 ``loco_cv``         Prop 5 sigma selection as ONE vectorized solve
 ``predict``         serving hot path: x -> x @ w_sigma off the cached factor
+``inference``       stderr / CI / PI off the cached factor (server.inference)
 ==================  =======================================================
 
 The engine itself is *backend-agnostic*: all representation-dependent linear
@@ -631,6 +632,32 @@ class FusionEngine:
     def predict(self, A: jax.Array, sigma: float) -> jax.Array:
         """Hot path: ridge predictions for query rows at one sigma."""
         return A @ self.solve(sigma)
+
+    def inference(self, sigma: float, *, level: float = 0.95,
+                  queries: jax.Array | None = None) -> dict | None:
+        """Standard errors / intervals for the solve at ``sigma``.
+
+        Computed off the SAME cached factor ``solve`` uses — a warm call
+        performs no new factorization (``cold_factorizations`` untouched),
+        only triangular solves (server.inference). Returns None when the
+        fused statistics carry no residual second moment (legacy or
+        DP-degraded uploads), when the backend declines to expose dense
+        solve operands (sharded), or when the residual degrees of freedom
+        are non-positive — point serving is never affected.
+        """
+        from repro.server.inference import inference_report
+
+        self.flush()
+        s = self.backend.stats()
+        if s.yty is None:
+            return None
+        factor = self.factor(sigma)
+        ops = self.backend.solve_operands(factor)
+        if ops is None:
+            return None
+        L, _ = ops
+        w = self.backend.solve(factor)
+        return inference_report(L, s, w, sigma, level=level, queries=queries)
 
     def predict_batch(self, A: jax.Array, sigmas: Sequence[float]) -> jax.Array:
         """(S, n) predictions — n query rows against S regularizations."""

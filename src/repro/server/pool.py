@@ -564,7 +564,9 @@ class EnginePool:
         def unstats(entry) -> SuffStats:
             return SuffStats(gram=entry["gram"], moment=entry["moment"],
                              count=jnp.asarray(int(entry["count"]),
-                                               jnp.int32))
+                                               jnp.int32),
+                             yty=(jnp.asarray(entry["yty"])
+                                  if "yty" in entry else None))
 
         for ti, tm in enumerate(meta["tenants"]):
             entry = tree[f"t{ti}"]
@@ -580,7 +582,10 @@ class EnginePool:
                        for i, tag in enumerate(tm["dropped"])}
             engine.import_ledger(clients, dropped)
             t = self.tenant(tm["name"])
-            t.dedup = {(cid, crc) for cid, crc in tm["dedup"]}
+            # Entries restore as-written: 4-tuples from current snapshots,
+            # legacy (client_id, crc) 2-tuples from pre-upgrade ones —
+            # _dedup_hit matches both, so no journaled frame re-fuses.
+            t.dedup = {tuple(e) for e in tm["dedup"]}
             c = tm["counters"]
             t.wire_frames = c["wire_frames"]
             t.relay_frames = c.get("relay_frames", 0)
@@ -626,14 +631,16 @@ class EnginePool:
                 cids, dids = list(clients), list(dropped)
                 tree[f"t{ti}"] = {
                     "fused": stats_entry(fused.gram, fused.moment,
-                                         fused.count),
+                                         fused.count, yty=fused.yty),
                     "clients": {f"c{i}": stats_entry(clients[c].gram,
                                                      clients[c].moment,
-                                                     clients[c].count)
+                                                     clients[c].count,
+                                                     yty=clients[c].yty)
                                 for i, c in enumerate(cids)},
                     "dropped": {f"d{i}": stats_entry(dropped[c].gram,
                                                      dropped[c].moment,
-                                                     dropped[c].count)
+                                                     dropped[c].count,
+                                                     yty=dropped[c].yty)
                                 for i, c in enumerate(dids)},
                 }
                 tenants_meta.append({
@@ -648,7 +655,17 @@ class EnginePool:
                     "dropped": [_tag_id(c) for c in dids],
                     "feature_map": (_dc.asdict(t.feature_map)
                                     if t.feature_map is not None else None),
-                    "dedup": sorted([cid, crc] for cid, crc in t.dedup),
+                    # Which stats entries carry a residual second moment —
+                    # keeps the snapshot load template in sync (durability).
+                    "moments": {
+                        "fused": fused.yty is not None,
+                        "clients": [clients[c].yty is not None
+                                    for c in cids],
+                        "dropped": [dropped[c].yty is not None
+                                    for c in dids],
+                    },
+                    # Mixed generations sort fine: str first, ints after.
+                    "dedup": sorted([list(k) for k in t.dedup]),
                     "counters": {
                         "wire_frames": t.wire_frames,
                         "relay_frames": t.relay_frames,
@@ -743,12 +760,34 @@ class EnginePool:
     def _dedup_key(self, frame, raw: bytes | None):
         """The idempotency key for an upload, or None on the Python-API
         fast path (no wire bytes anywhere: nothing to dedup against, and a
-        non-journaled in-process caller never retries blind)."""
+        non-journaled in-process caller never retries blind).
+
+        The key is ``(client_id, frame_type_byte, encoded_len, crc32)``:
+        CRC32 alone is 32 bits of a *linear* code — two genuinely different
+        same-client uploads can share it (and an adversarial client can
+        force it), and under the old ``(client_id, crc)`` key the second
+        upload was silently answered ``duplicate=True`` and never fused.
+        Frame type and total encoded length make the cheap collisions
+        (different frame kinds, different payload sizes) structurally
+        impossible and leave only same-type same-length CRC collisions,
+        which the regression test pins as fused-not-deduped.
+        """
         if raw is None and self._store is None:
             return None
         from repro.fed import wire
 
-        return (frame.client_id, wire.frame_crc(self._frame_raw(frame, raw)))
+        raw_b = self._frame_raw(frame, raw)
+        return (frame.client_id, raw_b[5], len(raw_b),
+                wire.frame_crc(raw_b))
+
+    @staticmethod
+    def _dedup_hit(t: Tenant, key) -> bool:
+        """Membership under both key generations: current 4-tuples and the
+        legacy ``(client_id, crc)`` 2-tuples restored from pre-upgrade
+        snapshots — those keep deduplicating re-sends of the frames they
+        were recorded for (no re-fusion after a migration), while every
+        newly admitted upload is indexed under the strengthened key."""
+        return key in t.dedup or (key[0], key[3]) in t.dedup
 
     def _admit_frame_inner(self, name: str, frame, *, encoded_len: int,
                            placement: str, raw: bytes | None):
@@ -775,7 +814,7 @@ class EnginePool:
                         return wire.AckFrame(False, err)
                     cid = frame.client_id or None
                     key = self._dedup_key(frame, raw)
-                    if key is not None and key in t.dedup:
+                    if key is not None and self._dedup_hit(t, key):
                         t.duplicates += 1
                         return wire.AckFrame(
                             True, f"duplicate upload d={packed.dim} already "
@@ -806,7 +845,7 @@ class EnginePool:
                         return wire.AckFrame(False, err)
                     cid = frame.client_id or None
                     key = self._dedup_key(frame, raw)
-                    if key is not None and key in t.dedup:
+                    if key is not None and self._dedup_hit(t, key):
                         t.duplicates += 1
                         return wire.AckFrame(
                             True, f"duplicate rows already fused",
@@ -966,19 +1005,31 @@ class EnginePool:
             w = self._lift(t, w)
         return w
 
-    def solve_report(self, name: str, sigma: float) -> dict:
+    def solve_report(self, name: str, sigma: float, *, level: float = 0.95,
+                     queries: jax.Array | None = None) -> dict:
         """``solve_lifted`` plus §IV-F metadata: the served weights, the
         tenant's kind and map dimensions, and — for sketched tenants — the
         Prop-3 error bound c·sqrt(d/m)·||w|| evaluated at c=1 with the
         lifted solution's own norm standing in for ||w|| (the true
         full-dimension solution is exactly what a sketched tenant never
         computes, so the bound is a self-reported scale, not an oracle
-        comparison — documented in the README table)."""
+        comparison — documented in the README table).
+
+        Also carries the federated-inference fields ``stderr`` / ``ci`` /
+        ``pi`` (server.inference, computed off the tenant's cached factor).
+        They are None when the tenant's fused statistics carry no residual
+        second moment — legacy clients that never uploaded moments, DP
+        tenants, sharded backends — point weights are served identically
+        either way. ``queries`` are RAW-space rows (the pool featurizes
+        them through the tenant's §IV-F map when it has one); stderr/ci
+        are per-coefficient in the tenant's SOLVE space.
+        """
         t = self.tenant(name)
         v = self.solve(name, sigma)
         w = self._lift(t, v)
         report = {"sigma": float(sigma), "kind": t.kind,
-                  "solve_dim": int(t.engine.dim), "weights": w}
+                  "solve_dim": int(t.engine.dim), "weights": w,
+                  "stderr": None, "ci": None, "pi": None}
         fm = t.feature_map
         if fm is not None:
             report["d_orig"] = fm.d_orig
@@ -987,6 +1038,17 @@ class EnginePool:
             bound = fm.error_bound(float(jnp.linalg.norm(w)))
             if bound is not None:
                 report["error_bound"] = bound
+        q = queries
+        if q is not None and fm is not None:
+            q = fm(jnp.atleast_2d(jnp.asarray(q)))
+        inf = self._locked(
+            name, lambda e: e.inference(sigma, level=level, queries=q))
+        if inf is not None:
+            report["stderr"] = inf["stderr"]
+            report["ci"] = inf["ci"]
+            report["pi"] = inf["pi"]
+            report["inference"] = {k: inf[k] for k in
+                                   ("level", "n", "dof", "rss", "sigma2")}
         return report
 
     def drop_tenant(self, name: str) -> FusionEngine:

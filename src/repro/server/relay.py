@@ -49,10 +49,12 @@ from __future__ import annotations
 import dataclasses
 import io
 import json
+import logging
 import os
 import pathlib
 import threading
 import time
+import traceback
 import zlib
 from typing import Callable
 
@@ -62,6 +64,8 @@ from repro.fed import wire
 from repro.fed.protocol import PackedStats
 from repro.fed.transport import ResilientClient
 from repro.server.durability import fsync_dir
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +157,8 @@ class RelayForwarder:
         self._stop = threading.Event()
         self.resumed_pending = 0
         self.empty_skips = 0
+        self.poll_errors = 0
+        self._poll_errors_logged: set[str] = set()
         self._load_states()
 
     # -- durable per-tenant state ---------------------------------------------
@@ -165,9 +171,12 @@ class RelayForwarder:
 
     @staticmethod
     def _stats_arrays(stats) -> dict:
-        return {"gram": np.asarray(stats.gram),
-                "moment": np.asarray(stats.moment),
-                "count": np.asarray(int(stats.count), np.int64)}
+        out = {"gram": np.asarray(stats.gram),
+               "moment": np.asarray(stats.moment),
+               "count": np.asarray(int(stats.count), np.int64)}
+        if stats.yty is not None:
+            out["yty"] = np.asarray(stats.yty)
+        return out
 
     def _save_state(self, st: _TenantForwardState) -> None:
         """tmp -> fsync -> rename -> dir-fsync, like ``DurableStore``: the
@@ -205,11 +214,15 @@ class RelayForwarder:
                 st.last = {"gram": data["last_gram"],
                            "moment": data["last_moment"],
                            "count": data["last_count"]}
+                if "last_yty" in data:
+                    st.last["yty"] = data["last_yty"]
             if "pending_raw" in data:
                 st.pending_raw = bytes(data["pending_raw"])
                 st.pending_last = {"gram": data["next_gram"],
                                    "moment": data["next_moment"],
                                    "count": data["next_count"]}
+                if "next_yty" in data:
+                    st.pending_last["yty"] = data["next_yty"]
             self._states[st.tenant] = st
 
     def _state(self, tenant: str) -> _TenantForwardState:
@@ -230,33 +243,46 @@ class RelayForwarder:
     # -- forward protocol -----------------------------------------------------
 
     def _delta(self, st: _TenantForwardState, now) -> tuple | None:
-        """(gram, moment, count) of ``now - last``, or None when empty."""
+        """(gram, moment, count, yty) of ``now - last``, or None when empty.
+
+        yty telescopes exactly like (G, h): the first epoch's delta IS the
+        fused value (``now - 0``), so a single-forward two-tier chain is
+        bit-identical to direct upload. A tenant whose fusion degraded to
+        ``yty=None`` — or whose pre-moments forward history recorded no
+        yty — forwards ``yty=None`` (the root's fusion degrades the same
+        way a direct legacy upload would)."""
         gram = np.asarray(now.gram)
         moment = np.asarray(now.moment)
         count = int(now.count)
+        yty = None if now.yty is None else np.asarray(now.yty)
         if st.last is not None and st.last["gram"].shape == gram.shape:
             gram = gram - st.last["gram"]
             moment = moment - st.last["moment"]
             count = count - int(st.last["count"])
+            if yty is not None:
+                yty = (yty - st.last["yty"] if "yty" in st.last else None)
         if count == 0 and not gram.any() and not moment.any():
             return None
-        return gram, moment, count
+        return gram, moment, count, yty
 
     def _build_frame(self, tenant: str, delta: tuple, epoch: int):
         from repro.core.sufficient_stats import SuffStats
 
-        gram, moment, count = delta
+        gram, moment, count, yty = delta
         packed = PackedStats.pack(SuffStats(
-            gram=gram, moment=moment, count=np.asarray(count, np.int64)))
+            gram=gram, moment=moment, count=np.asarray(count, np.int64),
+            yty=yty))
         cid = wire.relay_client_id(self.relay_id, epoch)
         t = self.pool.tenant(tenant)
         fm = t.feature_map
         if fm is None:
-            return wire.StatsFrame.from_packed(packed, client_id=cid)
+            return wire.StatsFrame.from_packed(packed, client_id=cid,
+                                               moments=yty is not None)
         common = dict(tri=np.asarray(packed.tri),
                       moment=np.asarray(packed.moment),
                       count=int(packed.count), dim=int(packed.dim),
-                      d_orig=fm.d_orig, seed=fm.seed, client_id=cid)
+                      d_orig=fm.d_orig, seed=fm.seed, client_id=cid,
+                      yty=None if yty is None else float(yty))
         if fm.kind == "sketch":
             return wire.ProjectedFrame(rhash=fm.fhash, **common)
         return wire.RFFFrame(fhash=fm.fhash, lengthscale=fm.lengthscale,
@@ -353,10 +379,22 @@ class RelayForwarder:
             while not self._stop.wait(interval_s):
                 try:
                     self.poll()
-                except Exception:   # noqa: BLE001 - the poller must survive
-                    pass            # transient upstream outages; the retry
-                #                     budget inside upload_raw already logged
-                #                     the failure into the client's counters.
+                except Exception as e:  # noqa: BLE001 - poller must survive
+                    # Transient upstream outages must not kill the thread,
+                    # but they must not vanish either: count every failure
+                    # (``summary()["poll_errors"]``) and log the traceback
+                    # once per distinct error — the same discipline as
+                    # transport's connection_errors.
+                    key = f"{type(e).__name__}: {e}"
+                    with self._lock:
+                        self.poll_errors += 1
+                        first = key not in self._poll_errors_logged
+                        if first:
+                            self._poll_errors_logged.add(key)
+                    if first:
+                        logger.error(
+                            "relay %s poll failed (suppressing repeats):\n%s",
+                            self.relay_id, traceback.format_exc())
 
         self._thread = threading.Thread(
             target=loop, name=f"RelayForwarder-{self.relay_id}", daemon=True)
@@ -407,6 +445,7 @@ class RelayForwarder:
                                    for st in states.values()),
             "resumed_pending": self.resumed_pending,
             "empty_skips": self.empty_skips,
+            "poll_errors": self.poll_errors,
             "duplicate_acks": sum(c["duplicate_acks"]
                                   for c in upstream.values()),
             "per_tenant": per_tenant,

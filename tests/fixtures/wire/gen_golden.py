@@ -84,6 +84,10 @@ def main() -> None:
         for field in ("tri", "moment", "A", "b", "w"):
             if hasattr(decoded, field):
                 entry[f"{field}_sha256"] = _arr_digest(getattr(decoded, field))
+        # MOMENTS section: pinned only when carried, so the pre-moments
+        # fixtures' expected.json entries are untouched.
+        if getattr(decoded, "yty", None) is not None:
+            entry["yty"] = decoded.yty
         if extra:
             entry.update(extra)
         expected[name] = entry
@@ -171,6 +175,34 @@ def main() -> None:
     emit("ack_duplicate",
          wire.AckFrame(True, "duplicate upload d=6 already fused",
                        duplicate=True), dtype="f32")
+
+    # --- MOMENTS section (yty) x {stats, proj, rff} -------------------------
+    # Appended after everything above (fresh rng draws, consumed last, so
+    # every pre-existing fixture's bytes are untouched). The MOMENTS section
+    # is a trailing little-endian f64 — always f64 regardless of the wire
+    # dtype, pinned here on an f32 session — and its absence is the
+    # byte-identical legacy encoding (covered by the fixtures above).
+    Gm, hm, nm = _spd_stats(rng, D, 16)
+    ym = float(rng.standard_normal() ** 2 + 3.0)
+    emit("stats_f32_moments",
+         wire.StatsFrame(tri=_tri(Gm), moment=hm, count=nm, dim=D,
+                         client_id="golden", wire_dtype="f32", yty=ym),
+         dtype="f32")
+    Gpm, hpm, npm = _spd_stats(rng, M, 12)
+    ypm = float(rng.standard_normal() ** 2 + 2.0)
+    emit("proj_f32_moments",
+         wire.ProjectedFrame(tri=_tri(Gpm), moment=hpm, count=npm, dim=M,
+                             d_orig=D_ORIG, seed=PROJ_SEED, rhash=0xDEADBEEF,
+                             client_id="sketchy", wire_dtype="f32", yty=ypm),
+         dtype="f32")
+    Grm, hrm, nrm = _spd_stats(rng, 12, 20)
+    yrm = float(rng.standard_normal() ** 2 + 5.0)
+    emit("rff_f32_moments",
+         wire.RFFFrame(tri=_tri(Grm), moment=hrm, count=nrm, dim=12,
+                       d_orig=D_ORIG, seed=PROJ_SEED, fhash=0xFEEDC0DE,
+                       lengthscale=1.5, client_id="fourier",
+                       wire_dtype="f32", yty=yrm),
+         dtype="f32")
 
     (HERE / "expected.json").write_text(json.dumps(expected, indent=1,
                                                    sort_keys=True))

@@ -476,6 +476,146 @@ class TestDuplicateRetryLedger:
             client.close()
 
 
+# -- satellite: dedup key survives CRC32 collisions ---------------------------
+
+def _forge_crc_collision(cid="evil", d=16):
+    """Two DISTINCT same-client DELTA uploads whose frame CRC32s collide.
+
+    CRC32 is affine over GF(2) at fixed length: flipping payload bit i
+    XORs a fixed syndrome into the checksum. We take a 3-row frame, compute
+    the syndromes of 96 candidate bit flips confined to the low two bytes
+    of its f32 A-values (mantissa-only — the frame stays finite and
+    decodable), and Gauss-eliminate for the subset steering its CRC onto a
+    2-row frame's. The pre-fix dedup key ``(client_id, crc)`` calls the
+    second upload a duplicate of the first; the strengthened key
+    ``(client_id, frame_type, length, crc)`` distinguishes them.
+    """
+    import struct
+    import zlib
+
+    rng = np.random.default_rng(0xC011)
+    A1 = rng.integers(-3, 4, (2, d)).astype(np.float32)
+    b1 = rng.integers(-3, 4, (2,)).astype(np.float32)
+    raw1 = wire.encode_frame(
+        wire.DeltaRowsFrame(A=A1, b=b1, client_id=cid, wire_dtype="f32"))
+    A2 = rng.integers(-3, 4, (3, d)).astype(np.float32)
+    b2 = rng.integers(-3, 4, (3,)).astype(np.float32)
+    raw2 = wire.encode_frame(
+        wire.DeltaRowsFrame(A=A2, b=b2, client_id=cid, wire_dtype="f32"))
+
+    body = bytearray(raw2[:-4])
+    base = zlib.crc32(bytes(body)) & 0xFFFFFFFF
+    target = wire.frame_crc(raw1)
+    # DELTA payload: <II n d> + <H len>cid + A row-major f32s + b f32s.
+    a_off = wire.HEADER_BYTES + 8 + 2 + len(cid.encode())
+    positions = [(a_off + 4 * i + byte, bit)
+                 for i in range(3 * d) for byte in (0, 1) for bit in (0,)]
+    syndromes = []
+    for byte_i, bit in positions:
+        mod = bytearray(body)
+        mod[byte_i] ^= 1 << bit
+        syndromes.append((zlib.crc32(bytes(mod)) & 0xFFFFFFFF) ^ base)
+    # GF(2) elimination: subset of syndromes XORing to base ^ target.
+    pivots = {}
+    for i, s in enumerate(syndromes):
+        v, mask = s, 1 << i
+        while v:
+            hb = v.bit_length() - 1
+            if hb not in pivots:
+                pivots[hb] = (v, mask)
+                break
+            pv, pm = pivots[hb]
+            v, mask = v ^ pv, mask ^ pm
+    v, mask = base ^ target, 0
+    while v:
+        hb = v.bit_length() - 1
+        assert hb in pivots, "syndromes did not span GF(2)^32"
+        pv, pm = pivots[hb]
+        v, mask = v ^ pv, mask ^ pm
+    for i, (byte_i, bit) in enumerate(positions):
+        if mask >> i & 1:
+            body[byte_i] ^= 1 << bit
+    crc = zlib.crc32(bytes(body)) & 0xFFFFFFFF
+    forged = bytes(body) + struct.pack("<I", crc)
+    return raw1, forged
+
+
+class TestDedupCollisionResistance:
+    def test_forged_collision_is_real(self):
+        raw1, raw2 = _forge_crc_collision()
+        assert raw1 != raw2 and len(raw1) != len(raw2)
+        assert wire.frame_crc(raw1) == wire.frame_crc(raw2)
+        f1, f2 = wire.decode_frame(raw1), wire.decode_frame(raw2)
+        assert f1.client_id == f2.client_id == "evil"
+        assert f1.A.shape == (2, 16) and f2.A.shape == (3, 16)
+
+    def test_colliding_pair_both_fuse_neither_falsely_duplicate(self,
+                                                                tmp_path):
+        """The bugfix pin: same client, colliding CRCs, DIFFERENT uploads —
+        both must fuse; pre-fix the second was silently swallowed as a
+        duplicate (5 rows of data lost with an ok=True ACK)."""
+        raw1, raw2 = _forge_crc_collision()
+        pool = EnginePool(journal_dir=str(tmp_path / "j"))
+        ack1 = _admit_raw(pool, "t", raw1)
+        ack2 = _admit_raw(pool, "t", raw2)
+        assert ack1.ok and not ack1.duplicate
+        assert ack2.ok and not ack2.duplicate
+        assert int(pool.get("t").backend.count) == 5     # 2 + 3 rows fused
+        assert pool.tenant("t").duplicates == 0
+        # Byte-identical re-sends of EITHER frame still dedup.
+        for raw in (raw1, raw2):
+            ack = _admit_raw(pool, "t", raw)
+            assert ack.ok and ack.duplicate
+        assert int(pool.get("t").backend.count) == 5
+        pool.close()
+
+    def test_collision_dedup_survives_restart(self, tmp_path):
+        raw1, raw2 = _forge_crc_collision()
+        pool = EnginePool(journal_dir=str(tmp_path / "j"))
+        _admit_raw(pool, "t", raw1)
+        _admit_raw(pool, "t", raw2)
+        pool.snapshot()
+        pool.close()
+        p2 = EnginePool(journal_dir=str(tmp_path / "j"))
+        assert int(p2.get("t").backend.count) == 5
+        for raw in (raw1, raw2):
+            ack = _admit_raw(p2, "t", raw)
+            assert ack.ok and ack.duplicate
+        assert int(p2.get("t").backend.count) == 5
+        p2.close()
+
+    def test_legacy_2tuple_snapshot_entries_migrate(self, tmp_path):
+        """A snapshot written by the pre-fix code persisted ``(client_id,
+        crc)`` 2-tuples. Restoring one must keep honoring those entries —
+        a byte-identical re-send of an already-fused frame still answers
+        duplicate=True with no re-fusion — without rewriting history."""
+        rng = np.random.default_rng(21)
+        A, b = _int_rows(rng, 6, 4)
+        raw = _stats_raw(A, b, "c0")
+        pool = EnginePool(journal_dir=str(tmp_path / "j"))
+        _admit_raw(pool, "t", raw)
+        pool.snapshot()
+        pool.close()
+
+        # Rewrite the committed snapshot's dedup entries to the legacy
+        # 2-tuple generation (and drop the moments map a pre-fix snapshot
+        # never wrote) — byte surgery standing in for an old binary.
+        commits = sorted((tmp_path / "j" / "snapshots").glob("commit_*.json"))
+        meta = json.loads(commits[-1].read_text())
+        for tm in meta["tenants"]:
+            tm["dedup"] = [[e[0], e[3]] for e in tm["dedup"]]
+            tm.pop("moments", None)
+        commits[-1].write_text(json.dumps(meta, sort_keys=True))
+
+        p2 = EnginePool(journal_dir=str(tmp_path / "j"))
+        assert int(p2.get("t").backend.count) == 6
+        ack = _admit_raw(p2, "t", raw)
+        assert ack.ok and ack.duplicate                # honored, not re-fused
+        assert int(p2.get("t").backend.count) == 6
+        assert list(p2.get("t").client_ids) == ["c0"]
+        p2.close()
+
+
 # -- subprocess acceptance: SIGKILL mid-ingest, restart, bit-identical --------
 
 def _spawn_serve(journal_dir, *extra):

@@ -1,0 +1,438 @@
+"""Federated inference from one-shot second moments (server.inference).
+
+The tentpole pin: extending the sufficient statistic with yty = sum y^2
+makes classical ridge inference — noise estimate, standard errors,
+confidence and prediction intervals — exactly recoverable from the fused
+statistics, off the engine's CACHED Cholesky factor. Layers:
+
+  * Kernel algebra — sigma2/dof/stderr against an independent float64
+    closed form; degenerate cases (missing moments, non-positive residual
+    dof) degrade to None.
+  * Engine/pool bit-identity — the served stderr/CI/PI are BIT-identical
+    to the cold centralized closed form applied to the same fused
+    statistic, with the cold-factorization counter untouched (the
+    inference path never factorizes).
+  * Degraded mode — one legacy (moments-less) upload in the mix degrades
+    inference to None while the point weights stay bit-identical; DP
+    privatization and sharded placement decline by design.
+  * Wire end-to-end — MOMENTS-carrying uploads across dense/sketch/rff
+    clients drive the same reports through the real codec; mixed-
+    generation federations serve points only.
+  * Two-tier — a relay forwarding fused deltas (yty telescopes) yields
+    root inference bit-identical to the single-tier federation on
+    order-free integer data.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.features import FeatureMap
+from repro.core.sufficient_stats import SuffStats, compute_stats
+from repro.fed import transport, wire
+from repro.fed.protocol import PackedStats
+from repro.server import EnginePool
+from repro.server.inference import (inference_report, reference_inference,
+                                    z_value)
+from repro.server.relay import ForwardPolicy, RelayForwarder
+
+SIGMA = 0.31
+D = 6
+
+
+def _int_rows(rng, n=8, d=D):
+    A = rng.integers(-3, 4, (n, d)).astype(np.float32)
+    b = rng.integers(-3, 4, (n,)).astype(np.float32)
+    return A, b
+
+
+def _client_stats(rng, k=4, n=8, d=D):
+    rows = [_int_rows(rng, n, d) for _ in range(k)]
+    stats = {f"c{i}": compute_stats(jnp.asarray(A), jnp.asarray(b))
+             for i, (A, b) in enumerate(rows)}
+    return rows, stats
+
+
+def _stats_raw(A, b, cid, *, moments):
+    frame = wire.StatsFrame.from_stats(
+        compute_stats(jnp.asarray(A), jnp.asarray(b)), client_id=cid,
+        moments=moments)
+    return wire.encode_frame(frame, dtype="f32")
+
+
+def _admit_raw(pool, tenant, raw):
+    return pool.admit_frame(tenant, wire.decode_frame(raw),
+                            encoded_len=len(raw), raw=raw)
+
+
+def _np64(x):
+    return np.asarray(jax.device_get(x), np.float64)
+
+
+# -- kernel algebra ------------------------------------------------------------
+
+class TestInferenceAlgebra:
+    def test_matches_float64_closed_form(self):
+        """sigma2 / dof / stderr / CI / PI against an independent numpy
+        float64 derivation from the raw rows — the statistical meaning,
+        not just self-consistency."""
+        rng = np.random.default_rng(0)
+        A = rng.standard_normal((60, D))
+        b = rng.standard_normal(60)
+        s = compute_stats(jnp.asarray(A), jnp.asarray(b))
+        w, rep = reference_inference(s, SIGMA)
+        assert rep is not None
+
+        G, h = A.T @ A, A.T @ b
+        M = np.linalg.inv(G + SIGMA * np.eye(D))
+        w64 = M @ h
+        rss = float(b @ b - 2 * h @ w64 + w64 @ G @ w64)
+        dof = D - SIGMA * np.trace(M)
+        sigma2 = rss / (60 - dof)
+        cov = sigma2 * (M @ G @ M)
+        stderr = np.sqrt(np.diag(cov))
+        np.testing.assert_allclose(rep["dof"], dof, rtol=1e-4)
+        np.testing.assert_allclose(rep["rss"], rss, rtol=1e-3)
+        np.testing.assert_allclose(rep["sigma2"], sigma2, rtol=1e-3)
+        np.testing.assert_allclose(_np64(rep["stderr"]), stderr, rtol=1e-3)
+        z = z_value(0.95)
+        np.testing.assert_allclose(_np64(rep["ci"][:, 0]),
+                                   _np64(w) - z * stderr, rtol=1e-3)
+
+    def test_z_value(self):
+        # jax ndtri evaluates in the session float width (f32 with x64
+        # off), so pin to single precision, not the f64 constant.
+        assert abs(z_value(0.95) - 1.959963984540054) < 1e-6
+        assert abs(z_value(0.99) - 2.5758293035489004) < 1e-6
+        for bad in (0.0, 1.0, -0.5, 1.5):
+            with pytest.raises(ValueError):
+                z_value(bad)
+
+    def test_prediction_interval_covers_mean(self):
+        rng = np.random.default_rng(1)
+        A = rng.standard_normal((80, D))
+        b = rng.standard_normal(80)
+        s = compute_stats(jnp.asarray(A), jnp.asarray(b))
+        q = jnp.asarray(rng.standard_normal((5, D)), jnp.float32)
+        w, rep = reference_inference(s, SIGMA, queries=q)
+        pi = _np64(rep["pi"])
+        mean = _np64(rep["pi_mean"])
+        assert pi.shape == (5, 2)
+        assert np.all(pi[:, 0] < mean) and np.all(mean < pi[:, 1])
+        # PI is strictly wider than the irreducible-noise band alone.
+        half = (pi[:, 1] - pi[:, 0]) / 2
+        assert np.all(half > z_value(0.95) * np.sqrt(rep["sigma2"]))
+
+    def test_missing_moments_returns_none(self):
+        rng = np.random.default_rng(2)
+        s = compute_stats(*map(jnp.asarray, _int_rows(rng)))
+        legacy = s.without_moments()
+        assert legacy.yty is None
+        _, rep = reference_inference(legacy, SIGMA)
+        assert rep is None
+
+    def test_nonpositive_residual_dof_returns_none(self):
+        """n <= effective dof: the noise estimate is undefined — degrade,
+        don't serve garbage (or a ZeroDivision)."""
+        rng = np.random.default_rng(3)
+        A, b = _int_rows(rng, n=2)     # 2 rows, 6-dim: dof ~ d >> n
+        s = compute_stats(jnp.asarray(A), jnp.asarray(b))
+        _, rep = reference_inference(s, 1e-6)
+        assert rep is None
+
+    def test_query_dim_mismatch_raises(self):
+        rng = np.random.default_rng(4)
+        s = compute_stats(*map(jnp.asarray, _int_rows(rng, n=30)))
+        with pytest.raises(ValueError, match="features"):
+            reference_inference(s, SIGMA,
+                                queries=jnp.ones((2, D + 1), jnp.float32))
+
+
+# -- engine/pool bit-identity off the cached factor ----------------------------
+
+class TestServedBitIdentity:
+    def test_engine_inference_bit_matches_cold_reference(self):
+        """The acceptance pin: stderr/CI/PI served off the engine's cached
+        factor are BIT-identical to the cold centralized closed form on
+        the same fused statistic — and serving them does not factorize."""
+        rng = np.random.default_rng(5)
+        _, stats = _client_stats(rng)
+        q = jnp.asarray(rng.standard_normal((3, D)), jnp.float32)
+        with EnginePool() as pool:
+            pool.create_tenant("t", stats)
+            eng = pool.get("t")
+            w = pool.solve("t", SIGMA)
+            cold0 = eng.cold_factorizations
+            rep = eng.inference(SIGMA, queries=q)
+            assert eng.cold_factorizations == cold0   # cached factor only
+            ref_w, ref = reference_inference(eng.stats, SIGMA, queries=q)
+            assert _np64(w).tobytes() == _np64(ref_w).tobytes()
+            for key in ("stderr", "ci", "pi", "pi_mean"):
+                assert rep[key].tobytes() == ref[key].tobytes(), key
+            for key in ("n", "dof", "rss", "sigma2", "level"):
+                assert rep[key] == ref[key], key
+
+    def test_pool_solve_report_carries_inference(self):
+        rng = np.random.default_rng(6)
+        _, stats = _client_stats(rng)
+        q = np.asarray(np.random.default_rng(7).standard_normal((2, D)),
+                       np.float32)
+        with EnginePool() as pool:
+            pool.create_tenant("t", stats)
+            rep = pool.solve_report("t", SIGMA, queries=q)
+            ref_w, ref = reference_inference(pool.get("t").stats, SIGMA,
+                                             queries=jnp.asarray(q))
+            assert rep["stderr"].tobytes() == ref["stderr"].tobytes()
+            assert rep["ci"].tobytes() == ref["ci"].tobytes()
+            assert rep["pi"].tobytes() == ref["pi"].tobytes()
+            inf = rep["inference"]
+            assert inf["n"] == int(pool.get("t").backend.count)
+            assert inf["level"] == 0.95
+            assert inf["sigma2"] == ref["sigma2"]
+
+    def test_level_changes_interval_width_not_weights(self):
+        rng = np.random.default_rng(8)
+        _, stats = _client_stats(rng)
+        with EnginePool() as pool:
+            pool.create_tenant("t", stats)
+            r90 = pool.solve_report("t", SIGMA, level=0.90)
+            r99 = pool.solve_report("t", SIGMA, level=0.99)
+            assert _np64(r90["weights"]).tobytes() == \
+                _np64(r99["weights"]).tobytes()
+            assert r90["stderr"].tobytes() == r99["stderr"].tobytes()
+            w90 = r90["ci"][:, 1] - r90["ci"][:, 0]
+            w99 = r99["ci"][:, 1] - r99["ci"][:, 0]
+            assert np.all(w99 > w90)
+
+    def test_rff_tenant_serves_solve_space_inference(self):
+        """yty is featurization-invariant (targets never featurize): a
+        §IV-F tenant serves the same inference algebra in its own solve
+        space, with raw-space queries featurized by the pool."""
+        rng = np.random.default_rng(9)
+        fm = FeatureMap("rff", seed=3, d_orig=D, m=8, lengthscale=1.2)
+        rows = [_int_rows(rng) for _ in range(3)]
+        stats = {f"c{i}": fm.stats(jnp.asarray(A), jnp.asarray(b),
+                                   use_pallas=False)
+                 for i, (A, b) in enumerate(rows)}
+        assert all(s.yty is not None for s in stats.values())
+        q_raw = np.asarray(rng.standard_normal((2, D)), np.float32)
+        with EnginePool() as pool:
+            pool.create_tenant("t", stats, features=fm)
+            rep = pool.solve_report("t", SIGMA, queries=q_raw)
+            assert rep["stderr"] is not None and rep["stderr"].shape == (8,)
+            ref_w, ref = reference_inference(
+                pool.get("t").stats, SIGMA,
+                queries=fm(jnp.asarray(np.atleast_2d(q_raw))))
+            assert rep["stderr"].tobytes() == ref["stderr"].tobytes()
+            assert rep["pi"].tobytes() == ref["pi"].tobytes()
+
+
+# -- degraded mode -------------------------------------------------------------
+
+class TestDegradedMode:
+    def test_one_legacy_client_degrades_inference_not_weights(self):
+        """A single moments-less upload in the federation: inference is
+        None (no silent half-truth), and the point weights are
+        bit-identical to the same federation with every upload carrying
+        moments — yty never perturbs the (G, h) fusion."""
+        rng = np.random.default_rng(10)
+        rows = [_int_rows(rng) for _ in range(3)]
+        with EnginePool() as carried, EnginePool() as mixed:
+            for i, (A, b) in enumerate(rows):
+                _admit_raw(carried, "t", _stats_raw(A, b, f"c{i}",
+                                                    moments=True))
+                _admit_raw(mixed, "t", _stats_raw(A, b, f"c{i}",
+                                                  moments=i != 1))
+            assert carried.get("t").stats.yty is not None
+            assert mixed.get("t").stats.yty is None
+            rc = carried.solve_report("t", SIGMA)
+            rm = mixed.solve_report("t", SIGMA)
+            assert rc["stderr"] is not None
+            assert rm["stderr"] is None and rm["ci"] is None \
+                and rm["pi"] is None and "inference" not in rm
+            assert _np64(rc["weights"]).tobytes() == \
+                _np64(rm["weights"]).tobytes()
+
+    def test_legacy_only_federation_serves_points(self):
+        rng = np.random.default_rng(11)
+        with EnginePool() as pool:
+            for i in range(2):
+                ack = _admit_raw(pool, "t",
+                                 _stats_raw(*_int_rows(rng), f"c{i}",
+                                            moments=False))
+                assert ack.ok and not ack.duplicate
+            assert pool.get("t").inference(SIGMA) is None
+            assert pool.solve_report("t", SIGMA)["stderr"] is None
+
+    def test_drop_restore_telescopes_moments(self):
+        """Thm-8 drop subtracts the client's yty; restore re-adds it —
+        inference after drop+restore equals never-dropped bit-for-bit."""
+        rng = np.random.default_rng(12)
+        _, stats = _client_stats(rng, k=3)
+        with EnginePool() as pool:
+            pool.create_tenant("t", stats)
+            before = pool.get("t").inference(SIGMA)
+            pool.drop("t", "c1")
+            dropped = pool.get("t").inference(SIGMA)
+            pool.restore("t", "c1")
+            after = pool.get("t").inference(SIGMA)
+            assert before is not None and after is not None
+            assert dropped is not None and dropped["n"] < before["n"]
+            assert before["stderr"].tobytes() == after["stderr"].tobytes()
+            assert before["sigma2"] == after["sigma2"]
+
+    def test_dp_privatization_drops_moments(self):
+        """An un-noised sum y^2 next to privatized (G, h) leaks — the DP
+        path must strip it, degrading inference by design."""
+        from repro.core.privacy import privatize_stats
+
+        rng = np.random.default_rng(13)
+        s = compute_stats(*map(jnp.asarray, _int_rows(rng)))
+        assert s.yty is not None
+        priv = privatize_stats(jax.random.PRNGKey(0), s, 1.0, 1e-5)
+        assert priv.yty is None
+
+
+# -- wire end-to-end -----------------------------------------------------------
+
+class TestWireEndToEnd:
+    def test_moments_uploads_drive_inference(self):
+        rng = np.random.default_rng(14)
+        rows = [_int_rows(rng) for _ in range(3)]
+        with EnginePool() as pool:
+            disp = transport.WireDispatcher(pool)
+            for i, (A, b) in enumerate(rows):
+                cl = transport.FrameClient(transport.LoopbackChannel(disp))
+                cl.hello("t")
+                ack = cl.upload_stats(
+                    compute_stats(jnp.asarray(A), jnp.asarray(b)),
+                    client_id=f"c{i}", moments=True)
+                assert ack.ok
+                cl.close()
+            rep = pool.solve_report("t", SIGMA)
+            assert rep["stderr"] is not None
+            _, ref = reference_inference(pool.get("t").stats, SIGMA)
+            assert rep["stderr"].tobytes() == ref["stderr"].tobytes()
+
+    def test_feature_uploads_carry_moments(self):
+        rng = np.random.default_rng(15)
+        for kind in ("sketch", "rff"):
+            fm = FeatureMap(kind, seed=4, d_orig=D, m=4, lengthscale=1.1)
+            with EnginePool() as pool:
+                disp = transport.WireDispatcher(pool)
+                for i in range(2):
+                    A, b = _int_rows(rng)
+                    s = fm.stats(jnp.asarray(A), jnp.asarray(b),
+                                 use_pallas=False)
+                    packed = PackedStats.pack(s)
+                    cl = transport.FrameClient(
+                        transport.LoopbackChannel(disp))
+                    cl.hello("t")
+                    yty = float(np.asarray(packed.yty))
+                    if kind == "sketch":
+                        ack = cl.upload_projected(
+                            packed, d_orig=D, seed=fm.seed, rhash=fm.fhash,
+                            client_id=f"c{i}", yty=yty)
+                    else:
+                        ack = cl.upload_rff(
+                            packed, d_orig=D, seed=fm.seed, fhash=fm.fhash,
+                            lengthscale=fm.lengthscale, client_id=f"c{i}",
+                            yty=yty)
+                    assert ack.ok, ack.message
+                    cl.close()
+                assert pool.get("t").stats.yty is not None
+                assert pool.solve_report("t", SIGMA)["stderr"] is not None, \
+                    kind
+
+    def test_moments_survive_journal_restart(self, tmp_path):
+        """yty is part of the durable state: snapshot + restart keeps
+        serving bit-identical intervals with zero re-uploads."""
+        rng = np.random.default_rng(16)
+        rows = [_int_rows(rng) for _ in range(3)]
+        pool = EnginePool(journal_dir=str(tmp_path / "j"))
+        for i, (A, b) in enumerate(rows):
+            _admit_raw(pool, "t", _stats_raw(A, b, f"c{i}", moments=True))
+        before = pool.solve_report("t", SIGMA)
+        pool.snapshot()
+        pool.close()
+        p2 = EnginePool(journal_dir=str(tmp_path / "j"))
+        after = p2.solve_report("t", SIGMA)
+        assert after["stderr"] is not None
+        assert after["stderr"].tobytes() == before["stderr"].tobytes()
+        assert after["ci"].tobytes() == before["ci"].tobytes()
+        p2.close()
+
+
+# -- two-tier ------------------------------------------------------------------
+
+class TestTwoTierInference:
+    def test_relay_forwarded_inference_bit_identical(self, tmp_path):
+        """The relay forwards yty inside its fused delta (telescoping like
+        (G, h)), so root inference behind a relay tier is bit-identical to
+        the single-tier federation on order-free integer rows."""
+        rng = np.random.default_rng(17)
+        rows = [[_int_rows(rng) for _ in range(3)] for _ in range(2)]
+
+        single = EnginePool(tier="root")
+        for r in range(2):
+            for c, (A, b) in enumerate(rows[r]):
+                _admit_raw(single, "t",
+                           _stats_raw(A, b, f"r{r}c{c}", moments=True))
+
+        root = EnginePool(tier="root")
+        root_disp = transport.WireDispatcher(root)
+        for r in range(2):
+            relay_pool = EnginePool(tier="relay")
+            disp = transport.WireDispatcher(relay_pool)
+            fwd = RelayForwarder(
+                relay_pool, lambda: transport.LoopbackChannel(root_disp),
+                relay_id=f"r{r}", state_dir=tmp_path / f"relay{r}",
+                policy=ForwardPolicy(max_frames=None))
+            for c, (A, b) in enumerate(rows[r]):
+                cl = transport.FrameClient(transport.LoopbackChannel(disp))
+                cl.hello("t")
+                cl.upload_stats(compute_stats(jnp.asarray(A),
+                                              jnp.asarray(b)),
+                                client_id=f"r{r}c{c}", moments=True)
+                cl.close()
+            assert relay_pool.get("t").stats.yty is not None
+            assert fwd.forward_all() == 1
+            fwd.close(forward=False)
+            relay_pool.close()
+
+        assert root.get("t").stats.yty is not None
+        rs = root.solve_report("t", SIGMA)
+        ss = single.solve_report("t", SIGMA)
+        assert rs["stderr"] is not None
+        assert rs["stderr"].tobytes() == ss["stderr"].tobytes()
+        assert rs["ci"].tobytes() == ss["ci"].tobytes()
+        assert _np64(rs["weights"]).tobytes() == \
+            _np64(ss["weights"]).tobytes()
+        assert rs["inference"] == ss["inference"]
+        # Ingress shape: the root saw 2 relay frames, not 6 client frames.
+        assert root.ledger()["by_tier"] == {"relay_frames": 2,
+                                            "client_frames": 0}
+        root.close()
+        single.close()
+
+    def test_legacy_relay_tenant_degrades_at_root(self, tmp_path):
+        rng = np.random.default_rng(18)
+        root = EnginePool(tier="root")
+        root_disp = transport.WireDispatcher(root)
+        relay_pool = EnginePool(tier="relay")
+        disp = transport.WireDispatcher(relay_pool)
+        fwd = RelayForwarder(
+            relay_pool, lambda: transport.LoopbackChannel(root_disp),
+            relay_id="r0", state_dir=tmp_path / "state",
+            policy=ForwardPolicy(max_frames=None))
+        for i in range(2):
+            _admit_raw(relay_pool, "t",
+                       _stats_raw(*_int_rows(rng), f"c{i}",
+                                  moments=i == 0))   # one legacy client
+        assert relay_pool.get("t").stats.yty is None
+        assert fwd.forward_all() == 1
+        assert root.get("t").stats.yty is None
+        assert root.solve_report("t", SIGMA)["stderr"] is None
+        fwd.close(forward=False)
+        relay_pool.close()
+        root.close()

@@ -449,6 +449,92 @@ class TestCrashResume:
         standby.close()
 
 
+class TestPollerErrorSurface:
+    """The background poller must SURVIVE failures — but surface them.
+
+    Pre-fix, ``start``'s loop swallowed every exception with a bare
+    ``pass``: a persistent upstream failure was indistinguishable from a
+    healthy idle relay. Now every failed poll increments
+    ``summary()['poll_errors']`` and the traceback is logged exactly once
+    per distinct error (transport's connection_errors discipline).
+    """
+
+    def test_poisoned_poll_counts_logs_once_and_survives(self, tmp_path,
+                                                         caplog):
+        rng = np.random.default_rng(9)
+        root = EnginePool(tier="root")
+        root_disp = transport.WireDispatcher(root)
+        pool = EnginePool(tier="relay")
+        disp = transport.WireDispatcher(pool)
+        fwd = _relay(pool, root_disp, "r0", tmp_path / "state",
+                     policy=ForwardPolicy(max_frames=1))
+        real_poll = fwd.poll
+        boom = {"on": True}
+
+        def poisoned_poll():
+            if boom["on"]:
+                raise RuntimeError("upstream exploded")
+            return real_poll()
+
+        fwd.poll = poisoned_poll
+        with caplog.at_level("ERROR", logger="repro.server.relay"):
+            fwd.start(interval_s=0.01)
+            deadline = time.monotonic() + 5.0
+            while fwd.poll_errors < 3 and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert fwd.poll_errors >= 3
+            assert fwd.summary()["poll_errors"] >= 3
+            # Logged ONCE per distinct error, traceback included — not once
+            # per firing, not zero times.
+            hits = [r for r in caplog.records
+                    if "upstream exploded" in r.getMessage()]
+            assert len(hits) == 1
+            assert "Traceback" in hits[0].getMessage()
+            assert fwd._thread.is_alive()
+
+            # The thread survived the poison: heal it and the same loop
+            # still drives a real forward to the root.
+            boom["on"] = False
+            _upload_dense(transport.LoopbackChannel(disp), "t",
+                          *_int_rows(rng), client_id="c0")
+            deadline = time.monotonic() + 5.0
+            while "t" not in root.tenant_names and \
+                    time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert "t" in root.tenant_names
+        fwd.close(forward=False)
+        pool.close()
+        root.close()
+
+    def test_distinct_errors_each_logged(self, tmp_path, caplog):
+        pool = EnginePool(tier="relay")
+        fwd = _relay(pool, None, "r0", tmp_path / "state")
+        errors = iter([RuntimeError("first kind"), RuntimeError("first kind"),
+                       ValueError("second kind")])
+        done = []
+
+        def poll():
+            try:
+                raise next(errors)
+            except StopIteration:
+                done.append(True)
+                fwd._stop.set()
+                return 0
+
+        fwd.poll = poll
+        with caplog.at_level("ERROR", logger="repro.server.relay"):
+            fwd.start(interval_s=0.005)
+            deadline = time.monotonic() + 5.0
+            while not done and time.monotonic() < deadline:
+                time.sleep(0.01)
+        assert fwd.poll_errors == 3
+        msgs = [r.getMessage() for r in caplog.records]
+        assert sum("first kind" in m for m in msgs) == 1
+        assert sum("second kind" in m for m in msgs) == 1
+        fwd.stop()
+        pool.close()
+
+
 # -- two-tier chaos acceptance -------------------------------------------------
 
 class TestTwoTierChaos:

@@ -19,6 +19,7 @@ Three gates on ``fed.wire``:
 import hashlib
 import json
 import pathlib
+import struct
 import zlib
 
 import numpy as np
@@ -83,7 +84,7 @@ class TestGoldenFrames:
         frame = wire.decode_frame(data)
         assert type(frame).__name__ == exp["frame_type"]
         for field in ("dim", "count", "client_id", "d_orig", "seed", "rhash",
-                      "fhash", "lengthscale",
+                      "fhash", "lengthscale", "yty",
                       "sigma", "op", "ok", "message", "tenant"):
             if field in exp:
                 assert getattr(frame, field) == exp[field], field
@@ -236,6 +237,114 @@ class TestRoundtrip:
             assert tri_dim(tri_len(d)) == d
         with pytest.raises(ValueError):
             tri_dim(4)   # no d has d(d+1)/2 == 4
+
+
+def _reseal(body: bytes) -> bytes:
+    return body + struct.pack("<I", zlib.crc32(body) & 0xFFFFFFFF)
+
+
+def _with_payload(data: bytes, payload: bytes) -> bytes:
+    """Re-frame ``data`` around a replacement payload (length + CRC fixed
+    up), so tests can craft byte-level MOMENTS-section corruptions that
+    still pass the checksum gate."""
+    hdr = bytearray(data[:wire.HEADER_BYTES])
+    hdr[8:12] = struct.pack("<I", len(payload))
+    return _reseal(bytes(hdr) + payload)
+
+
+class TestMoments:
+    """The optional trailing MOMENTS section (yty = sum y^2, one LE f64).
+
+    Presence is inferred from payload length — absence is the byte-identical
+    legacy encoding (the pre-moments golden fixtures pin that), and a
+    payload with any OTHER surplus still dies as trailing bytes.
+    """
+
+    def _frames(self, yty):
+        rng = np.random.default_rng(99)
+        base = _random_stats_frame(rng, 5, "f32")
+        return [
+            wire.StatsFrame(tri=base.tri, moment=base.moment, count=11,
+                            dim=5, client_id="m", wire_dtype="f32", yty=yty),
+            wire.ProjectedFrame(tri=base.tri, moment=base.moment, count=11,
+                                dim=5, d_orig=9, seed=3, rhash=77,
+                                client_id="m", wire_dtype="f32", yty=yty),
+            wire.RFFFrame(tri=base.tri, moment=base.moment, count=11,
+                          dim=5, d_orig=9, seed=3, fhash=77, lengthscale=2.0,
+                          client_id="m", wire_dtype="f32", yty=yty),
+        ]
+
+    def test_moments_roundtrip_exact_f64(self):
+        """yty survives the wire exactly — the section is f64 regardless of
+        the session dtype, so fusion off decoded uploads stays bit-exact."""
+        yty = 1.0 + 2.0 ** -40     # not representable below f64
+        nbytes = {wire.StatsFrame: wire.stats_frame_nbytes,
+                  wire.ProjectedFrame: wire.projected_frame_nbytes,
+                  wire.RFFFrame: wire.rff_frame_nbytes}
+        for f in self._frames(yty):
+            data = wire.encode_frame(f)
+            assert len(data) == nbytes[type(f)](
+                5, "f32", client_id="m", moments=True)
+            g = wire.decode_frame(data)
+            assert g.yty == yty
+            assert wire.encode_frame(g) == data
+
+    @pytest.mark.parametrize("dtype", ["f32", "f64", "bf16"])
+    def test_moments_dtype_invariant(self, dtype):
+        f = _random_stats_frame(np.random.default_rng(7), 4, dtype)
+        f = wire.StatsFrame(tri=f.tri, moment=f.moment, count=f.count,
+                            dim=4, wire_dtype=dtype, yty=0.1)
+        g = wire.decode_frame(wire.encode_frame(f, dtype=dtype))
+        assert g.yty == 0.1       # 0.1 quantizes in f32/bf16; f64 doesn't
+
+    def test_absent_moments_is_legacy_bytes(self):
+        f = _random_stats_frame(np.random.default_rng(3), 6, "f32")
+        assert f.yty is None
+        assert len(wire.encode_frame(f)) == wire.stats_frame_nbytes(
+            6, "f32", client_id="c") == wire.stats_frame_nbytes(
+            6, "f32", client_id="c",
+            moments=True) - wire.MOMENTS_SECTION_BYTES
+
+    def test_nonfinite_yty_rejected_on_encode(self):
+        for bad in (float("nan"), float("inf"), float("-inf")):
+            for f in self._frames(bad):
+                with pytest.raises(wire.PayloadError):
+                    wire.encode_frame(f)
+
+    def test_nonfinite_yty_rejected_on_decode(self):
+        for f in self._frames(4.25):
+            data = wire.encode_frame(f)
+            payload = data[wire.HEADER_BYTES:-4]
+            evil = payload[:-8] + struct.pack("<d", float("nan"))
+            with pytest.raises(wire.PayloadError):
+                wire.decode_frame(_with_payload(data, evil))
+
+    def test_partial_moments_section_rejected(self):
+        """A surplus that is not exactly 8 bytes is trailing garbage, not a
+        MOMENTS section — typed rejection, never a silent mis-decode."""
+        for f in self._frames(4.25):
+            data = wire.encode_frame(f)
+            payload = data[wire.HEADER_BYTES:-4]
+            for cut in (1, 4, 7):
+                with pytest.raises(wire.WireError):
+                    wire.decode_frame(_with_payload(data, payload[:-cut]))
+            with pytest.raises(wire.WireError):
+                wire.decode_frame(_with_payload(data, payload + b"\x00" * 3))
+
+    def test_from_stats_moments_flag(self):
+        from repro.core.sufficient_stats import compute_stats
+
+        rng = np.random.default_rng(17)
+        A = rng.standard_normal((12, 4)).astype(np.float32)
+        b = rng.standard_normal(12).astype(np.float32)
+        s = compute_stats(A, b)
+        legacy = wire.StatsFrame.from_stats(s, client_id="c")
+        carried = wire.StatsFrame.from_stats(s, client_id="c", moments=True)
+        assert legacy.yty is None and carried.yty is not None
+        # The flag is opt-in: the default upload is the byte-identical
+        # pre-moments encoding, one 8-byte section shorter.
+        assert len(wire.encode_frame(carried)) == \
+            len(wire.encode_frame(legacy)) + wire.MOMENTS_SECTION_BYTES
 
 
 class TestNegotiation:
